@@ -1,0 +1,68 @@
+"""Emit the EXPERIMENTS.md §Roofline markdown tables from results/dryrun.
+
+    PYTHONPATH=src python -m benchmarks.make_roofline_table [results/dryrun]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.3f}" if x < 10 else f"{x:.1f}"
+
+
+def load(results_dir: str, mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, f"*__{mesh}.json"))):
+        rows.append(json.load(open(path)))
+    return rows
+
+
+def main() -> None:
+    results_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    single = load(results_dir, "single")
+    multi = {(r["arch"], r["shape"]): r for r in load(results_dir, "multi")}
+
+    print("### Single-pod 16x16 (256 chips) — the roofline table\n")
+    print("| arch | shape | kind | compute | memory | collective | bound | dominant | useful/HLO | roofline |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | — | FAILED: {r.get('error','')[:40]} | | | | | | |")
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {fmt_s(r['compute_s'])} s "
+            f"| {fmt_s(r['memory_s'])} s | {fmt_s(r['collective_s'])} s | {fmt_s(bound)} s "
+            f"| {r['dominant']} | {r['model_flops_fraction']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+
+    print("\n### Multi-pod 2x16x16 (512 chips) — sharding proof + scaling\n")
+    print("| arch | shape | ok | compile | bytes/device (arg+tmp) | collective bytes/dev | bound vs single |")
+    print("|---|---|---|---|---|---|---|")
+    for r in single:
+        key = (r["arch"], r["shape"])
+        m = multi.get(key)
+        if m is None:
+            print(f"| {r['arch']} | {r['shape']} | MISSING | | | | |")
+            continue
+        if not m.get("ok"):
+            print(f"| {m['arch']} | {m['shape']} | FAILED | {m.get('error','')[:40]} | | | |")
+            continue
+        ma = m.get("memory_analysis", {})
+        dev_bytes = (ma.get("argument_bytes") or 0) + (ma.get("temp_bytes") or 0)
+        sb = max(r["compute_s"], r["memory_s"], r["collective_s"]) if r.get("ok") else float("nan")
+        mb = max(m["compute_s"], m["memory_s"], m["collective_s"])
+        ratio = sb / mb if mb else float("nan")
+        print(
+            f"| {m['arch']} | {m['shape']} | ok | {m['compile_s']}s | {dev_bytes/1e9:.1f} GB "
+            f"| {m['collective_bytes_per_device']/1e9:.1f} GB | x{ratio:.2f} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Fig 7a — RDMA bandwidth efficiency: one trainer group sends one shard
+set to one rollout group; latency vs shard size, TensorHub (simulated real
+control plane) against calibrated NCCL / UCX / Ray-object-store models and
+the RDMA-ideal roofline.
+
+Validates: TensorHub moves 50 GB/shard in ~2.2 s (>= 88% of the 25 GB/s
+roofline) and orders TensorHub < NCCL < UCX << object store.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks import baselines
+from repro.transfer.simcluster import SimCluster
+
+GB = 1e9
+#: tensors are 50 MB each (5.1.1); shard size = count x 50 MB
+SHARD_GBS = [1, 5, 10, 25, 50]
+
+
+def tensorhub_latency(shard_gb: float) -> float:
+    """Simulated transfer of one shard. The paper's shard is N x 50 MB
+    tensors; post tiny-tensor compaction the wire moves fewer, larger
+    units, so the simulation uses <=64 units (the per-unit setup latency
+    it drops is ~50 us x N ~ tens of ms, negligible vs seconds)."""
+    cl = SimCluster()
+    n_units = min(int(shard_gb * GB / 50e6), 64)
+    units = [shard_gb * GB / n_units] * n_units
+    tr = cl.add_replica("m", "trainer", 8, unit_bytes=units)
+    ro = cl.add_replica("m", "rollout", 8, unit_bytes=units)
+    tr.open(), ro.open()
+    cl.run()
+    tr.publish(0)
+    cl.run()
+    t0 = cl.env.now
+    ro.replicate("latest")
+    cl.run()
+    return cl.env.now - t0
+
+
+def run() -> List[Dict]:
+    rows = []
+    for gb in SHARD_GBS:
+        nbytes = gb * GB
+        th = tensorhub_latency(gb)
+        nccl = baselines.nccl_transfer_time(nbytes, total_gpus=16)
+        ucx = baselines.ucx_transfer_time(nbytes, total_gpus=16)
+        obj, crashed = baselines.object_store_time(nbytes)
+        ideal = baselines.rdma_ideal_time(nbytes)
+        rows.append(
+            {
+                "shard_gb": gb,
+                "tensorhub_s": round(th, 3),
+                "nccl_s": round(nccl, 3),
+                "ucx_s": round(ucx, 3),
+                "object_store_s": None if crashed else round(obj, 3),
+                "object_store_crashed": crashed,
+                "rdma_ideal_s": round(ideal, 3),
+                "tensorhub_gbps": round(nbytes / th / 1e9, 2),
+                "roofline_frac": round(ideal / th, 3),
+            }
+        )
+    return rows
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    checks = []
+    last = rows[-1]  # 50 GB
+    checks.append(
+        f"50GB in {last['tensorhub_s']}s @ {last['tensorhub_gbps']} GB/s "
+        f"(paper: 2.2s @ 22 GB/s) -> {'OK' if 2.0 <= last['tensorhub_s'] <= 2.5 else 'MISMATCH'}"
+    )
+    checks.append(
+        f">=88% of roofline: {last['roofline_frac']*100:.0f}% "
+        f"-> {'OK' if last['roofline_frac'] >= 0.85 else 'MISMATCH'}"
+    )
+    order = all(
+        r["tensorhub_s"] < r["nccl_s"] < r["ucx_s"]
+        and (r["object_store_s"] is None or r["ucx_s"] < r["object_store_s"])
+        for r in rows
+    )
+    checks.append(f"ordering TH < NCCL < UCX << object-store -> {'OK' if order else 'MISMATCH'}")
+    crash = any(r["object_store_crashed"] for r in rows)
+    checks.append(f"object store crashes beyond 35 GB/shard -> {'OK' if crash else 'MISMATCH'}")
+    return checks
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(r)
+    for c in validate(rows):
+        print("  " + c)
+
+
+if __name__ == "__main__":
+    main()

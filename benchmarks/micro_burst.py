@@ -1,0 +1,85 @@
+"""Fig 7b — scaling with bursts: 1 trainer group, 1..8 rollout groups all
+requesting the same 50 GB/shard version simultaneously; total GPU stall
+with and without pipeline replication vs the RDMA-ideal reference.
+
+Validates: with pipelining, per-group latency stays ~2.2 s independent of
+group count (total stall grows linearly); without it, contention on the
+trainer uplink makes stall grow quadratically.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.transfer.simcluster import SimCluster
+
+GB = 1e9
+GROUPS = [1, 2, 4, 8]
+SHARD_GB = 50
+
+
+def burst_stall(n_groups: int, *, pipeline: bool) -> Dict[str, float]:
+    cl = SimCluster(pipeline_replication=pipeline)
+    units = [SHARD_GB * GB / 64] * 64
+    tr = cl.add_replica("m", "trainer", 8, unit_bytes=units)
+    ros = [cl.add_replica("m", f"ro{i}", 8, unit_bytes=units) for i in range(n_groups)]
+    tr.open()
+    for r in ros:
+        r.open()
+    cl.run()
+    tr.publish(0)
+    cl.run()
+    for r in ros:
+        r.replicate("latest")
+    cl.run()
+    names = [f"ro{i}" for i in range(n_groups)]
+    per = cl.per_worker_stalls(names)
+    return {"total": sum(per), "max": max(per), "mean": sum(per) / len(per)}
+
+
+def run() -> List[Dict]:
+    rows = []
+    for n in GROUPS:
+        with_p = burst_stall(n, pipeline=True)
+        without = burst_stall(n, pipeline=False)
+        ideal = SHARD_GB * GB / 25e9 * n * 8
+        rows.append(
+            {
+                "groups": n,
+                "pipeline_total_stall_s": round(with_p["total"], 1),
+                "pipeline_max_worker_s": round(with_p["max"], 2),
+                "no_pipeline_total_stall_s": round(without["total"], 1),
+                "no_pipeline_max_worker_s": round(without["max"], 2),
+                "rdma_ideal_total_s": round(ideal, 1),
+            }
+        )
+    return rows
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    checks = []
+    # pipeline: max-worker stall ~flat (last/first <= 1.6x)
+    flat = rows[-1]["pipeline_max_worker_s"] / rows[0]["pipeline_max_worker_s"]
+    checks.append(f"pipeline per-group latency flat: x{flat:.2f} at 8 groups "
+                  f"-> {'OK' if flat <= 1.6 else 'MISMATCH'}")
+    # pipeline total near ideal
+    frac = rows[-1]["rdma_ideal_total_s"] / rows[-1]["pipeline_total_stall_s"]
+    checks.append(f"pipeline total within ~90% of RDMA ideal: {frac*100:.0f}% "
+                  f"-> {'OK' if frac >= 0.8 else 'MISMATCH'}")
+    # no-pipeline: super-linear (quadratic-ish) growth of total stall
+    g = (rows[-1]["no_pipeline_total_stall_s"] / rows[0]["no_pipeline_total_stall_s"])
+    checks.append(f"no-pipeline total stall grows x{g:.1f} for 8x groups "
+                  f"(quadratic ~64x) -> {'OK' if g >= 32 else 'MISMATCH'}")
+    return checks
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(r)
+    for c in validate(rows):
+        print("  " + c)
+
+
+if __name__ == "__main__":
+    main()

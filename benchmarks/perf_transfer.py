@@ -1,0 +1,91 @@
+"""Perf iterations on the paper-representative cell: the Fig 9 1T
+weight-transfer workload (768 trainer GPUs -> 256 standalone GPUs, 66 GB
+shards), measured against the RDMA roofline.
+
+Iterations (EXPERIMENTS.md Perf):
+  T0 baseline   — paper semantics: least-loaded scheduling, 64 transfer
+                  units/shard (post tiny-tensor compaction).
+  T1 units=256  — finer pipelining units: each chained reader lags its
+                  source by one unit; smaller units cut the fill latency
+                  of deep replication chains.
+  T2 depth-aware scheduling (beyond-paper) — prefer shallow sources on
+                  refcount ties: builds a balanced tree (depth ~log N)
+                  instead of a chain (depth ~N).
+  T3 = T1 + T2
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.paper_workloads import WORKLOADS
+from repro.transfer.simcluster import SimCluster
+
+W = WORKLOADS["1T"]
+
+
+def one_step_stall(*, units: int, scheduler: str) -> Dict[str, float]:
+    cl = SimCluster()
+    cl.server._scheduler = scheduler  # harness hook
+    unit_bytes = W.unit_bytes(units)
+    trainers = [
+        cl.add_replica("m", f"tr{i}", W.num_shards, unit_bytes=unit_bytes)
+        for i in range(W.num_trainer_replicas)
+    ]
+    rollouts = [
+        cl.add_replica("m", f"ro{i}", W.num_shards, unit_bytes=unit_bytes)
+        for i in range(W.num_standalone_replicas)
+    ]
+    for r in trainers + rollouts:
+        r.open()
+    cl.run()
+    for t in trainers:
+        t.publish(0)
+    cl.run()
+    for r in rollouts:
+        r.replicate("latest")
+    cl.run()
+    names = [f"ro{i}" for i in range(W.num_standalone_replicas)]
+    per = cl.per_worker_stalls(names)
+    ideal = W.shard_bytes / 25e9
+    return {
+        "total_stall_s": sum(per),
+        "mean_s": sum(per) / len(per),
+        "max_s": max(per),
+        "roofline_frac": ideal * len(per) / sum(per),
+    }
+
+
+def run() -> List[Dict]:
+    variants = [
+        ("T0 baseline (units=64, least-loaded)", dict(units=64, scheduler="least_loaded")),
+        ("T1 units=256", dict(units=256, scheduler="least_loaded")),
+        ("T2 depth-aware", dict(units=64, scheduler="depth_aware")),
+        ("T3 units=256 + depth-aware", dict(units=256, scheduler="depth_aware")),
+    ]
+    rows = []
+    for name, kw in variants:
+        r = one_step_stall(**kw)
+        rows.append({"variant": name, **{k: round(v, 3) for k, v in r.items()}})
+    return rows
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    base = rows[0]
+    best = max(rows, key=lambda r: r["roofline_frac"])
+    checks = [
+        f"baseline roofline fraction {base['roofline_frac']:.3f} "
+        f"(paper-faithful; mean latency {base['mean_s']}s vs ideal 2.64s)",
+        f"best variant: {best['variant']} -> {best['roofline_frac']:.3f} "
+        f"({(best['roofline_frac']/base['roofline_frac']-1)*100:+.1f}% vs baseline)",
+    ]
+    return checks
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Roofline table (deliverable g): per (arch x shape), the three terms
+derived from the compiled dry-run artifacts.
+
+Reads the per-cell JSON written by ``repro.launch.dryrun --out
+results/dryrun`` (compiling all 31 live cells inline would take this
+benchmark run hours; the dry-run sweep is its own entry point). Falls back
+to compiling a small representative subset if no results directory exists.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load_rows(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"], "ok": False,
+                         "error": r.get("error", "?")})
+            continue
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "ok": True,
+                "kind": r["kind"],
+                "compute_ms": round(r["compute_s"] * 1e3, 1),
+                "memory_ms": round(r["memory_s"] * 1e3, 1),
+                "collective_ms": round(r["collective_s"] * 1e3, 1),
+                "dominant": r["dominant"],
+                "useful_flops_frac": round(r["model_flops_fraction"], 3),
+                "roofline_frac": round(r["roofline_fraction"], 3),
+            }
+        )
+    return rows
+
+
+def run() -> List[Dict]:
+    rows = load_rows("single")
+    if not rows:
+        print(f"(no dry-run results under {RESULTS_DIR}; run "
+              f"`python -m repro.launch.dryrun --all --mesh both --out {RESULTS_DIR}` first)")
+    return rows
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    ok = [r for r in rows if r.get("ok")]
+    bad = [r for r in rows if not r.get("ok")]
+    checks = [f"{len(ok)} cells analyzed, {len(bad)} failed"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"])
+        best = max(ok, key=lambda r: r["roofline_frac"])
+        checks.append(f"worst roofline fraction: {worst['arch']} x {worst['shape']} = {worst['roofline_frac']}")
+        checks.append(f"best  roofline fraction: {best['arch']} x {best['shape']} = {best['roofline_frac']}")
+    return checks
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(r)
+    for c in validate(rows):
+        print("  " + c)
+
+
+if __name__ == "__main__":
+    main()

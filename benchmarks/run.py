@@ -1,0 +1,63 @@
+"""Benchmark runner: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints, per benchmark, a ``name,metric,value`` CSV block followed by the
+claim-validation lines (paper number vs measured).
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+
+from benchmarks import (
+    cross_dc,
+    elastic,
+    micro_bandwidth,
+    micro_burst,
+    micro_failure,
+    perf_transfer,
+    roofline,
+    standalone,
+)
+
+MODULES = [
+    ("fig7a_bandwidth", micro_bandwidth),
+    ("fig7b_burst", micro_burst),
+    ("fig7c_failure", micro_failure),
+    ("fig9_standalone", standalone),
+    ("fig11_elastic", elastic),
+    ("fig12_cross_dc", cross_dc),
+    ("perf_transfer_iterations", perf_transfer),
+    ("roofline_table", roofline),
+]
+
+
+def main() -> int:
+    failures = 0
+    mismatches = 0
+    for name, mod in MODULES:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            checks = mod.validate(rows)
+        except Exception:  # noqa: BLE001 - keep running remaining figures
+            traceback.print_exc()
+            failures += 1
+            continue
+        for r in rows:
+            items = ",".join(f"{k}={v}" for k, v in r.items())
+            print(f"{name},{items}")
+        for c in checks:
+            print(f"  [check] {c}")
+            if "MISMATCH" in c:
+                mismatches += 1
+        print(f"  ({time.time()-t0:.1f}s)")
+    print(f"\nsummary: {len(MODULES)} benchmarks, {failures} errors, {mismatches} claim mismatches")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""Quickstart: the Table-2 API in one file (paper Fig 4 patterns).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+A trainer publishes weight versions; two rollout groups replicate and
+poll-update them; the retention protocol offloads the last copy when the
+trainer rolls forward before anyone pulled.
+"""
+
+import threading
+
+import numpy as np
+
+from repro.core import ReferenceServer, TensorHubClient
+
+
+def weights(version: float) -> dict:
+    return {
+        "layer0/w": np.full((256, 256), version, np.float32),
+        "layer0/b": np.full((256,), version, np.float32),
+        "head/w": np.full((256, 512), version * 2, np.float32),
+    }
+
+
+def run_group(handles, fn):
+    threads = [threading.Thread(target=fn, args=(h,)) for h in handles]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def main() -> None:
+    server = ReferenceServer()
+    hub = TensorHubClient(server)
+    world = 2  # shards per replica (model parallelism)
+
+    # --- trainer (Fig 4a): publish -> train -> unpublish -> publish ... ---
+    trainer = [
+        hub.open("actor", "trainer-0", world, i, retain="latest") for i in range(world)
+    ]
+    for h in trainer:
+        h.register(weights(0.0))
+    run_group(trainer, lambda h: h.publish(0))
+    print("published v0:", server.list_versions("actor"))
+
+    # --- standalone rollout (Fig 4b): replicate once, then poll update ---
+    rollout = [hub.open("actor", "rollout-0", world, i) for i in range(world)]
+    for h in rollout:
+        h.register({k: np.zeros_like(v) for k, v in weights(0).items()})
+    run_group(rollout, lambda h: h.replicate("latest"))
+    print("rollout got v0; w[0,0] =", rollout[0].store.get("layer0/w")[0, 0])
+
+    # trainer rolls a new version (mutability contract: unpublish first)
+    run_group(trainer, lambda h: h.unpublish())
+    for h in trainer:
+        h.store.register(weights(1.0))  # "training" mutates the buffers
+    run_group(trainer, lambda h: h.publish(1))
+
+    updated = []
+    run_group(rollout, lambda h: updated.append(h.update("latest")))
+    print("update('latest') ->", updated, "; w[0,0] =", rollout[0].store.get("layer0/w")[0, 0])
+
+    # a second rollout is served peer-to-peer (any replica is a source)
+    rollout2 = [hub.open("actor", "rollout-1", world, i) for i in range(world)]
+    for h in rollout2:
+        h.register({k: np.zeros_like(v) for k, v in weights(0).items()})
+    run_group(rollout2, lambda h: h.replicate("latest"))
+    print("rollout-1 replicated; versions:", {v: sorted(r) for v, r in server.list_versions("actor").items()})
+
+    # retention: trainer unpublishes while holding the ONLY copy of v2
+    run_group(trainer, lambda h: h.unpublish())
+    for h in trainer:
+        h.store.register(weights(2.0))
+    run_group(trainer, lambda h: h.publish(2))
+    run_group(trainer, lambda h: h.unpublish())  # nobody pulled v2 yet -> offload
+    print("after unpublish of last copy:", {v: sorted(r) for v, r in server.list_versions("actor").items()})
+    print("server stats:", server.stats)
+
+    for h in trainer + rollout + rollout2:
+        h.close()
+
+
+if __name__ == "__main__":
+    main()

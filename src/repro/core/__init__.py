@@ -1,0 +1,58 @@
+"""Reference-Oriented Storage (ROS) — the paper's core contribution.
+
+Public API:
+
+    from repro.core import ReferenceServer, TensorHubClient
+
+    server = ReferenceServer()
+    hub = TensorHubClient(server)
+    handle = hub.open("actor", "trainer-0", num_shards=W, shard_idx=R,
+                      retain="latest")
+    handle.register(named_tensors)
+    handle.publish(version=0)
+    ...
+"""
+
+from repro.core.client import ShardHandle, TensorHubClient
+from repro.core.errors import (
+    ChecksumError,
+    ConsistencyError,
+    MutabilityViolationError,
+    NotRegisteredError,
+    ShardLayoutError,
+    StaleHandleError,
+    TensorHubError,
+    VersionUnavailableError,
+)
+from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.server import (
+    Assignment,
+    Event,
+    ReferenceServer,
+    UpdateDecision,
+    UnpublishResult,
+    offload_name,
+)
+
+__all__ = [
+    "Assignment",
+    "ChecksumError",
+    "ConsistencyError",
+    "Event",
+    "MutabilityViolationError",
+    "NotRegisteredError",
+    "ReferenceServer",
+    "ShardHandle",
+    "ShardLayoutError",
+    "ShardManifest",
+    "StaleHandleError",
+    "TensorHubClient",
+    "TensorHubError",
+    "TensorMeta",
+    "TransferUnit",
+    "UnpublishResult",
+    "UpdateDecision",
+    "VersionUnavailableError",
+    "WorkerInfo",
+    "offload_name",
+]

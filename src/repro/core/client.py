@@ -1,0 +1,451 @@
+"""TensorHub client library: the Table-2 API (4.2).
+
+``TensorHubClient`` is the per-process endpoint; ``ShardHandle`` is the
+per-shard handle returned by :func:`TensorHubClient.open`. This is the
+*real* (threaded, blocking) implementation used by tests and the RL
+examples; the benchmark harness drives the same server through the
+discrete-event simulator instead (``repro.transfer.simcluster``).
+
+Blocking semantics are layered on the non-blocking server: a
+``threading.Condition`` guards every server call, and the server's watcher
+hook wakes waiters after each state mutation.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, Mapping, Optional
+
+import numpy as np
+
+from repro.core import server as server_lib
+from repro.core.errors import (
+    StaleHandleError,
+    TensorHubError,
+    VersionUnavailableError,
+)
+from repro.core.meta import WorkerInfo
+from repro.core.server import Assignment, ReferenceServer, offload_name
+from repro.transfer.engine import (
+    LocalTransport,
+    TransportError,
+    WorkerRegistry,
+    WorkerStore,
+)
+
+_POLL = 0.02  # condition re-check period (seconds)
+
+
+def dtype_from_str(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registers bfloat16 etc.
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+class TensorHubClient:
+    """Process-wide client endpoint: server + transport + registry."""
+
+    def __init__(
+        self,
+        server: ReferenceServer,
+        *,
+        registry: Optional[WorkerRegistry] = None,
+        transport: Optional[LocalTransport] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.server = server
+        self.registry = registry or WorkerRegistry()
+        self.transport = transport or LocalTransport(self.registry)
+        self.clock = clock
+        self._cv = threading.Condition(threading.RLock())
+        server.add_watcher(self._wake)
+
+    def _wake(self) -> None:
+        # The watcher fires while the server mutation holds our lock (all
+        # server calls go through `self._cv`). Out-of-band mutations (test
+        # harnesses injecting failures) are tolerated: waiters re-poll on
+        # their own timeout.
+        try:
+            self._cv.notify_all()
+        except RuntimeError:
+            pass
+
+    def open(
+        self,
+        model_name: str,
+        replica_name: str,
+        num_shards: int,
+        shard_idx: int,
+        *,
+        retain: Optional[object] = None,
+        datacenter: str = "dc0",
+        node: Optional[str] = None,
+        is_spot: bool = False,
+        offload_seeding: bool = False,
+        with_checksums: bool = True,
+    ) -> "ShardHandle":
+        worker = WorkerInfo(
+            worker_id=f"{replica_name}/shard{shard_idx}",
+            node=node or f"{datacenter}/{replica_name}",
+            datacenter=datacenter,
+            is_spot=is_spot,
+        )
+        with self._cv:
+            self.server.open(
+                model_name,
+                replica_name,
+                num_shards,
+                shard_idx,
+                worker=worker,
+                retain=retain,
+            )
+        return ShardHandle(
+            client=self,
+            model=model_name,
+            replica=replica_name,
+            shard_idx=shard_idx,
+            num_shards=num_shards,
+            worker=worker,
+            offload_seeding=offload_seeding,
+            with_checksums=with_checksums,
+        )
+
+
+class ShardHandle:
+    """Handle for one shard of one replica (Table 2)."""
+
+    def __init__(
+        self,
+        *,
+        client: TensorHubClient,
+        model: str,
+        replica: str,
+        shard_idx: int,
+        num_shards: int,
+        worker: WorkerInfo,
+        offload_seeding: bool,
+        with_checksums: bool,
+    ) -> None:
+        self.client = client
+        self.model = model
+        self.replica = replica
+        self.shard_idx = shard_idx
+        self.num_shards = num_shards
+        self.worker = worker
+        self.offload_seeding = offload_seeding
+        self.with_checksums = with_checksums
+        self.store = WorkerStore(worker.worker_id)
+        self.current_version: Optional[int] = None
+        self._op_seq = 0
+        self._off_op_seq = 1_000_000  # twin namespace, disjoint from main ops
+        self._offload_stores: Dict[int, WorkerStore] = {}
+        self._seed_threads: Dict[int, threading.Thread] = {}
+        self._closed = False
+
+    # -- helpers ---------------------------------------------------------------
+
+    @property
+    def _cv(self) -> threading.Condition:
+        return self.client._cv
+
+    @property
+    def _server(self) -> ReferenceServer:
+        return self.client.server
+
+    def _next_op(self) -> int:
+        op = self._op_seq
+        self._op_seq += 1
+        return op
+
+    def _next_off_op(self) -> int:
+        op = self._off_op_seq
+        self._off_op_seq += 1
+        return op
+
+    # -- Table 2: register / unregister -----------------------------------------
+
+    def register(self, named_tensors: Mapping[str, np.ndarray]) -> None:
+        self.store.register(named_tensors)
+        self.client.registry.add(self.replica, self.shard_idx, self.store)
+        with self._cv:
+            self._server.register(self.model, self.replica, self.shard_idx)
+
+    def unregister(self) -> None:
+        with self._cv:
+            self._server.unregister(self.model, self.replica, self.shard_idx)
+        self.client.registry.remove(self.replica, self.shard_idx)
+        self.store.unregister()
+
+    # -- Table 2: publish / unpublish --------------------------------------------
+
+    def publish(self, version: int) -> None:
+        manifest = self.store.build_manifest(with_checksums=self.with_checksums)
+        op = self._next_op()
+        with self._cv:
+            self._server.publish(
+                self.model, self.replica, self.shard_idx, version, manifest, op_id=op
+            )
+        self.current_version = version
+
+    def unpublish(self) -> None:
+        op = self._next_op()
+        with self._cv:
+            res = self._server.unpublish(
+                self.model, self.replica, self.shard_idx, op_id=op
+            )
+        if res.offload_required:
+            assert res.offload_version is not None
+            self._do_retention_offload(res.offload_version)
+        self._wait_drained()
+        self.current_version = None
+        self.process_events()
+
+    def _do_retention_offload(self, version: int) -> None:
+        """Retention protocol (3.3): copy this shard to host memory and
+        publish the copy before the GPU buffers may be reused."""
+        off_store = WorkerStore(f"{self.worker.worker_id}@offload")
+        self.store.snapshot_to(off_store)
+        self._offload_stores[version] = off_store
+        self.client.registry.add(offload_name(self.replica), self.shard_idx, off_store)
+        manifest = off_store.build_manifest(with_checksums=self.with_checksums)
+        op = self._next_op()
+        with self._cv:
+            self._server.publish_offload(
+                self.model, self.replica, self.shard_idx, version, manifest, op_id=op
+            )
+
+    def _wait_drained(self, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while not self._server.finish_unpublish(self.model, self.replica):
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TensorHubError(f"{self.replica}: drain timed out")
+                self._cv.wait(_POLL)
+
+    # -- Table 2: replicate / update ----------------------------------------------
+
+    def replicate(self, version: object = "latest", *, timeout: Optional[float] = None) -> int:
+        """Materialize ``version`` into the registered tensors; blocks until
+        the version exists. Returns the absolute version fetched."""
+        op = self._next_op()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            assignment = self._server.begin_replicate(
+                self.model, self.replica, self.shard_idx, version, op_id=op
+            )
+            while assignment is None:
+                if deadline is not None and time.monotonic() > deadline:
+                    raise VersionUnavailableError(
+                        f"{self.model} {version!r}: not published within timeout"
+                    )
+                self._cv.wait(_POLL)
+                assignment = self._server.redeem(self.model, self.replica, op_id=op)
+        self._pull(assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
+        self.current_version = assignment.version
+        self.process_events()
+        return assignment.version
+
+    def update(self, version: object = "latest") -> bool:
+        """Atomically switch to a newer version if available (Table 2)."""
+        op = self._next_op()
+        with self._cv:
+            d = self._server.begin_update(
+                self.model,
+                self.replica,
+                self.shard_idx,
+                version,
+                op_id=op,
+                offload_seeding=self.offload_seeding,
+            )
+        if d.seed_started and d.seed_version is not None:
+            self._spawn_seed_pull(d.seed_version)
+        if not d.updated:
+            self.process_events()
+            return False
+        if d.offload_required and d.offload_version is not None:
+            self._do_retention_offload(d.offload_version)
+        self._wait_drained()
+        assert d.assignment is not None
+        self._pull(d.assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
+        self.current_version = d.version
+        self.process_events()
+        return True
+
+    # -- Table 2: list / wait / close ------------------------------------------------
+
+    def list(self) -> Dict[int, set]:
+        with self._cv:
+            return self._server.list_versions(self.model)
+
+    def wait(self, predicate: Callable[[Dict[int, set]], bool], *, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while not predicate(self._server.list_versions(self.model)):
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TensorHubError("wait(): predicate not satisfied within timeout")
+                self._cv.wait(_POLL)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for t in self._seed_threads.values():
+            t.join(timeout=5.0)
+        try:
+            if self.current_version is not None:
+                self.unpublish()
+        except (StaleHandleError, TensorHubError):
+            pass
+        with self._cv:
+            self._server.close(self.model, self.replica, self.shard_idx)
+        self.client.registry.remove(self.replica, self.shard_idx)
+        self.client.registry.remove(offload_name(self.replica), self.shard_idx)
+
+    # -- housekeeping -----------------------------------------------------------------
+
+    def heartbeat(self, now: Optional[float] = None) -> None:
+        with self._cv:
+            self._server.heartbeat(
+                self.model, self.replica, self.shard_idx,
+                self.client.clock() if now is None else now,
+            )
+
+    def process_events(self) -> None:
+        """Drain server events: free released offload buffers (3.3)."""
+        with self._cv:
+            events = self._server.poll_events(self.worker.worker_id)
+        for ev in events:
+            if ev.kind == "offload_release" and ev.version is not None:
+                store = self._offload_stores.pop(ev.version, None)
+                if store is not None:
+                    store.unregister()
+                if not self._offload_stores:
+                    self.client.registry.remove(offload_name(self.replica), self.shard_idx)
+
+    # -- data plane ---------------------------------------------------------------------
+
+    def _wait_manifest(self, version: int):
+        with self._cv:
+            while True:
+                m = self._server.manifest(self.model, version, self.shard_idx)
+                if m is not None:
+                    return m
+                self._cv.wait(_POLL)
+
+    def _pull(
+        self,
+        assignment: Assignment,
+        *,
+        op_id: int,
+        dest_name: str,
+        dest_store: WorkerStore,
+        twin: bool = False,
+    ) -> None:
+        """The replication loop (4.3.3): repeatedly read the source's
+        progress counter, fetch the available prefix of transfer units,
+        advance our own counter; re-route on source failure (4.5).
+
+        ``complete_replicate`` gets its *own* op id, allocated here — the
+        allocation point is the same in every shard's program order (SPMD),
+        so the group op keys stay aligned without ever reusing the begin
+        op's id (whose transaction may still be open on slow shards).
+        """
+        del op_id  # the begin op id; completion uses a fresh one (below)
+        version = assignment.version
+        manifest = self._wait_manifest(version)
+        units = manifest.units
+        source = assignment.source
+        done = 0
+        while done < len(units):
+            # wait for the source to have at least one more unit than us
+            avail = -1
+            with self._cv:
+                while True:
+                    try:
+                        avail = self._server.shard_progress(
+                            self.model, source, version, self.shard_idx
+                        )
+                    except (StaleHandleError, TensorHubError):
+                        avail = -1
+                        break
+                    if avail > done:
+                        break
+                    self._cv.wait(_POLL)
+            if avail < 0:
+                source = self._handle_source_failure(dest_name, source)
+                continue
+            failed = False
+            for i in range(done, avail):
+                try:
+                    self.client.transport.pull_unit(
+                        source, self.shard_idx, units[i], manifest.checksums[i], dest_store
+                    )
+                except TransportError:
+                    source = self._handle_source_failure(dest_name, source)
+                    failed = True
+                    break
+                done += 1
+                with self._cv:
+                    self._server.update_progress(
+                        self.model, dest_name, self.shard_idx, version, done
+                    )
+            if failed:
+                continue
+        complete_op = self._next_off_op() if twin else self._next_op()
+        with self._cv:
+            self._server.complete_replicate(
+                self.model, dest_name, self.shard_idx, version, op_id=complete_op
+            )
+
+    def _handle_source_failure(self, dest_name: str, dead_source: str) -> str:
+        """Report a dead source and wait for the server to re-route us."""
+        with self._cv:
+            self._server.report_transfer_failure(self.model, dest_name, dead_source)
+            while True:
+                new = self._server.get_assignment(self.model, dest_name)
+                if new is not None:
+                    return new.source
+                self._cv.wait(_POLL)
+
+    # -- offload seeding (4.3.4) -----------------------------------------------------------
+
+    def _spawn_seed_pull(self, version: int) -> None:
+        if version in self._seed_threads:
+            return
+        t = threading.Thread(
+            target=self._seed_pull, args=(version,), daemon=True,
+            name=f"{self.worker.worker_id}-seed-v{version}",
+        )
+        self._seed_threads[version] = t
+        t.start()
+
+    def _seed_pull(self, version: int) -> None:
+        """Background cross-DC fetch into a CPU buffer; the accelerator keeps
+        computing and a later update() consumes the completed seed locally."""
+        twin = offload_name(self.replica)
+        manifest = self._wait_manifest(version)
+        buffers = {
+            t.name: np.zeros(t.shape, dtype=dtype_from_str(t.dtype))
+            for t in manifest.tensors
+        }
+        off_store = WorkerStore(f"{self.worker.worker_id}@seed")
+        off_store.register(buffers)
+        self._offload_stores[version] = off_store
+        self.client.registry.add(twin, self.shard_idx, off_store)
+        with self._cv:
+            assignment = None
+            while assignment is None:
+                assignment = self._server.get_assignment(self.model, twin)
+                if assignment is None:
+                    self._cv.wait(_POLL)
+        self._pull(
+            assignment,
+            op_id=self._next_off_op(),
+            dest_name=twin,
+            dest_store=off_store,
+            twin=True,
+        )

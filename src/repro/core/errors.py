@@ -1,0 +1,57 @@
+"""Error types for the Reference-Oriented Storage (ROS) control plane."""
+
+from __future__ import annotations
+
+
+class TensorHubError(Exception):
+    """Base class for all TensorHub errors."""
+
+
+class VersionUnavailableError(TensorHubError):
+    """The requested version has no live replica (and none is retained).
+
+    Per paper (4.5), this is a *graceful* error: under heavy spot churn the
+    last replica of a retained version may vanish; the client is expected to
+    retry on another version ("a new version will be trained and published
+    shortly"), not to crash.
+    """
+
+
+class MutabilityViolationError(TensorHubError):
+    """A worker mutated (or re-published) weights while a publish commitment
+    was outstanding — a violation of the mutability contract (3.2)."""
+
+
+class ConsistencyError(TensorHubError):
+    """Shards of one model-parallel replica issued mismatching requests.
+
+    SPMD shards must execute an identical sequence of control-plane
+    operations; a divergent op kind or argument indicates a framework bug
+    and is surfaced loudly rather than being silently serialized.
+    """
+
+
+class NotRegisteredError(TensorHubError):
+    """publish()/replicate() called before register()."""
+
+
+class ShardLayoutError(TensorHubError):
+    """Source and destination replicas disagree on shard layout.
+
+    ROS transfers shard i -> shard i; resharding must be done by the
+    publisher before publish() (paper 2.1 step 4: weights are resharded
+    and converted to inference-ready format *then* transferred).
+    """
+
+
+class StaleHandleError(TensorHubError):
+    """Operation on a handle whose replica was evicted (failure/preemption)."""
+
+
+class ServerUnavailableError(TensorHubError):
+    """The reference server did not respond; clients fail over to the
+    pre-configured backup (4.5 "Reference Server Failure")."""
+
+
+class ChecksumError(TensorHubError):
+    """End-to-end checksum mismatch after a transfer (4.6)."""

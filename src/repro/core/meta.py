@@ -1,0 +1,140 @@
+"""Shared metadata types for the ROS control plane and the transfer engine.
+
+The reference server never touches weight bytes; it moves only the
+lightweight descriptors defined here (3.1: "The server only operates on
+lightweight references").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: Tensors smaller than this are compacted into contiguous buffers before
+#: registration/transfer (4.3.2 "Tiny-Tensor Optimization").
+TINY_TENSOR_BYTES = 2 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorMeta:
+    """Descriptor of one named weight tensor held by a shard."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str  # numpy dtype string, e.g. "bfloat16", "float32"
+    nbytes: int
+
+    def __post_init__(self) -> None:
+        if self.nbytes < 0:
+            raise ValueError(f"tensor {self.name}: negative nbytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferUnit:
+    """One unit of the data plane: a large tensor or a compacted bucket.
+
+    The per-shard *progress counter* of pipeline replication (4.3.3) counts
+    completed TransferUnits, in the deterministic order below. A partially
+    replicated shard may serve exactly its prefix of units.
+    """
+
+    index: int
+    name: str  # tensor name, or "__compact__/<i>" for a bucket
+    nbytes: int
+    #: member tensor names for a compacted bucket (empty for a plain tensor)
+    members: Tuple[str, ...] = ()
+    #: (name, offset, nbytes) layout of members inside the bucket
+    layout: Tuple[Tuple[str, int, int], ...] = ()
+
+    @property
+    def is_compact(self) -> bool:
+        return bool(self.members)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardManifest:
+    """Everything a reader needs to pull one shard: ordered transfer units
+    plus per-unit checksums. Attached to a publish() and stored (by
+    reference) at the server."""
+
+    tensors: Tuple[TensorMeta, ...]
+    units: Tuple[TransferUnit, ...]
+    checksums: Tuple[int, ...]  # per-unit; 0 when checksums disabled
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(u.nbytes for u in self.units)
+
+    @property
+    def num_units(self) -> int:
+        return len(self.units)
+
+    def validate_against(self, other: "ShardManifest") -> bool:
+        """Shard-layout compatibility: same unit schema (names+sizes)."""
+        if len(self.units) != len(other.units):
+            return False
+        return all(
+            a.name == b.name and a.nbytes == b.nbytes and a.members == b.members
+            for a, b in zip(self.units, other.units)
+        )
+
+
+def build_units(
+    tensors: Sequence[TensorMeta],
+    *,
+    tiny_bytes: int = TINY_TENSOR_BYTES,
+) -> List[TransferUnit]:
+    """Compute the transfer-unit schedule for a shard.
+
+    Large tensors become one unit each (registered directly with the NIC in
+    RDMA-direct mode); tiny tensors are packed into contiguous buckets of up
+    to ``tiny_bytes`` so that registration cost and per-message overhead are
+    amortized. Order is registration order, which both sides share.
+    """
+    units: List[TransferUnit] = []
+    bucket: List[TensorMeta] = []
+    bucket_bytes = 0
+
+    def flush_bucket() -> None:
+        nonlocal bucket, bucket_bytes
+        if not bucket:
+            return
+        layout = []
+        off = 0
+        for t in bucket:
+            layout.append((t.name, off, t.nbytes))
+            off += t.nbytes
+        units.append(
+            TransferUnit(
+                index=len(units),
+                name=f"__compact__/{len(units)}",
+                nbytes=off,
+                members=tuple(t.name for t in bucket),
+                layout=tuple(layout),
+            )
+        )
+        bucket = []
+        bucket_bytes = 0
+
+    for t in tensors:
+        if t.nbytes < tiny_bytes:
+            if bucket_bytes + t.nbytes > tiny_bytes and bucket:
+                flush_bucket()
+            bucket.append(t)
+            bucket_bytes += t.nbytes
+        else:
+            units.append(TransferUnit(index=len(units), name=t.name, nbytes=t.nbytes))
+    flush_bucket()
+    # re-number: buckets were appended with provisional indices
+    return [dataclasses.replace(u, index=i) for i, u in enumerate(units)]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerInfo:
+    """Placement of one shard-owning worker, used for topology-aware
+    scheduling (4.3.1) and NIC affinity."""
+
+    worker_id: str
+    node: str
+    datacenter: str
+    is_spot: bool = False

@@ -1,0 +1,1183 @@
+"""The ROS reference server (3, 4).
+
+The server is the *control plane only*: it tracks which workers hold which
+versions of the model weights and routes read requests to the least-loaded,
+topology-closest source. It never stores or forwards weight bytes.
+
+Design notes
+------------
+* **Deterministic, single-threaded semantics.** Every public method mutates
+  state atomically and returns immediately (no blocking inside the server).
+  Blocking client semantics (replicate waits for a version, unpublish drains)
+  are built from the pending-ticket / event machinery here. Concurrency
+  wrappers (threads in the real client, virtual time in the simulator) live
+  outside. This is what makes FoundationDB-style deterministic interleaving
+  tests possible (4.6).
+* **Transactions per model-parallel group** (4.4): each replica's shards
+  issue an identical op sequence (SPMD); ops carry ``op_id``. The first
+  shard's arrival executes the op on behalf of the group and caches the
+  result; later shards consume the cached result, so the whole group
+  observes one consistent snapshot regardless of interleaving.
+* **Soft state** (4.5): everything here can be lost; a backup server is
+  repopulated by the next round of publishes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core import versions as version_lib
+from repro.core.errors import (
+    ConsistencyError,
+    MutabilityViolationError,
+    ShardLayoutError,
+    StaleHandleError,
+    TensorHubError,
+    VersionUnavailableError,
+)
+from repro.core.meta import ShardManifest, WorkerInfo
+
+logger = logging.getLogger(__name__)
+
+# ---------------------------------------------------------------------------
+# Replica/version state
+# ---------------------------------------------------------------------------
+
+IN_PROGRESS = "in_progress"
+PUBLISHED = "published"
+DRAINING = "draining"
+
+KIND_GPU = "gpu"
+KIND_OFFLOAD = "offload"
+
+
+@dataclasses.dataclass
+class ReplicaVersionState:
+    """One replica's relationship to one version."""
+
+    replica: str
+    version: int
+    kind: str = KIND_GPU
+    status: str = PUBLISHED
+    #: per-shard count of transfer units received (pipeline progress, 4.3.3)
+    progress: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: replication sessions this replica currently serves (load balancing)
+    refcount: int = 0
+    #: for in-progress replicas: the source replica currently assigned
+    source: Optional[str] = None
+    #: True while this replica fetches over the slow cross-DC link (4.3.4)
+    seeding: bool = False
+    #: pipeline-chain depth from the original publisher (0 = published
+    #: directly). Used by the beyond-paper "depth_aware" scheduler: a
+    #: shallow replication tree cuts the pipeline fill latency that a pure
+    #: least-loaded policy (which degenerates into a chain) pays.
+    depth: int = 0
+    #: offload replica created for *cross-DC seeding* (released once a local
+    #: GPU replica has consumed it), vs a retention offload (released once it
+    #: is no longer the last copy / no longer retained)
+    seed_cache: bool = False
+    #: shards that called complete_replicate
+    completed_shards: Set[int] = dataclasses.field(default_factory=set)
+
+    def is_source_candidate(self) -> bool:
+        return self.status in (PUBLISHED, IN_PROGRESS)
+
+
+@dataclasses.dataclass
+class ReplicaInfo:
+    """An open replica (model-parallel group) and its placement."""
+
+    name: str
+    num_shards: int
+    datacenter: str
+    is_spot: bool
+    kind: str = KIND_GPU
+    #: retention lag: keep versions [latest-retain .. latest] available (3.3)
+    retain: Optional[int] = None
+    workers: Dict[int, WorkerInfo] = dataclasses.field(default_factory=dict)
+    open_shards: Set[int] = dataclasses.field(default_factory=set)
+    last_heartbeat: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: version currently held (published/in-progress), None if unpublished
+    current_version: Optional[int] = None
+    #: old versions awaiting drain (refcount->0) and/or offload completion;
+    #: maps version -> offload_pending
+    draining: Dict[int, bool] = dataclasses.field(default_factory=dict)
+    registered: Set[int] = dataclasses.field(default_factory=set)
+    failed: bool = False
+
+
+@dataclasses.dataclass
+class _Txn:
+    op: str
+    args_repr: str
+    result: Any
+    arrived: Set[int]
+    on_last: Optional[Callable[[], None]] = None
+
+
+@dataclasses.dataclass
+class _PendingReplicate:
+    """A replicate() group parked until its version spec resolves."""
+
+    replica: str
+    op_id: int
+    spec: version_lib.VersionSpec
+    assignment: Optional["Assignment"] = None
+
+
+@dataclasses.dataclass
+class ModelState:
+    name: str
+    num_shards: Optional[int] = None
+    latest: Optional[int] = None
+    replicas: Dict[str, ReplicaInfo] = dataclasses.field(default_factory=dict)
+    #: version -> replica name -> state
+    versions: Dict[int, Dict[str, ReplicaVersionState]] = dataclasses.field(
+        default_factory=dict
+    )
+    #: canonical per-shard manifests per version (set by first publisher)
+    manifests: Dict[int, Dict[int, ShardManifest]] = dataclasses.field(
+        default_factory=dict
+    )
+    txns: Dict[Tuple[str, int], _Txn] = dataclasses.field(default_factory=dict)
+    pending: List[_PendingReplicate] = dataclasses.field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# Results returned to clients
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """Where a shard should pull its data from."""
+
+    version: int
+    source: str
+    source_kind: str
+    transport: str  # "rdma" | "tcp"
+    seeding: bool = False  # dest becomes its DC's seeding replica
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishResult:
+    version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class UnpublishResult:
+    #: client must first offload its shard to CPU and publish_offload (3.3)
+    offload_required: bool
+    offload_version: Optional[int] = None
+    #: True once the replica is hidden and drained; if False the client must
+    #: poll wait_drained() before mutating buffers (3.2 mutability contract)
+    drained: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateDecision:
+    updated: bool
+    reason: str = ""
+    version: Optional[int] = None
+    assignment: Optional[Assignment] = None
+    #: retention: offload the *current* version before reusing buffers
+    offload_required: bool = False
+    offload_version: Optional[int] = None
+    drained: bool = True
+    #: offload seeding (4.3.4): this caller must run the background fetch
+    seed_started: bool = False
+    seed_version: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    kind: str  # "offload_release" | "evicted"
+    model: str
+    replica: str
+    version: Optional[int] = None
+    reason: str = ""
+
+
+class ReferenceServer:
+    """Centralized reference server. See module docstring."""
+
+    def __init__(
+        self,
+        *,
+        heartbeat_timeout: Optional[float] = None,
+        pipeline_replication: bool = True,
+        smart_skipping: bool = True,
+        scheduler: str = "least_loaded",  # paper 4.3.1 | "depth_aware" (beyond-paper)
+    ) -> None:
+        self._models: Dict[str, ModelState] = {}
+        self._heartbeat_timeout = heartbeat_timeout
+        self._pipeline = pipeline_replication
+        self._smart_skipping = smart_skipping
+        self._scheduler = scheduler
+        self._events: Dict[str, List[Event]] = {}
+        self._watchers: List[Callable[[], None]] = []
+        self._seq = 0
+        self.stats: Dict[str, int] = {
+            "publishes": 0,
+            "replications_started": 0,
+            "replications_completed": 0,
+            "offloads": 0,
+            "offload_releases": 0,
+            "reassignments": 0,
+            "evictions": 0,
+            "smart_skips": 0,
+        }
+
+    # -- notification plumbing ------------------------------------------------
+
+    def add_watcher(self, cb: Callable[[], None]) -> None:
+        """cb() fires after every state mutation (used to wake waiters)."""
+        self._watchers.append(cb)
+
+    @property
+    def seq(self) -> int:
+        return self._seq
+
+    def _bump(self) -> None:
+        self._seq += 1
+        for cb in self._watchers:
+            cb()
+
+    def _emit(self, worker_id: str, ev: Event) -> None:
+        self._events.setdefault(worker_id, []).append(ev)
+
+    def poll_events(self, worker_id: str) -> List[Event]:
+        return self._events.pop(worker_id, [])
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def open(
+        self,
+        model: str,
+        replica: str,
+        num_shards: int,
+        shard_idx: int,
+        *,
+        worker: WorkerInfo,
+        retain: Optional[version_lib.VersionSpec] = None,
+    ) -> None:
+        st = self._models.setdefault(model, ModelState(name=model))
+        if st.num_shards is None:
+            st.num_shards = num_shards
+        elif st.num_shards != num_shards:
+            raise ShardLayoutError(
+                f"model {model!r} has {st.num_shards} shards per replica; "
+                f"replica {replica!r} opened with {num_shards}"
+            )
+        info = st.replicas.get(replica)
+        if info is None or info.failed:
+            retain_lag = (
+                None if retain is None else version_lib.parse_relative(str(retain))
+                if isinstance(retain, str)
+                else int(retain)
+            )
+            info = ReplicaInfo(
+                name=replica,
+                num_shards=num_shards,
+                datacenter=worker.datacenter,
+                is_spot=worker.is_spot,
+                retain=retain_lag,
+            )
+            st.replicas[replica] = info
+        if worker.datacenter != info.datacenter:
+            raise ShardLayoutError(
+                f"replica {replica!r} spans datacenters "
+                f"({info.datacenter} vs {worker.datacenter})"
+            )
+        if shard_idx in info.open_shards:
+            raise ConsistencyError(f"{replica}/shard{shard_idx} opened twice")
+        info.workers[shard_idx] = worker
+        info.open_shards.add(shard_idx)
+        info.last_heartbeat[shard_idx] = 0.0
+        self._bump()
+
+    def register(self, model: str, replica: str, shard_idx: int) -> None:
+        info = self._replica(model, replica)
+        info.registered.add(shard_idx)
+        self._bump()
+
+    def unregister(self, model: str, replica: str, shard_idx: int) -> None:
+        info = self._replica(model, replica)
+        if info.current_version is not None:
+            raise MutabilityViolationError(
+                f"{replica}: unregister while version "
+                f"{info.current_version} is still published"
+            )
+        info.registered.discard(shard_idx)
+        self._bump()
+
+    def close(self, model: str, replica: str, shard_idx: int) -> None:
+        st = self._model(model)
+        info = st.replicas.get(replica)
+        if info is None:
+            return
+        info.open_shards.discard(shard_idx)
+        if not info.open_shards:
+            self._remove_replica(st, replica, reason="closed")
+        self._bump()
+
+    # -- heartbeats / failure detection (4.5) ----------------------------------
+
+    def heartbeat(self, model: str, replica: str, shard_idx: int, now: float) -> None:
+        st = self._models.get(model)
+        if st is None:
+            return
+        info = st.replicas.get(replica)
+        if info is None or info.failed:
+            raise StaleHandleError(f"{replica} was evicted")
+        info.last_heartbeat[shard_idx] = now
+
+    def tick(self, now: float) -> List[str]:
+        """Expire heartbeats; returns names of replicas evicted this tick."""
+        if self._heartbeat_timeout is None:
+            return []
+        evicted = []
+        for st in self._models.values():
+            for name, info in list(st.replicas.items()):
+                if info.failed or not info.open_shards:
+                    continue
+                stale = any(
+                    now - info.last_heartbeat.get(s, 0.0) > self._heartbeat_timeout
+                    for s in info.open_shards
+                )
+                if stale:
+                    self._fail_replica(st, name, reason="heartbeat timeout")
+                    evicted.append(name)
+        if evicted:
+            self._bump()
+        return evicted
+
+    def fail_replica(self, model: str, replica: str, reason: str = "injected") -> None:
+        """Administrative/forced eviction (spot preemption, tests)."""
+        st = self._model(model)
+        if replica in st.replicas:
+            self._fail_replica(st, replica, reason=reason)
+            self._bump()
+
+    def report_transfer_failure(
+        self, model: str, dest_replica: str, source_replica: str
+    ) -> None:
+        """A reader detected its source died mid-transfer (4.5): mark the
+        source failed and reassign; the reader resumes from its progress."""
+        st = self._model(model)
+        if source_replica in st.replicas and not st.replicas[source_replica].failed:
+            self._fail_replica(st, source_replica, reason="reported by reader")
+        self._reassign(st, dest_replica)
+        self._bump()
+
+    def get_assignment(self, model: str, replica: str) -> Optional[Assignment]:
+        """Current source assignment for an in-progress replica (may have
+        been re-routed after a failure). Works for GPU replicas and offload
+        seeding twins alike."""
+        st = self._model(model)
+        info = st.replicas.get(replica)
+        if info is None or info.failed:
+            raise StaleHandleError(f"{replica} was evicted")
+        for vmap in st.versions.values():
+            rv = vmap.get(replica)
+            if rv is None or rv.status != IN_PROGRESS or rv.source is None:
+                continue
+            src_state = vmap.get(rv.source)
+            if src_state is None:
+                return None  # source died; awaiting _reassign
+            return self._make_assignment(st, rv.version, src_state, dest=info)
+        return None
+
+    # -- write path -----------------------------------------------------------
+
+    def publish(
+        self,
+        model: str,
+        replica: str,
+        shard_idx: int,
+        version: int,
+        manifest: ShardManifest,
+        *,
+        op_id: int,
+    ) -> PublishResult:
+        st = self._model(model)
+        info = self._replica(model, replica)
+        if shard_idx not in info.registered:
+            raise MutabilityViolationError(
+                f"{replica}/shard{shard_idx}: publish before register"
+            )
+
+        def on_first() -> PublishResult:
+            if info.current_version is not None:
+                raise MutabilityViolationError(
+                    f"{replica}: publish({version}) while version "
+                    f"{info.current_version} is still published; unpublish first"
+                )
+            self._install_replica_version(
+                st, info, version, status=PUBLISHED, kind=info.kind
+            )
+            self.stats["publishes"] += 1
+            self._advance_latest(st, version)
+            return PublishResult(version=version)
+
+        res = self._group_op(
+            st, info, shard_idx, op_id, "publish", repr(version), on_first
+        )
+        # per-shard manifest registration (data-plane visibility)
+        self._set_manifest(st, version, shard_idx, manifest)
+        rv = st.versions[version][replica]
+        rv.progress[shard_idx] = manifest.num_units
+        self._service_pending(st)
+        self._bump()
+        return res
+
+    def publish_offload(
+        self,
+        model: str,
+        replica: str,
+        shard_idx: int,
+        version: int,
+        manifest: ShardManifest,
+        *,
+        op_id: int,
+    ) -> PublishResult:
+        """Publish the CPU offload copy created by the retention protocol or
+        by offload seeding (3.3, 4.3.4)."""
+        st = self._model(model)
+        info = self._replica(model, replica)
+        off_name = offload_name(replica)
+
+        def on_first() -> PublishResult:
+            offinfo = st.replicas.get(off_name)
+            if offinfo is None:
+                offinfo = ReplicaInfo(
+                    name=off_name,
+                    num_shards=info.num_shards,
+                    datacenter=info.datacenter,
+                    is_spot=info.is_spot,
+                    kind=KIND_OFFLOAD,
+                    workers=dict(info.workers),
+                    open_shards=set(info.open_shards),
+                )
+                st.replicas[off_name] = offinfo
+            self._install_replica_version(
+                st, offinfo, version, status=PUBLISHED, kind=KIND_OFFLOAD
+            )
+            self.stats["offloads"] += 1
+            return PublishResult(version=version)
+
+        res = self._group_op(
+            st, info, shard_idx, op_id, "publish_offload", repr(version), on_first
+        )
+        self._set_manifest(st, version, shard_idx, manifest)
+        st.versions[version][off_name].progress[shard_idx] = manifest.num_units
+        if info.draining.get(version):
+            info.draining[version] = False  # retention satisfied by the offload copy
+        self._service_pending(st)
+        self._bump()
+        return res
+
+    def unpublish(
+        self, model: str, replica: str, shard_idx: int, *, op_id: int
+    ) -> UnpublishResult:
+        st = self._model(model)
+        info = self._replica(model, replica)
+
+        def on_first() -> UnpublishResult:
+            return self._begin_unpublish(st, info)
+
+        res = self._group_op(
+            st, info, shard_idx, op_id, "unpublish", "", on_first
+        )
+        self._bump()
+        return res
+
+    def finish_unpublish(self, model: str, replica: str) -> bool:
+        """Poll step after unpublish: returns True once every draining
+        version of this replica has (a) zero in-flight readers and (b) its
+        required offload published. Only then may the client reuse the
+        weight buffers (3.2 mutability contract)."""
+        st = self._model(model)
+        info = self._replica(model, replica)
+        for v in list(info.draining.keys()):
+            offload_pending = info.draining[v]
+            rv = st.versions.get(v, {}).get(replica)
+            if rv is None:
+                if not offload_pending:
+                    del info.draining[v]
+                continue
+            if rv.refcount == 0 and not offload_pending:
+                self._drop_replica_version(st, replica, v)
+                del info.draining[v]
+        done = not info.draining
+        if done:
+            self._bump()
+        return done
+
+    # -- read path ------------------------------------------------------------
+
+    def begin_replicate(
+        self,
+        model: str,
+        replica: str,
+        shard_idx: int,
+        spec: version_lib.VersionSpec,
+        *,
+        op_id: int,
+    ) -> Optional[Assignment]:
+        """Start (or park) a blocking replicate(). Returns the group's
+        Assignment, or None if the version does not exist yet — in which
+        case the group is parked and must poll :meth:`redeem`."""
+        st = self._model(model)
+        info = self._replica(model, replica)
+
+        def on_first() -> Optional[Assignment]:
+            if info.current_version is not None:
+                raise MutabilityViolationError(
+                    f"{replica}: replicate while holding version "
+                    f"{info.current_version}; use update() or unpublish first"
+                )
+            v = version_lib.resolve(spec, st.latest)
+            if v is not None and self._find_source(st, v, info) is not None:
+                return self._assign(st, info, v)
+            pend = _PendingReplicate(replica=replica, op_id=op_id, spec=spec)
+            st.pending.append(pend)
+            return None
+
+        res = self._group_op(
+            st, info, shard_idx, op_id, "replicate", repr(spec), on_first
+        )
+        self._bump()
+        return res
+
+    def redeem(self, model: str, replica: str, *, op_id: int) -> Optional[Assignment]:
+        """Check whether a parked replicate() has been assigned."""
+        st = self._model(model)
+        info = st.replicas.get(replica)
+        if info is None or info.failed:
+            raise StaleHandleError(f"{replica} was evicted")
+        for p in st.pending:
+            if p.replica == replica and p.op_id == op_id:
+                return p.assignment  # still parked (None) — keep waiting
+        # no longer parked: assignment was delivered through txn state
+        txn = st.txns.get((replica, op_id))
+        if txn is not None and isinstance(txn.result, Assignment):
+            return txn.result
+        cur = self._current_state(st, replica)
+        if cur is not None and cur.status == IN_PROGRESS and cur.source:
+            src = st.versions[cur.version].get(cur.source)
+            if src is not None:
+                return self._make_assignment(st, cur.version, src, dest=info)
+        return None
+
+    def begin_update(
+        self,
+        model: str,
+        replica: str,
+        shard_idx: int,
+        spec: version_lib.VersionSpec,
+        *,
+        op_id: int,
+        offload_seeding: bool = False,
+    ) -> UpdateDecision:
+        """Atomic check-and-transition to a newer version (Table 2 update)."""
+        st = self._model(model)
+        info = self._replica(model, replica)
+
+        def on_first() -> UpdateDecision:
+            v = version_lib.resolve(spec, st.latest)
+            if v is None:
+                return UpdateDecision(updated=False, reason="no such version")
+            if info.current_version == v:
+                return UpdateDecision(updated=False, reason="already current")
+            src = self._find_source(st, v, info)
+            if src is None:
+                return UpdateDecision(updated=False, reason="no live source")
+            # Smart skipping (4.3.4): if the only local path to v is a replica
+            # still seeding over TCP, treat v as temporarily unavailable.
+            if self._smart_skipping and self._only_seeding_sources(st, v, info):
+                self.stats["smart_skips"] += 1
+                started = offload_seeding and self._ensure_offload_seed(st, v, info)
+                return UpdateDecision(
+                    updated=False,
+                    reason="seeding in progress",
+                    seed_started=started,
+                    seed_version=v if started else None,
+                )
+            if (
+                offload_seeding
+                and src.kind != KIND_OFFLOAD
+                and self._cross_dc(st, src, info)
+            ):
+                # No local source at all: seed through a CPU buffer in the
+                # background instead of stalling the accelerator (4.3.4).
+                started = self._ensure_offload_seed(st, v, info)
+                return UpdateDecision(
+                    updated=False,
+                    reason="offload seeding started"
+                    if started
+                    else "offload seeding in progress",
+                    seed_started=started,
+                    seed_version=v if started else None,
+                )
+            # commit: unpublish current (retention-aware), then assign.
+            unpub = UnpublishResult(offload_required=False)
+            if info.current_version is not None:
+                unpub = self._begin_unpublish(st, info)
+            assignment = self._assign(st, info, v)
+            return UpdateDecision(
+                updated=True,
+                version=v,
+                assignment=assignment,
+                offload_required=unpub.offload_required,
+                offload_version=unpub.offload_version,
+                drained=unpub.drained,
+            )
+
+        res = self._group_op(
+            st, info, shard_idx, op_id, "update", repr(spec), on_first
+        )
+        self._bump()
+        return res
+
+    def source_progress(self, model: str, source_replica: str, version: int) -> int:
+        """Min over shards of the source's progress counter. Readers poll
+        this (in the real system it is a one-sided read on the source)."""
+        st = self._model(model)
+        vmap = st.versions.get(version, {})
+        rv = vmap.get(source_replica)
+        if rv is None:
+            raise StaleHandleError(f"source {source_replica} no longer holds v{version}")
+        if not rv.progress:
+            return 0
+        return min(rv.progress.values())
+
+    def shard_progress(self, model: str, source_replica: str, version: int, shard_idx: int) -> int:
+        st = self._model(model)
+        rv = st.versions.get(version, {}).get(source_replica)
+        if rv is None:
+            raise StaleHandleError(f"source {source_replica} no longer holds v{version}")
+        return rv.progress.get(shard_idx, 0)
+
+    def update_progress(
+        self, model: str, replica: str, shard_idx: int, version: int, progress: int
+    ) -> None:
+        st = self._model(model)
+        rv = st.versions.get(version, {}).get(replica)
+        if rv is None:
+            raise StaleHandleError(f"{replica} no longer replicating v{version}")
+        rv.progress[shard_idx] = max(rv.progress.get(shard_idx, 0), progress)
+        self._bump()
+
+    def complete_replicate(
+        self, model: str, replica: str, shard_idx: int, version: int, *, op_id: int
+    ) -> None:
+        st = self._model(model)
+        info = self._replica(model, replica)
+        rv = st.versions.get(version, {}).get(replica)
+        if rv is None:
+            raise StaleHandleError(f"{replica} lost its in-progress state for v{version}")
+        rv.completed_shards.add(shard_idx)
+
+        def on_first() -> None:
+            return None
+
+        def on_last() -> None:
+            rv.status = PUBLISHED
+            rv.seeding = False
+            if rv.source is not None:
+                src = st.versions.get(version, {}).get(rv.source)
+                if src is not None and src.refcount > 0:
+                    src.refcount -= 1
+                rv.source = None
+            self.stats["replications_completed"] += 1
+            self._maybe_release_offloads(st, version)
+            self._service_pending(st)
+
+        self._group_op(
+            st, info, shard_idx, op_id, "complete", repr(version), on_first, on_last
+        )
+        self._bump()
+
+    # -- queries (Table 2: list / wait) ----------------------------------------
+
+    def list_versions(self, model: str) -> Dict[int, Set[str]]:
+        st = self._models.get(model)
+        if st is None:
+            return {}
+        out: Dict[int, Set[str]] = {}
+        for v, vmap in st.versions.items():
+            names = {
+                r.replica
+                for r in vmap.values()
+                if r.status == PUBLISHED or (r.status == IN_PROGRESS)
+            }
+            if names:
+                out[v] = names
+        return out
+
+    def latest(self, model: str) -> Optional[int]:
+        st = self._models.get(model)
+        return None if st is None else st.latest
+
+    def num_shards(self, model: str) -> Optional[int]:
+        st = self._models.get(model)
+        return None if st is None else st.num_shards
+
+    def manifest(self, model: str, version: int, shard_idx: int) -> Optional[ShardManifest]:
+        st = self._model(model)
+        return st.manifests.get(version, {}).get(shard_idx)
+
+    def replica_datacenter(self, model: str, replica: str) -> str:
+        return self._replica(model, replica).datacenter
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _model(self, model: str) -> ModelState:
+        st = self._models.get(model)
+        if st is None:
+            raise TensorHubError(f"unknown model {model!r}")
+        return st
+
+    def _replica(self, model: str, replica: str) -> ReplicaInfo:
+        st = self._model(model)
+        info = st.replicas.get(replica)
+        if info is None:
+            raise TensorHubError(f"unknown replica {replica!r}")
+        if info.failed:
+            raise StaleHandleError(f"{replica} was evicted")
+        return info
+
+    def _group_op(
+        self,
+        st: ModelState,
+        info: ReplicaInfo,
+        shard_idx: int,
+        op_id: int,
+        op: str,
+        args_repr: str,
+        on_first: Callable[[], Any],
+        on_last: Optional[Callable[[], None]] = None,
+    ) -> Any:
+        """Transactional group op (4.4). First arrival executes; all shards
+        consume the same cached result; optional on_last runs when the whole
+        group arrived."""
+        key = (info.name, op_id)
+        txn = st.txns.get(key)
+        if txn is None:
+            result = on_first()
+            txn = _Txn(
+                op=op, args_repr=args_repr, result=result, arrived=set(), on_last=on_last
+            )
+            st.txns[key] = txn
+        else:
+            if txn.op != op or txn.args_repr != args_repr:
+                raise ConsistencyError(
+                    f"{info.name} op#{op_id}: shard{shard_idx} issued "
+                    f"{op}({args_repr}) but group ran {txn.op}({txn.args_repr})"
+                )
+        if shard_idx in txn.arrived:
+            raise ConsistencyError(
+                f"{info.name} op#{op_id}: shard{shard_idx} arrived twice"
+            )
+        txn.arrived.add(shard_idx)
+        if len(txn.arrived) == info.num_shards:
+            if txn.on_last is not None:
+                txn.on_last()
+            # keep completed replicate txns briefly? no: drop.
+            del st.txns[key]
+        if isinstance(txn.result, TensorHubError):
+            raise txn.result
+        return txn.result
+
+    # -- publish/unpublish helpers ---------------------------------------------
+
+    def _install_replica_version(
+        self,
+        st: ModelState,
+        info: ReplicaInfo,
+        version: int,
+        *,
+        status: str,
+        kind: str,
+        source: Optional[str] = None,
+        seeding: bool = False,
+    ) -> ReplicaVersionState:
+        if kind == KIND_GPU:
+            if info.current_version is not None:
+                raise MutabilityViolationError(
+                    f"{info.name} already holds v{info.current_version}"
+                )
+            info.current_version = version
+        rv = ReplicaVersionState(
+            replica=info.name,
+            version=version,
+            kind=kind,
+            status=status,
+            source=source,
+            seeding=seeding,
+        )
+        st.versions.setdefault(version, {})[info.name] = rv
+        return rv
+
+    def _advance_latest(self, st: ModelState, version: int) -> None:
+        if st.latest is None or version > st.latest:
+            st.latest = version
+            # A new latest shifts every retain window: offload replicas pinned
+            # only by retention may now be released (3.3).
+            for v in list(st.versions.keys()):
+                self._maybe_release_offloads(st, v)
+            self._gc_versions(st)
+
+    def _retained_versions(self, st: ModelState) -> Set[int]:
+        if st.latest is None:
+            return set()
+        out: Set[int] = set()
+        for info in st.replicas.values():
+            if info.failed or info.retain is None:
+                continue
+            for k in range(info.retain + 1):
+                v = st.latest - k
+                if v >= 0:
+                    out.add(v)
+        return out
+
+    def _live_copies(self, st: ModelState, version: int, *, exclude: str) -> int:
+        """Replicas (any kind) that can keep the version alive; spot-hosted
+        replicas do not count toward retention (4.5)."""
+        n = 0
+        for rv in st.versions.get(version, {}).values():
+            if rv.replica == exclude or rv.status != PUBLISHED:
+                continue
+            if st.replicas[rv.replica].is_spot:
+                continue
+            n += 1
+        return n
+
+    def _begin_unpublish(self, st: ModelState, info: ReplicaInfo) -> UnpublishResult:
+        v = info.current_version
+        if v is None:
+            raise MutabilityViolationError(f"{info.name}: unpublish with nothing published")
+        rv = st.versions[v][info.name]
+        offload_required = (
+            v in self._retained_versions(st)
+            and not info.is_spot
+            and self._live_copies(st, v, exclude=info.name) == 0
+        )
+        # hide from the scheduler immediately; mutation must wait for drain
+        rv.status = DRAINING
+        info.current_version = None
+        if rv.refcount == 0 and not offload_required:
+            self._drop_replica_version(st, info.name, v)
+            return UnpublishResult(offload_required=False, drained=True)
+        # If an offload is required the client performs it *before* reusing
+        # buffers; the GPU entry is dropped after offload + drain.
+        info.draining[v] = offload_required
+        return UnpublishResult(
+            offload_required=offload_required,
+            offload_version=v if offload_required else None,
+            drained=False,
+        )
+
+    def _drop_replica_version(self, st: ModelState, replica: str, version: int) -> None:
+        vmap = st.versions.get(version)
+        if not vmap:
+            return
+        rv = vmap.pop(replica, None)
+        if rv is not None and rv.source is not None:
+            src = vmap.get(rv.source)
+            if src is not None and src.refcount > 0:
+                src.refcount -= 1
+        if not vmap:
+            del st.versions[version]
+            st.manifests.pop(version, None)
+        self._gc_versions(st)
+
+    def _gc_versions(self, st: ModelState) -> None:
+        for v in list(st.versions.keys()):
+            if not st.versions[v]:
+                del st.versions[v]
+                st.manifests.pop(v, None)
+
+    def _maybe_release_offloads(self, st: ModelState, version: int) -> None:
+        """Release offload replicas that outlived their purpose (3.3, 4.3.4):
+
+        * retention offloads — once no longer the last copy, or no longer
+          retained;
+        * seed caches — once a same-DC GPU replica holds the version (it has
+          been consumed locally), or a newer version superseded it.
+        """
+        vmap = st.versions.get(version)
+        if not vmap:
+            return
+        retained = self._retained_versions(st)
+        for name, rv in list(vmap.items()):
+            if rv.kind != KIND_OFFLOAD or rv.status != PUBLISHED:
+                continue
+            if rv.refcount > 0:
+                continue
+            info = st.replicas.get(name)
+            if info is None:
+                continue
+            if rv.seed_cache:
+                consumed = any(
+                    o.kind == KIND_GPU
+                    and o.status == PUBLISHED
+                    and st.replicas[o.replica].datacenter == info.datacenter
+                    for o in vmap.values()
+                )
+                superseded = st.latest is not None and version < st.latest
+                release = consumed or superseded
+            else:
+                others = self._live_copies(st, version, exclude=name)
+                release = version not in retained or others > 0
+            if release:
+                self._drop_replica_version(st, name, version)
+                self.stats["offload_releases"] += 1
+                for w in info.workers.values():
+                    self._emit(
+                        w.worker_id,
+                        Event(
+                            kind="offload_release",
+                            model=st.name,
+                            replica=name,
+                            version=version,
+                        ),
+                    )
+
+    def _set_manifest(
+        self, st: ModelState, version: int, shard_idx: int, manifest: ShardManifest
+    ) -> None:
+        shard_map = st.manifests.setdefault(version, {})
+        prev = shard_map.get(shard_idx)
+        if prev is not None and not prev.validate_against(manifest):
+            raise ShardLayoutError(
+                f"shard {shard_idx} of v{version}: manifest mismatch with the "
+                "canonical layout (resharding must happen before publish)"
+            )
+        if prev is None:
+            shard_map[shard_idx] = manifest
+
+    # -- scheduling (4.3.1) -----------------------------------------------------
+
+    def _source_candidates(
+        self, st: ModelState, version: int, dest: ReplicaInfo
+    ) -> List[ReplicaVersionState]:
+        out = []
+        for rv in st.versions.get(version, {}).values():
+            if rv.replica == dest.name:
+                continue
+            if not rv.is_source_candidate():
+                continue
+            if rv.status == IN_PROGRESS and not self._pipeline:
+                continue
+            info = st.replicas.get(rv.replica)
+            if info is None or info.failed:
+                continue
+            out.append(rv)
+        return out
+
+    def _find_source(
+        self, st: ModelState, version: int, dest: ReplicaInfo
+    ) -> Optional[ReplicaVersionState]:
+        cands = self._source_candidates(st, version, dest)
+        if not cands:
+            return None
+        local = [c for c in cands if st.replicas[c.replica].datacenter == dest.datacenter]
+        pool = local or cands
+        if self._scheduler == "depth_aware":
+            # prefer shallow sources, then least-loaded: builds a balanced
+            # replication tree instead of a chain (EXPERIMENTS.md Perf)
+            return min(pool, key=lambda c: (c.refcount, c.depth, c.replica))
+        # paper 4.3.1: least-loaded, deterministic tie-break
+        return min(pool, key=lambda c: (c.refcount, c.replica))
+
+    def _only_seeding_sources(
+        self, st: ModelState, version: int, dest: ReplicaInfo
+    ) -> bool:
+        cands = self._source_candidates(st, version, dest)
+        local = [c for c in cands if st.replicas[c.replica].datacenter == dest.datacenter]
+        if not local:
+            return False
+        return all(c.seeding and c.status == IN_PROGRESS for c in local)
+
+    def _cross_dc(self, st: ModelState, src: ReplicaVersionState, dest: ReplicaInfo) -> bool:
+        return st.replicas[src.replica].datacenter != dest.datacenter
+
+    def _make_assignment(
+        self,
+        st: ModelState,
+        version: int,
+        src: ReplicaVersionState,
+        *,
+        dest: ReplicaInfo,
+    ) -> Assignment:
+        cross = self._cross_dc(st, src, dest)
+        return Assignment(
+            version=version,
+            source=src.replica,
+            source_kind=src.kind,
+            transport="tcp" if cross else "rdma",
+            seeding=cross,
+        )
+
+    def _assign(self, st: ModelState, dest: ReplicaInfo, version: int) -> Assignment:
+        src = self._find_source(st, version, dest)
+        if src is None:
+            raise VersionUnavailableError(
+                f"model {st.name} v{version}: no live replica to serve the read"
+            )
+        src.refcount += 1
+        assignment = self._make_assignment(st, version, src, dest=dest)
+        self._install_replica_version(
+            st,
+            dest,
+            version,
+            status=IN_PROGRESS,
+            kind=dest.kind,
+            source=src.replica,
+            seeding=assignment.seeding,
+        )
+        rv = st.versions[version][dest.name]
+        rv.depth = src.depth + 1
+        for s in range(dest.num_shards):
+            rv.progress[s] = 0
+        self.stats["replications_started"] += 1
+        return assignment
+
+    def _ensure_offload_seed(
+        self, st: ModelState, version: int, dest: ReplicaInfo
+    ) -> bool:
+        """At most one offload-seeding replica per datacenter (4.3.4).
+        Returns True if this call created it (the caller's client library
+        owns the background fetch)."""
+        for rv in st.versions.get(version, {}).values():
+            info = st.replicas.get(rv.replica)
+            if (
+                info is not None
+                and rv.kind == KIND_OFFLOAD
+                and info.datacenter == dest.datacenter
+            ):
+                return False  # someone already seeds this DC
+        # The *caller* becomes the seeder: we install an in-progress offload
+        # replica entry sourced cross-DC.
+        off = offload_name(dest.name)
+        offinfo = st.replicas.get(off)
+        if offinfo is None:
+            offinfo = ReplicaInfo(
+                name=off,
+                num_shards=dest.num_shards,
+                datacenter=dest.datacenter,
+                is_spot=dest.is_spot,
+                kind=KIND_OFFLOAD,
+                workers=dict(dest.workers),
+                open_shards=set(dest.open_shards),
+            )
+            st.replicas[off] = offinfo
+        src = self._find_source(st, version, offinfo)
+        if src is None:
+            return False
+        src.refcount += 1
+        self._install_replica_version(
+            st,
+            offinfo,
+            version,
+            status=IN_PROGRESS,
+            kind=KIND_OFFLOAD,
+            source=src.replica,
+            seeding=True,
+        )
+        rv = st.versions[version][off]
+        rv.seed_cache = True
+        for s in range(offinfo.num_shards):
+            rv.progress[s] = 0
+        self.stats["replications_started"] += 1
+        return True
+
+    def _service_pending(self, st: ModelState) -> None:
+        """Try to assign parked replicate() groups after every publish or
+        completion."""
+        still: List[_PendingReplicate] = []
+        for p in st.pending:
+            info = st.replicas.get(p.replica)
+            if info is None or info.failed:
+                continue  # group died while parked
+            v = version_lib.resolve(p.spec, st.latest)
+            if v is None or self._find_source(st, v, info) is None:
+                still.append(p)
+                continue
+            p.assignment = self._assign(st, info, v)
+            # deliver through txn cache so every shard sees it
+            key = (p.replica, p.op_id)
+            txn = st.txns.get(key)
+            if txn is not None:
+                txn.result = p.assignment
+        st.pending = still
+
+    # -- failure handling --------------------------------------------------------
+
+    def _fail_replica(self, st: ModelState, replica: str, *, reason: str) -> None:
+        self.stats["evictions"] += 1
+        self._remove_replica(st, replica, reason=reason)
+        # the offload twin lives in the same process: dies together
+        off = offload_name(replica)
+        if off in st.replicas and not st.replicas[off].failed:
+            self._remove_replica(st, off, reason=reason)
+
+    def _remove_replica(self, st: ModelState, replica: str, *, reason: str) -> None:
+        info = st.replicas.get(replica)
+        if info is None:
+            return
+        info.failed = True
+        for v in list(st.versions.keys()):
+            self._drop_replica_version(st, replica, v)
+        st.pending = [p for p in st.pending if p.replica != replica]
+        for key in [k for k in st.txns if k[0] == replica]:
+            del st.txns[key]
+        for w in info.workers.values():
+            self._emit(
+                w.worker_id,
+                Event(kind="evicted", model=st.name, replica=replica, reason=reason),
+            )
+        # readers sourced from this replica will report transfer failure and
+        # be re-routed by report_transfer_failure/_reassign.
+        del st.replicas[replica]
+
+    def _current_state(
+        self, st: ModelState, replica: str
+    ) -> Optional[ReplicaVersionState]:
+        info = st.replicas.get(replica)
+        if info is None or info.current_version is None:
+            return None
+        return st.versions.get(info.current_version, {}).get(replica)
+
+    def _reassign(self, st: ModelState, dest_replica: str) -> None:
+        info = st.replicas.get(dest_replica)
+        if info is None or info.failed:
+            return
+        # find dest's in-progress state (gpu or offload twin)
+        for name in (dest_replica, offload_name(dest_replica)):
+            rinfo = st.replicas.get(name)
+            if rinfo is None:
+                continue
+            for vmap in st.versions.values():
+                rv = vmap.get(name)
+                if rv is None or rv.status != IN_PROGRESS:
+                    continue
+                if rv.source is not None and rv.source in vmap:
+                    continue  # source still alive; nothing to do
+                src = self._find_source(st, rv.version, rinfo)
+                if src is None:
+                    continue  # graceful: reader keeps polling, may error out
+                src.refcount += 1
+                rv.source = src.replica
+                rv.seeding = self._cross_dc(st, src, rinfo)
+                self.stats["reassignments"] += 1
+
+
+def offload_name(replica: str) -> str:
+    return f"{replica}@offload"

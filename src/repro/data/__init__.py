@@ -1,0 +1,3 @@
+from repro.data.synthetic import BigramStream, PromptSet, audio_batch
+
+__all__ = ["BigramStream", "PromptSet", "audio_batch"]

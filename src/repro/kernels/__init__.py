@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``flash_attention`` — the serve/train attention hot path.
+* ``checksum``        — end-to-end transfer integrity, overlappable with
+  the weight transfer (paper 4.6).
+* ``quant``           — int8 compression for cross-DC seeding and gradient
+  transfer (beyond-paper optimization).
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jitted wrapper) and ``ref.py`` (pure-jnp oracle); tests sweep shapes and
+dtypes against the oracle in interpret mode.
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.checksum.ops import tensor_checksum
+from repro.kernels.checksum.ref import checksum_ref, fold64
+
+__all__ = ["tensor_checksum", "checksum_ref", "fold64"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the device checksum (matches
+``repro.transfer.checksum.checksum`` bit for bit, mod-2^32 arithmetic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def checksum_ref(words: jax.Array) -> jax.Array:
+    """words: uint32[N]; returns uint32[2] = (s1, s2)."""
+    w = words.astype(jnp.uint32)
+    n = w.shape[0]
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    weights = (idx & jnp.uint32(0xFFFF)) + jnp.uint32(1)
+    s1 = jnp.sum(w, dtype=jnp.uint32)
+    s2 = jnp.sum(w * weights, dtype=jnp.uint32)
+    return jnp.stack([s1, s2])
+
+
+def fold64(pair) -> int:
+    """Combine (s1, s2) into the 64-bit value the transfer layer compares."""
+    s1, s2 = int(pair[0]), int(pair[1])
+    return (s2 << 32) | s1

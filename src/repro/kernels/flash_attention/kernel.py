@@ -1,0 +1,151 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the paper-era GPU flash attention: the online-softmax
+accumulators live in VMEM scratch, the QK^T and PV matmuls hit the MXU with
+f32 accumulation, and the KV sweep is the *innermost grid dimension* so the
+q-block working set (q tile + m/l/acc scratch) stays resident in VMEM across
+the whole sweep. Block shapes default to (128, head_dim) — MXU-aligned.
+
+Layout: inputs are pre-flattened to [BH, S, D] by ``ops.flash_attention``;
+GQA maps query-head row bh to kv row bh // group via the BlockSpec index
+map, so no KV duplication is ever materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [1, bq, D]
+    k_ref,  # [1, bk, D]
+    v_ref,  # [1, bk, D]
+    o_ref,  # [1, bq, D]
+    m_scr,  # [bq, 128] f32
+    l_scr,  # [bq, 128] f32
+    acc_scr,  # [bq, D] f32
+    *,
+    causal: bool,
+    softcap: float,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    live = k_start < kv_len
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < kv_len
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]  # [bq, 1]
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = jnp.broadcast_to(
+            l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True), l_scr.shape
+        )
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bh(
+    q: jax.Array,  # [BHq, Sq, D]
+    k: jax.Array,  # [BHkv, Sk, D]
+    v: jax.Array,  # [BHkv, Sk, D]
+    *,
+    causal: bool = True,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Core pallas_call on pre-flattened [batch*heads, seq, dim] arrays."""
+    bh, sq, d = q.shape
+    bh_kv, sk, _ = k.shape
+    group = bh // bh_kv
+    kv_len = sk
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    nq = (sq + pq) // block_q
+    nk = (sk + pk) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=kv_len,
+        num_k_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq + pq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

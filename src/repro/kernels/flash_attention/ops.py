@@ -1,0 +1,39 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "softcap", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    out = flash_attention_bh(
+        q.reshape(b * hq, sq, d),
+        k.reshape(b * hkv, sk, d),
+        v.reshape(b * hkv, sk, d),
+        causal=causal,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, sq, d)

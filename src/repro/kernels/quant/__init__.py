@@ -1,0 +1,4 @@
+from repro.kernels.quant.ops import compressed_bytes, dequantize, quantize
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref
+
+__all__ = ["compressed_bytes", "dequantize", "quantize", "dequantize_ref", "quantize_ref"]

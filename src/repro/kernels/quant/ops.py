@@ -1,0 +1,45 @@
+"""Jitted wrappers: quantize/dequantize arbitrary tensors (compression for
+cross-DC seeding and gradient all-reduce)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.kernel import quantize_rows
+from repro.kernels.quant.ref import dequantize_ref
+
+
+@functools.partial(jax.jit, static_argnames=("row_len", "interpret"))
+def _quantize_flat(x: jax.Array, *, row_len: int, interpret: bool):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % row_len
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    rows = flat.reshape(-1, row_len)
+    return quantize_rows(rows, interpret=interpret)
+
+
+def quantize(
+    x: jax.Array, *, row_len: int = 1024, interpret: bool = False
+) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """Flatten to rows of ``row_len`` and int8-quantize. Returns
+    (q int8 [R, row_len], scales f32 [R], original shape)."""
+    q, s = _quantize_flat(x, row_len=row_len, interpret=interpret)
+    return q, s, tuple(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype"))
+def dequantize(q: jax.Array, scales: jax.Array, shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    flat = dequantize_ref(q, scales, dtype).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_bytes(q: jax.Array, scales: jax.Array) -> int:
+    return q.size * q.dtype.itemsize + scales.size * scales.dtype.itemsize

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for int8 block quantization."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8: x [R, C] -> (q int8 [R, C], scale f32 [R])."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[:, None]).astype(dtype)

@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, the multi-pod dry-run, and the real
+train/serve drivers. ``dryrun`` must be the process entry point when used
+(it fakes 512 host devices before jax initializes)."""
+
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh, mesh_num_devices
+
+__all__ = ["make_production_mesh", "make_smoke_mesh", "mesh_num_devices"]

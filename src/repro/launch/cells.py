@@ -1,0 +1,178 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable step fn +
+fully-sharded abstract inputs.
+
+Shared by ``dryrun.py`` (lower/compile proof + stats) and
+``benchmarks/roofline.py`` (three-term analysis). No real arrays are ever
+created here — everything is ShapeDtypeStructs + NamedShardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import AUDIO, HYBRID, SSM, VLM, ModelConfig, ShapeCase
+from repro.models import abstract_tree, build_model
+from repro.models.params import ParamSpec
+from repro.sharding import Rules, rules_for, spec_for, tree_shardings
+from repro.training import AdamW, AdamWState, make_decode_step, make_prefill_step, make_train_step
+
+#: logical axes of the batch inputs, by key
+_INPUT_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "targets": ("batch", "seq"),
+    "mask": ("batch", "seq"),
+    "frames": ("batch", "seq", None),
+    "patches": ("batch", None, "act_embed"),
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    case: ShapeCase
+    step_fn: Callable
+    in_structs: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    kind: str  # "train" | "prefill" | "decode"
+    opt: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: explicit output shardings: pins the propagation search, which
+    #: otherwise can blow up on deeply-scanned cache outputs at 512 parts
+    out_shardings: Any = None
+
+    def lower(self, mesh: jax.sharding.Mesh):
+        from repro.models import optim
+
+        kw = {}
+        if self.out_shardings is not None:
+            kw["out_shardings"] = self.out_shardings
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings, **kw)
+        with mesh, optim.optimizations(mesh=mesh, **self.opt):
+            return jitted.lower(*self.in_structs)
+
+
+def _input_shardings(batch_structs: Dict[str, Any], rules: Rules, mesh) -> Dict[str, Any]:
+    out = {}
+    for name, st in batch_structs.items():
+        axes = _INPUT_AXES[name]
+        out[name] = NamedSharding(mesh, spec_for(st.shape, axes[: len(st.shape)], rules, mesh))
+    return out
+
+
+def _cache_dtype(cfg: ModelConfig) -> Any:
+    # decoder KV caches in bf16; recurrent/SSM states stay f32
+    return jnp.float32 if cfg.family in (HYBRID, SSM) else jnp.bfloat16
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh: jax.sharding.Mesh,
+    *,
+    param_dtype: Any = jnp.bfloat16,
+    opt_state_dtype: Any = jnp.float32,
+    rules: Optional[Rules] = None,
+    opt: Optional[Dict[str, Any]] = None,
+) -> Cell:
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    model = build_model(cfg)
+    rules = rules or rules_for(case.kind, global_batch=case.global_batch)
+    opt = opt or {}
+
+    pspecs = model.param_specs()
+    params_structs = abstract_tree(pspecs, param_dtype)
+    params_sh = tree_shardings(pspecs, rules, mesh)
+    batch_structs = model.input_specs(case)
+    batch_sh = _input_shardings(batch_structs, rules, mesh)
+    scalar_sh = NamedSharding(mesh, PartitionSpec())
+
+    if case.kind == "train":
+        optimizer = AdamW(state_dtype=opt_state_dtype)
+        step = make_train_step(model, cfg, optimizer)
+        opt_structs = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=abstract_tree(pspecs, opt_state_dtype),
+            nu=abstract_tree(pspecs, opt_state_dtype),
+        )
+        opt_sh = AdamWState(
+            step=scalar_sh,
+            mu=tree_shardings(pspecs, rules, mesh),
+            nu=tree_shardings(pspecs, rules, mesh),
+        )
+        return Cell(
+            arch, shape, cfg, case, step,
+            (params_structs, opt_structs, batch_structs),
+            (params_sh, opt_sh, batch_sh),
+            "train",
+            opt=opt,
+            out_shardings=(params_sh, opt_sh, scalar_sh),
+        )
+
+    def _logits_sharding(seq_dim: bool) -> NamedSharding:
+        axes = ("batch", "seq" if seq_dim else None, "vocab")
+        shape_ = (case.global_batch, case.seq_len if seq_dim else 1, cfg.vocab)
+        return NamedSharding(mesh, spec_for(shape_, axes, rules, mesh))
+
+    if case.kind == "prefill" or cfg.encoder_only:
+        if cfg.encoder_only:
+            # encoder "prefill" = full encode (logits only)
+            def encode_step(params, batch):
+                return model.forward(params, batch)
+
+            return Cell(
+                arch, shape, cfg, case, encode_step,
+                (params_structs, batch_structs),
+                (params_sh, batch_sh),
+                "prefill",
+                opt=opt,
+                out_shardings=_logits_sharding(seq_dim=True),
+            )
+        step = make_prefill_step(model)
+        prefill_cache_specs = model.cache_specs(case.global_batch, case.seq_len)
+        prefill_cache_sh = tree_shardings(prefill_cache_specs, rules, mesh)
+        return Cell(
+            arch, shape, cfg, case, step,
+            (params_structs, batch_structs),
+            (params_sh, batch_sh),
+            "prefill",
+            opt=opt,
+            out_shardings=(_logits_sharding(False), prefill_cache_sh, scalar_sh),
+        )
+
+    # decode: one new token against a cache of ~seq_len
+    ring = case.name == "long_500k" and cfg.family == HYBRID
+    cache_specs = model.cache_specs(case.global_batch, case.seq_len, ring=ring)
+    cache_structs = abstract_tree(cache_specs, _cache_dtype(cfg))
+    cache_sh = tree_shardings(cache_specs, rules, mesh)
+    step = make_decode_step(model, ring=ring)
+    tok_struct = jax.ShapeDtypeStruct((case.global_batch, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, spec_for(tok_struct.shape, ("batch", None), rules, mesh))
+    len_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(
+        arch, shape, cfg, case, step,
+        (params_structs, cache_structs, tok_struct, len_struct),
+        (params_sh, cache_sh, tok_sh, scalar_sh),
+        "decode",
+        opt=opt,
+        out_shardings=(_logits_sharding(False), cache_sh),
+    )
+
+
+def live_cells() -> Tuple[Tuple[str, str], ...]:
+    """All live (arch, shape) pairs per the DESIGN.md skip table."""
+    from repro.configs import ARCH_IDS, live_shapes
+
+    out = []
+    for arch in ARCH_IDS:
+        for shape in live_shapes(get_config(arch)):
+            out.append((arch, shape))
+    return tuple(out)

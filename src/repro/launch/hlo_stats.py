@@ -1,0 +1,173 @@
+"""Extract roofline terms from a compiled dry-run artifact.
+
+``cost_analysis()`` gives HLO FLOPs and bytes for the *per-device*
+partitioned program. Collective bytes are not in cost_analysis: we parse
+the post-optimization HLO text and sum the operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction (per-device shard sizes, since the module is per-device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.transfer.hardware import TPU
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+#: matches e.g. "bf16[16,512,128]{2,1,0}" or "f32[128]"
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|f16|c64|c128)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"  # result shape (maybe a tuple)
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device result-shape bytes of collective ops.
+
+    ``-done`` ops are skipped so async (start/done) pairs count once.
+    """
+    bytes_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        bytes_by_kind[kind] += _shape_bytes(shape_txt)
+        count_by_kind[kind] += 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one (arch x shape x mesh) cell.
+
+    All terms are seconds for one step, computed from per-device quantities
+    (equivalently: global quantity / (chips * per-chip rate))."""
+
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    collectives: CollectiveStats
+    peak_memory_per_device: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / TPU.peak_flops_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / TPU.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / TPU.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def model_flops_fraction(self, model_flops_global: float) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful."""
+        hlo_global = self.flops_per_device * self.chips
+        return model_flops_global / hlo_global if hlo_global else 0.0
+
+    def roofline_fraction(self, model_flops_global: float) -> float:
+        """Useful-compute time / achievable step time: the score we report."""
+        useful_s = model_flops_global / (self.chips * TPU.peak_flops_bf16)
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+
+def roofline_from_compiled(compiled, chips: int) -> Roofline:
+    """Derive the three terms from the compiled per-device program.
+
+    Uses the trip-count-aware analyzer (``repro.launch.hlo_analyzer``):
+    XLA's built-in ``cost_analysis()`` visits while bodies once, which
+    undercounts every scanned layer by the layer count.
+    """
+    from repro.launch.hlo_analyzer import analyze
+
+    text = compiled.as_text()
+    costs = analyze(text)
+    stats = CollectiveStats(
+        bytes_by_kind={k: int(v) for k, v in costs.collective_bytes.items()},
+        count_by_kind={k: int(v) for k, v in costs.collective_counts.items()},
+    )
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0) or 0) + float(
+            getattr(ma, "argument_size_in_bytes", 0) or 0
+        ) + float(getattr(ma, "output_size_in_bytes", 0) or 0)
+    except Exception:  # noqa: BLE001 - memory analysis optional on CPU
+        pass
+    return Roofline(
+        flops_per_device=costs.dot_flops,
+        hbm_bytes_per_device=costs.hbm_bytes,
+        collective_bytes_per_device=float(costs.total_collective_bytes),
+        chips=chips,
+        collectives=stats,
+        peak_memory_per_device=mem,
+    )
+
+
+def model_flops(cfg, case, model=None) -> float:
+    """MODEL_FLOPS: 6*N*D for train (N = active params, D = global tokens);
+    2*N*D for forward-only prefill/decode."""
+    from repro.models import active_param_count, build_model
+
+    model = model or build_model(cfg)
+    n_active = active_param_count(cfg, model)
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+        return 6.0 * n_active * tokens
+    if case.kind == "prefill":
+        tokens = case.global_batch * case.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * case.global_batch

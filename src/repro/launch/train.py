@@ -1,0 +1,113 @@
+"""Training driver: real compute on the available devices.
+
+Runs an arch (reduced config by default — the full configs are exercised
+via the dry-run) against the synthetic bigram stream, with checkpointing,
+restart-recovery and optional TensorHub publishing of every step's weights
+(the co-located Fig. 4a pattern).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 50 \
+        --resume --ckpt-dir /tmp/ckpt   # restart from the latest checkpoint
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import AUDIO
+from repro.data.synthetic import BigramStream, audio_batch
+from repro.models import build_model, named_tensors
+from repro.training import AdamW, cosine_schedule, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full published config (needs a real pod)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--publish", action="store_true",
+                    help="publish every version into a local TensorHub")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    opt = AdamW(lr=args.lr, schedule=cosine_schedule(10, args.steps), weight_decay=0.01)
+    train_step = jax.jit(make_train_step(model, cfg, opt, accum=args.accum))
+
+    params = model.init(jax.random.PRNGKey(args.seed), jnp.float32)
+    opt_state = opt.init(params)
+    start_step = 0
+    stream = BigramStream(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch, seed=args.seed)
+
+    if args.resume and args.ckpt_dir:
+        latest = ckpt_lib.latest_step(args.ckpt_dir)
+        if latest is not None:
+            (params, opt_state), start_step, meta = ckpt_lib.restore(
+                args.ckpt_dir, (params, opt_state)
+            )
+            stream.offset = meta.get("stream_offset", start_step)
+            print(f"resumed from step {start_step} (stream offset {stream.offset})")
+
+    hub_handle = None
+    if args.publish:
+        from repro.core import ReferenceServer, TensorHubClient
+
+        hub = TensorHubClient(ReferenceServer())
+        hub_handle = hub.open("train-model", "trainer-0", num_shards=1, shard_idx=0,
+                              retain="latest")
+        buffers = {k: np.array(v) for k, v in named_tensors(params).items()}
+        hub_handle.register(buffers)
+        hub_handle.publish(start_step)
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        if cfg.family == AUDIO:
+            batch = {k: jnp.asarray(v) for k, v in audio_batch(
+                args.batch, args.seq, cfg.frontend_dim, cfg.vocab, args.seed * 100_003 + step
+            ).items()}
+        else:
+            b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+            if cfg.frontend == "vision":
+                b["patches"] = jnp.zeros((args.batch, cfg.num_patches, cfg.d_model), jnp.float32)
+                b["tokens"] = b["tokens"][:, : args.seq - cfg.num_patches]
+            batch = b
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if hub_handle is not None:
+            hub_handle.unpublish()
+            for k, v in named_tensors(params).items():
+                np.copyto(hub_handle.store.get(k), np.asarray(v))
+            hub_handle.publish(step + 1)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"acc {float(metrics['accuracy']):.3f} "
+                  f"({(time.time()-t0):.1f}s)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            path = ckpt_lib.save(
+                args.ckpt_dir, step + 1, (params, opt_state),
+                metadata={"stream_offset": stream.offset},
+            )
+            print(f"checkpointed -> {path}")
+    if hub_handle is not None:
+        hub_handle.close()
+
+
+if __name__ == "__main__":
+    main()

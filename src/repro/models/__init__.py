@@ -1,0 +1,35 @@
+from repro.models.lm import (
+    DecoderLM,
+    EncoderLM,
+    HybridLM,
+    XLSTMLM,
+    active_param_count,
+    build_model,
+    param_count,
+)
+from repro.models.params import (
+    ParamSpec,
+    abstract_tree,
+    init_tree,
+    named_tensors,
+    spec,
+    stack_layers,
+    tree_size,
+)
+
+__all__ = [
+    "DecoderLM",
+    "EncoderLM",
+    "HybridLM",
+    "ParamSpec",
+    "XLSTMLM",
+    "abstract_tree",
+    "active_param_count",
+    "build_model",
+    "init_tree",
+    "named_tensors",
+    "param_count",
+    "spec",
+    "stack_layers",
+    "tree_size",
+]

@@ -1,0 +1,429 @@
+"""Decoder/encoder blocks: GQA attention, MLA, SwiGLU MLP, routed MoE.
+
+Each block is a pair of functions:
+
+* ``<block>_specs(cfg) -> dict[str, ParamSpec]`` — parameter schema with
+  logical sharding axes;
+* ``<block>_apply(...)`` — the forward computation (train/prefill form and,
+  where applicable, a single-token decode form against a cache).
+
+All matmuls run in the activation dtype (bf16 in production configs);
+normalizations and softmax statistics accumulate in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import optim
+from repro.models.layers import apply_rope, chunked_attention, rms_norm, swiglu
+from repro.models.params import ParamSpec, spec
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Dense GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    out = {
+        "ln": spec((d,), ("act_embed",), init="zeros"),
+        "wq": spec((d, cfg.num_heads * hd), ("embed", "q_heads")),
+        "wk": spec((d, cfg.num_kv_heads * hd), ("embed", "kv_heads")),
+        "wv": spec((d, cfg.num_kv_heads * hd), ("embed", "kv_heads")),
+        "wo": spec((cfg.num_heads * hd, d), ("q_heads", "embed")),
+    }
+    if cfg.attn_softcap > 0:  # gemma2 also post-norms the block output
+        out["post_ln"] = spec((d,), ("act_embed",), init="zeros")
+    return out
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1).transpose(0, 2, 1, 3)  # [B, H, S, hd]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # [B, S, D]
+    *,
+    positions: jax.Array,  # [S] (or broadcastable)
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,  # decode: {"k","v"} [B,Hkv,Smax,hd]
+    cache_len: Optional[jax.Array] = None,
+    block_k: int = 1024,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (block output incl. residual, updated cache or fresh K/V)."""
+    h = rms_norm(x, p["ln"])
+    q = _split_heads(h @ p["wq"], cfg.num_heads)
+    k = _split_heads(h @ p["wk"], cfg.num_kv_heads)
+    v = _split_heads(h @ p["wv"], cfg.num_kv_heads)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    # H1 (repro.models.optim): when kv_heads doesn't divide the TP axis,
+    # broadcast K/V to the q-head count and shard everything on q-heads —
+    # otherwise GSPMD replicates the whole attention on every model rank.
+    ka, va = k, v
+    if optim.broadcast_kv_active() and cache is None:
+        g = cfg.num_heads // cfg.num_kv_heads
+        if g > 1:
+            ka = jnp.repeat(k, g, axis=1)
+            va = jnp.repeat(v, g, axis=1)
+        q = optim.shard_attn(q)
+        ka = optim.shard_attn(ka)
+        va = optim.shard_attn(va)
+
+    if cache is None:
+        out = chunked_attention(
+            q, ka, va, causal=causal, window=window,
+            attn_softcap=cfg.attn_softcap, block_k=block_k,
+        )
+        out = optim.shard_attn(out)
+        new_cache = {"k": k, "v": v}
+    else:
+        assert cache_len is not None
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, cache_len, 0)
+        )
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, cache_len, 0)
+        )
+        out = chunked_attention(
+            q,
+            k_all,
+            v_all,
+            causal=causal,
+            window=window,
+            q_offset=cache_len,
+            kv_len=cache_len + q.shape[2],
+            attn_softcap=cfg.attn_softcap,
+            block_k=block_k,
+        )
+        new_cache = {"k": k_all, "v": v_all}
+    proj = _merge_heads(out) @ p["wo"]
+    if "post_ln" in p:
+        proj = rms_norm(proj, p["post_ln"])
+    return x + proj, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m = cfg.mla
+    assert m is not None
+    d, H = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "ln": spec((d,), ("act_embed",), init="zeros"),
+        "wq_a": spec((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_ln": spec((m.q_lora_rank,), ("q_lora",), init="zeros"),
+        "wq_b": spec((m.q_lora_rank, H * qk_head), ("q_lora", "q_heads")),
+        "wkv_a": spec((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "kv_lora")),
+        "kv_ln": spec((m.kv_lora_rank,), ("kv_lora",), init="zeros"),
+        "wkv_b_k": spec((m.kv_lora_rank, H * m.qk_nope_head_dim), ("kv_lora", "q_heads")),
+        "wkv_b_v": spec((m.kv_lora_rank, H * m.v_head_dim), ("kv_lora", "q_heads")),
+        "wo": spec((H * m.v_head_dim, d), ("q_heads", "embed")),
+    }
+
+
+def mla_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict[str, jax.Array]] = None,  # {"ckv": [B,Smax,R], "krope": [B,Smax,rd]}
+    cache_len: Optional[jax.Array] = None,
+    block_k: int = 1024,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    m = cfg.mla
+    assert m is not None
+    b, s, _ = x.shape
+    H = cfg.num_heads
+    h = rms_norm(x, p["ln"])
+    # queries through the low-rank path
+    q_lat = rms_norm(h @ p["wq_a"], p["q_ln"])
+    q = (q_lat @ p["wq_b"]).reshape(b, s, H, -1).transpose(0, 2, 1, 3)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # kv latent + decoupled rope key
+    kv_a = h @ p["wkv_a"]
+    ckv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_ln"])  # [B, S, R]
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # [B,1,S,rd]
+
+    if cache is None:
+        # expanded (train/prefill) form: materialize per-head K/V
+        k_nope = (ckv @ p["wkv_b_k"]).reshape(b, s, H, -1).transpose(0, 2, 1, 3)
+        v = (ckv @ p["wkv_b_v"]).reshape(b, s, H, -1).transpose(0, 2, 1, 3)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, H, s, m.qk_rope_head_dim))], axis=-1)
+        qk = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(qk, k, v, causal=True, block_k=block_k)
+        proj = _merge_heads(out) @ p["wo"]
+        return x + proj, {"ckv": ckv, "krope": k_rope[:, 0]}
+
+    # absorbed (decode) form: score against the latent cache directly
+    assert cache_len is not None
+    ckv_all = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_len, 0)
+    )
+    krope_all = jax.lax.dynamic_update_slice(
+        cache["krope"], k_rope[:, 0].astype(cache["krope"].dtype), (0, cache_len, 0)
+    )
+    # fold W^UK into the query: q_abs [B,H,S,R]
+    wk = p["wkv_b_k"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhsd,rhd->bhsr", q_nope, wk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim, jnp.float32))
+    scores = (
+        jnp.einsum("bhsr,btr->bhst", q_abs.astype(jnp.float32), ckv_all.astype(jnp.float32))
+        + jnp.einsum("bhsd,btd->bhst", q_rope.astype(jnp.float32), krope_all.astype(jnp.float32))
+    ) * scale
+    t = ckv_all.shape[1]
+    valid = jnp.arange(t)[None, None, None, :] < (cache_len + s)
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bhsr", probs, ckv_all.astype(jnp.float32))
+    wv = p["wkv_b_v"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhsr,rhd->bhsd", out_lat, wv).astype(x.dtype)
+    proj = _merge_heads(out) @ p["wo"]
+    return x + proj, {"ckv": ckv_all, "krope": krope_all}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    out = {
+        "ln": spec((d,), ("act_embed",), init="zeros"),
+        "w_gate": spec((d, f), ("embed", "mlp")),
+        "w_up": spec((d, f), ("embed", "mlp")),
+        "w_down": spec((f, d), ("mlp", "embed")),
+    }
+    if cfg.attn_softcap > 0:
+        out["post_ln"] = spec((d,), ("act_embed",), init="zeros")
+    return out
+
+
+def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, p["ln"])
+    out = swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    if "post_ln" in p:
+        out = rms_norm(out, p["post_ln"])
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# Routed MoE (sort-based capacity dispatch; EP via the "experts" axis)
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    mo = cfg.moe
+    assert mo is not None
+    d, E, fe = cfg.d_model, mo.num_experts, mo.d_expert
+    out = {
+        "ln": spec((d,), ("act_embed",), init="zeros"),
+        "router": spec((d, E), ("embed", None)),
+        "w_gate": spec((E, d, fe), ("experts", "embed", "expert_mlp")),
+        "w_up": spec((E, d, fe), ("experts", "embed", "expert_mlp")),
+        "w_down": spec((E, fe, d), ("experts", "expert_mlp", "embed")),
+    }
+    if mo.num_shared:
+        fs = mo.d_expert * mo.num_shared
+        out["shared_gate"] = spec((d, fs), ("embed", "mlp"))
+        out["shared_up"] = spec((d, fs), ("embed", "mlp"))
+        out["shared_down"] = spec((fs, d), ("mlp", "embed"))
+    return out
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Token-choice top-k with per-expert capacity.
+
+    Dispatch is a sort + scatter (no one-hot einsum, no O(T*E*C) buffers):
+    tokens are ordered by assigned expert, placed into a [E, C, D] buffer
+    (overflow beyond capacity is dropped, standard for capacity routing),
+    the grouped matmuls run expert-parallel, and results scatter back
+    weighted by the router probabilities.
+    """
+    mo = cfg.moe
+    assert mo is not None
+    b, s, d = x.shape
+    t = b * s
+    k = mo.top_k
+    E = mo.num_experts
+    cap = max(int(t * k / E * mo.capacity_factor), 1)
+    # round capacity to a lane-friendly multiple
+    cap = (cap + 7) // 8 * 8
+
+    h = rms_norm(x, p["ln"])
+    flat = h.reshape(t, d)
+    logits = (flat @ p["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # sort the T*k (token, slot) pairs by expert id
+    e_flat = top_e.reshape(-1)  # [T*k]
+    order = jnp.argsort(e_flat)  # stable
+    e_sorted = e_flat[order]
+    tok_sorted = (order // k).astype(jnp.int32)
+    # position of each entry within its expert group
+    ar = jnp.arange(t * k, dtype=jnp.int32)
+    group_start = jnp.searchsorted(e_sorted, jnp.arange(E, dtype=e_sorted.dtype))
+    pos_in_e = ar - group_start[e_sorted]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)  # overflow -> waste row
+
+    buf = jnp.zeros((E * cap + 1, d), dtype=x.dtype)
+    buf = buf.at[dest].set(flat[tok_sorted])
+    grouped = buf[: E * cap].reshape(E, cap, d)
+
+    # expert-parallel grouped SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", grouped, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", grouped, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+
+    # gather back + weighted combine
+    y_flat = jnp.concatenate([y.reshape(E * cap, d), jnp.zeros((1, d), y.dtype)])
+    contrib = y_flat[dest] * top_p.reshape(-1)[order][:, None].astype(y.dtype)
+    combined = jnp.zeros((t, d), dtype=jnp.float32).at[tok_sorted].add(
+        contrib.astype(jnp.float32)
+    )
+    out = combined.astype(x.dtype)
+
+    if mo.num_shared:
+        out = out + swiglu(h.reshape(t, d), p["shared_gate"], p["shared_up"], p["shared_down"])
+    return x + out.reshape(b, s, d)
+
+
+def moe_apply_shardmap(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """H3 (repro.models.optim): expert parallelism via shard_map.
+
+    Each device dispatches only its LOCAL tokens (batch-sharded), runs only
+    its LOCAL experts (model-sharded), and the per-token combine is one
+    psum over the model axis — the Megatron-style EP pattern. Falls back to
+    :func:`moe_apply` when the mesh/shape doesn't fit the pattern.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import optim
+
+    f = optim.FLAGS
+    mo = cfg.moe
+    mesh = f.mesh
+    assert mo is not None
+    sizes = dict(mesh.shape)
+    tp = sizes.get(f.model_axis, 1)
+    bdims = tuple(a for a in f.batch_axes if sizes.get(a, 1) > 1)
+    bprod = 1
+    for a in bdims:
+        bprod *= sizes[a]
+    E = mo.num_experts
+    if tp <= 1 or E % tp or x.shape[0] % max(bprod, 1) or not bdims:
+        return moe_apply(cfg, p, x)
+    e_loc = E // tp
+    k = mo.top_k
+
+    h = rms_norm(x, p["ln"])
+
+    def local_moe(h_loc, router_w, wg, wu, wd):
+        b, s, d = h_loc.shape
+        t = b * s
+        flat = h_loc.reshape(t, d)
+        logits = (flat @ router_w).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        cap = max(int(t * k / E * mo.capacity_factor), 1)
+        cap = (cap + 7) // 8 * 8
+
+        e_flat = top_e.reshape(-1)
+        order = jnp.argsort(e_flat)
+        e_sorted = e_flat[order]
+        tok_sorted = (order // k).astype(jnp.int32)
+        ar = jnp.arange(t * k, dtype=jnp.int32)
+        group_start = jnp.searchsorted(e_sorted, jnp.arange(E, dtype=e_sorted.dtype))
+        pos_in_e = ar - group_start[e_sorted]
+        e_lo = jax.lax.axis_index(f.model_axis).astype(e_sorted.dtype) * e_loc
+        local = (e_sorted >= e_lo) & (e_sorted < e_lo + e_loc) & (pos_in_e < cap)
+        dest = jnp.where(local, (e_sorted - e_lo) * cap + pos_in_e, e_loc * cap)
+
+        buf = jnp.zeros((e_loc * cap + 1, d), dtype=h_loc.dtype)
+        buf = buf.at[dest].set(flat[tok_sorted])
+        grouped = buf[: e_loc * cap].reshape(e_loc, cap, d)
+        g = jnp.einsum("ecd,edf->ecf", grouped, wg)
+        u = jnp.einsum("ecd,edf->ecf", grouped, wu)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
+        y_flat = jnp.concatenate([y.reshape(e_loc * cap, d), jnp.zeros((1, d), y.dtype)])
+        w_sorted = top_p.reshape(-1)[order]
+        contrib = y_flat[dest] * w_sorted[:, None].astype(y.dtype)
+        out = jnp.zeros((t, d), jnp.float32).at[tok_sorted].add(contrib.astype(jnp.float32))
+        out = jax.lax.psum(out, f.model_axis)
+        return out.astype(h_loc.dtype).reshape(b, s, d)
+
+    bspec = bdims if len(bdims) > 1 else bdims[0]
+    out = shard_map(
+        local_moe,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None),
+            P(None, None),
+            P(f.model_axis, None, None),
+            P(f.model_axis, None, None),
+            P(f.model_axis, None, None),
+        ),
+        out_specs=P(bspec, None, None),
+        check_rep=False,
+    )(h, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if mo.num_shared:
+        b, s, d = x.shape
+        out = out + swiglu(
+            h.reshape(-1, d), p["shared_gate"], p["shared_up"], p["shared_down"]
+        ).reshape(b, s, d)
+    return x + out
+
+
+def moe_dense_ref(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """O(T*E) oracle: every expert runs on every token, masked combine.
+    Used by tests on tiny configs to validate the dispatch path."""
+    mo = cfg.moe
+    assert mo is not None
+    b, s, d = x.shape
+    h = rms_norm(x, p["ln"])
+    flat = h.reshape(-1, d)
+    probs = jax.nn.softmax((flat @ p["router"]).astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, mo.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs).at[jnp.arange(flat.shape[0])[:, None], top_e].set(top_p)
+    g = jnp.einsum("td,edf->tef", flat, p["w_gate"])
+    u = jnp.einsum("td,edf->tef", flat, p["w_up"])
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, p["w_down"])
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), gates).astype(x.dtype)
+    if mo.num_shared:
+        out = out + swiglu(flat, p["shared_gate"], p["shared_up"], p["shared_down"])
+    return x + out.reshape(b, s, d)

@@ -1,0 +1,189 @@
+"""Common transformer building blocks (pure JAX, jit/scan friendly).
+
+Attention is implemented *chunked* (online-softmax scan over KV blocks) so
+that 32k-prefill and 500k-context cells lower with bounded memory on any
+backend. The Pallas TPU kernel (``repro.kernels.flash_attention``) computes
+the same function for the TPU runtime hot path; tests assert equivalence.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    from repro.models import optim  # late import: layers <- optim <- (none)
+
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps)
+    if optim.FLAGS.lowp_norm and dt != jnp.float32:
+        # H2: keep the reduction in f32 but scale in the residual dtype —
+        # avoids materializing f32 copies of the whole residual stream
+        return x * scale.astype(dt) * (1.0 + gamma.astype(jnp.float32)).astype(dt)
+    xf = x.astype(jnp.float32)
+    return ((xf * scale) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# -- rotary ------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, D] (D even); positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- chunked (flash-style) attention ------------------------------------------
+
+
+def _block_mask(
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool,
+    window: Optional[jax.Array],
+    kv_len: Optional[jax.Array],
+) -> jax.Array:
+    """[Sq, Sk_block] boolean mask (True = attend).
+
+    ``window`` may be a traced scalar (per-layer values under scan, e.g.
+    gemma2's alternating local/global layers); window <= 0 means unlimited.
+    """
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        m &= (w <= 0) | (k_pos[None, :] > q_pos[:, None] - w)
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,  # sliding window (<=0 / None = off)
+    q_offset: jax.Array | int = 0,
+    kv_len: Optional[jax.Array] = None,  # valid cache length (decode)
+    attn_softcap: float = 0.0,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, scanning over KV blocks.
+
+    GQA: Hq must be a multiple of Hkv. ``q_offset`` places the query block
+    within the global sequence (prefill: 0; decode: current position).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]  # may differ from d (MLA: qk vs v head dims)
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    block_k = min(block_k, sk)
+    nblocks = (sk + block_k - 1) // block_k
+    pad = nblocks * block_k - sk
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        kp, vp = k, v
+    kb = kp.reshape(b, hkv, nblocks, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(b, hkv, nblocks, block_k, dv).transpose(2, 0, 1, 3, 4)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+    base_valid = sk if kv_len is None else kv_len
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        blk_idx, kblk, vblk = inp
+        k_pos = blk_idx * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kblk.astype(jnp.float32)) * scale
+        if attn_softcap > 0:
+            s = softcap(s, attn_softcap)
+        valid = _block_mask(q_pos, k_pos, causal, window, jnp.asarray(base_valid))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32)
+        )
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nblocks), kb, vb)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def reference_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    q_offset: jax.Array | int = 0,
+    kv_len: Optional[jax.Array] = None,
+    attn_softcap: float = 0.0,
+) -> jax.Array:
+    """Naive O(S^2)-memory oracle for tests."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    if attn_softcap > 0:
+        s = softcap(s, attn_softcap)
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    valid = _block_mask(
+        q_pos, k_pos, causal, window, None if kv_len is None else jnp.asarray(kv_len)
+    )
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+# -- MLP -----------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up: jax.Array, w_down: jax.Array, b_down: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w_up + b_up) @ w_down + b_down

@@ -1,0 +1,701 @@
+"""Model assembly: the 10 assigned architectures behind one interface.
+
+``build_model(cfg)`` returns a family-specific model object exposing:
+
+* ``param_specs()``       — ParamSpec tree (shapes + logical sharding axes)
+* ``init(key, dtype)``    — materialized params (smoke tests / examples)
+* ``forward(params, batch)``            — teacher-forced logits [B,S,V]
+* ``cache_specs(batch_size, max_len)``  — decode-cache schema
+* ``prefill(params, batch)``            — logits + primed cache
+* ``decode(params, cache, tokens, cache_len)`` — one decode step
+* ``input_specs(shape)``  — ShapeDtypeStruct stand-ins for the dry-run
+
+All families use scan-over-layers with remat; caches are scan-stacked.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    AUDIO,
+    DENSE,
+    HYBRID,
+    MOE,
+    SSM,
+    VLM,
+    ModelConfig,
+    ShapeCase,
+)
+from repro.models import blocks, ssd, xlstm_blocks
+from repro.models.layers import apply_rope, rms_norm, softcap
+from repro.models.params import (
+    ParamSpec,
+    abstract_tree,
+    init_tree,
+    spec,
+    stack_layers,
+    tree_size,
+)
+
+Params = Any
+Cache = Any
+
+
+def _layer_windows(cfg: ModelConfig, *, long_mode: bool = False) -> jnp.ndarray:
+    """Per-layer sliding-window sizes (0 = global attention)."""
+    if cfg.alt_local_global:
+        w = [cfg.sliding_window if i % 2 == 0 else 0 for i in range(cfg.num_layers)]
+    elif long_mode and cfg.sliding_window:
+        w = [cfg.sliding_window] * cfg.num_layers
+    else:
+        w = [0] * cfg.num_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+def _ring_slot(cache_len: jax.Array, window: int) -> jax.Array:
+    return jnp.mod(cache_len, window)
+
+
+def _ring_attention_step(
+    q: jax.Array,  # [B, Hq, 1, hd] (rope already applied at cache_len)
+    k_cache: jax.Array,  # [B, Hkv, W, hd] (rope applied at absolute positions)
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    attn_softcap_v: float,
+) -> jax.Array:
+    """Attention over a ring-buffer window cache (long-context decode)."""
+    b, hq, _, hd = q.shape
+    _, hkv, w, _ = k_cache.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, 1, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if attn_softcap_v > 0:
+        s = softcap(s, attn_softcap_v)
+    # slot s holds absolute position p = cache_len - ((cache_len - s) mod W)
+    slots = jnp.arange(w)
+    pos = cache_len - jnp.mod(cache_len - slots, w)
+    valid = pos >= 0
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decoder LM (dense / moe / vlm families)
+# ---------------------------------------------------------------------------
+
+
+class DecoderLM:
+    """Causal decoder: dense GQA or MLA attention x (SwiGLU | MoE) FFN."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_moe = cfg.moe is not None
+        self.is_mla = cfg.mla is not None
+        self.n_prefix = cfg.moe.first_dense if self.is_moe else 0
+        self.n_scan = cfg.num_layers - self.n_prefix
+
+    # -- specs ---------------------------------------------------------------
+
+    def _layer_specs(self, *, dense_ffn: bool) -> Dict[str, Any]:
+        cfg = self.cfg
+        attn = blocks.mla_specs(cfg) if self.is_mla else blocks.attn_specs(cfg)
+        if dense_ffn:
+            d_ff = cfg.moe.d_ff_dense if self.is_moe else cfg.d_ff
+            ffn = blocks.mlp_specs(cfg, d_ff)
+        else:
+            ffn = blocks.moe_specs(cfg) if self.is_moe else blocks.mlp_specs(cfg)
+        return {"attn": attn, "ffn": ffn}
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        tree: Dict[str, Any] = {
+            "embed": spec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+            "layers": stack_layers(self._layer_specs(dense_ffn=not self.is_moe), self.n_scan),
+            "final_ln": spec((cfg.d_model,), ("act_embed",), init="zeros"),
+        }
+        if self.n_prefix:
+            tree["prefix"] = [self._layer_specs(dense_ffn=True) for _ in range(self.n_prefix)]
+        if not cfg.tie_embeddings:
+            tree["head"] = spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+        return tree
+
+    def init(self, key: jax.Array, dtype: Any = jnp.float32) -> Params:
+        return init_tree(self.param_specs(), key, dtype)
+
+    # -- embedding / head ------------------------------------------------------
+
+    def _embed(self, params: Params, tokens: jax.Array) -> jax.Array:
+        x = params["embed"][tokens]
+        if self.cfg.tie_embeddings:  # gemma2 normalizes the embedding scale
+            x = x * jnp.sqrt(jnp.asarray(self.cfg.d_model, jnp.float32)).astype(x.dtype)
+        return x
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        x = rms_norm(x, params["final_ln"])
+        w = params["embed"].T if self.cfg.tie_embeddings else params["head"]
+        logits = (x @ w).astype(jnp.float32)
+        if self.cfg.logit_softcap > 0:
+            logits = softcap(logits, self.cfg.logit_softcap)
+        return logits
+
+    def _ffn_apply(self, p_ffn: Dict[str, Any], x: jax.Array, *, dense: bool) -> jax.Array:
+        if dense or not self.is_moe:
+            return blocks.mlp_apply(p_ffn, x)
+        from repro.models import optim
+
+        if optim.FLAGS.shardmap_moe and optim.FLAGS.mesh is not None:
+            return blocks.moe_apply_shardmap(self.cfg, p_ffn, x)
+        return blocks.moe_apply(self.cfg, p_ffn, x)
+
+    def _attn(self, p, x, *, positions, window=None, cache=None, cache_len=None):
+        if self.is_mla:
+            return blocks.mla_apply(
+                self.cfg, p, x, positions=positions, cache=cache, cache_len=cache_len
+            )
+        return blocks.attn_apply(
+            self.cfg, p, x, positions=positions, causal=not self.cfg.encoder_only,
+            window=window, cache=cache, cache_len=cache_len,
+        )
+
+    # -- forward (train) -------------------------------------------------------
+
+    def forward(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        x, positions = self._inputs(params, batch)
+        windows = _layer_windows(self.cfg)[self.n_prefix :]
+
+        for i in range(self.n_prefix):
+            p = params["prefix"][i]
+            x, _ = self._attn(p["attn"], x, positions=positions)
+            x = self._ffn_apply(p["ffn"], x, dense=True)
+
+        @jax.checkpoint
+        def body(h, xs):
+            layer, w = xs
+            h, _ = self._attn(layer["attn"], h, positions=positions, window=w)
+            h = self._ffn_apply(layer["ffn"], h, dense=False)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+        return self._head(params, x)
+
+    def _inputs(self, params: Params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if self.cfg.family == VLM:
+            patches = batch["patches"].astype(x.dtype)  # [B, P, D] precomputed stub
+            x = jnp.concatenate([patches, x], axis=1)
+        positions = jnp.arange(x.shape[1])
+        return x, positions
+
+    # -- caches ------------------------------------------------------------------
+
+    def _attn_cache_spec(self, b: int, m: int) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        if self.is_mla:
+            ml = cfg.mla
+            return {
+                "ckv": spec((b, m, ml.kv_lora_rank), ("batch", "seq", "kv_lora")),
+                "krope": spec((b, m, ml.qk_rope_head_dim), ("batch", "seq", None)),
+            }
+        hd = cfg.resolved_head_dim
+        return {
+            "k": spec((b, cfg.num_kv_heads, m, hd), ("batch", "kv_heads", "seq", "head_dim")),
+            "v": spec((b, cfg.num_kv_heads, m, hd), ("batch", "kv_heads", "seq", "head_dim")),
+        }
+
+    def cache_specs(self, batch_size: int, max_len: int, *, ring: bool = False) -> Any:
+        m = min(max_len, self.cfg.sliding_window) if ring and self.cfg.sliding_window else max_len
+        tree: Dict[str, Any] = {
+            "layers": stack_layers(self._attn_cache_spec(batch_size, m), self.n_scan)
+        }
+        if self.n_prefix:
+            tree["prefix"] = [self._attn_cache_spec(batch_size, m) for _ in range(self.n_prefix)]
+        return tree
+
+    def init_cache(self, batch_size: int, max_len: int, dtype: Any, *, ring: bool = False) -> Cache:
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, dtype),
+            self.cache_specs(batch_size, max_len, ring=ring),
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+
+    # -- prefill -------------------------------------------------------------------
+
+    def prefill(
+        self, params: Params, batch: Dict[str, jax.Array], *, max_len: Optional[int] = None
+    ) -> Tuple[jax.Array, Cache, jax.Array]:
+        """Full-sequence forward that also returns the primed KV cache and
+        its length. Cache buffers sized max_len (default: seq length)."""
+        x, positions = self._inputs(params, batch)
+        s = x.shape[1]
+        m = max_len or s
+        windows = _layer_windows(self.cfg)[self.n_prefix :]
+
+        def pad_cache(c: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+            out = {}
+            for name, arr in c.items():
+                seq_axis = 1 if self.is_mla else 2
+                pad = [(0, 0)] * arr.ndim
+                pad[seq_axis] = (0, m - arr.shape[seq_axis])
+                out[name] = jnp.pad(arr, pad)
+            return out
+
+        prefix_caches = []
+        for i in range(self.n_prefix):
+            p = params["prefix"][i]
+            x, kv = self._attn(p["attn"], x, positions=positions)
+            x = self._ffn_apply(p["ffn"], x, dense=True)
+            prefix_caches.append(pad_cache(kv))
+
+        @jax.checkpoint
+        def body(h, xs):
+            layer, w = xs
+            h, kv = self._attn(layer["attn"], h, positions=positions, window=w)
+            h = self._ffn_apply(layer["ffn"], h, dense=False)
+            return h, pad_cache(kv)
+
+        x, stacked = jax.lax.scan(body, x, (params["layers"], windows))
+        logits = self._head(params, x[:, -1:])
+        cache: Dict[str, Any] = {"layers": stacked}
+        if self.n_prefix:
+            cache["prefix"] = prefix_caches
+        return logits, cache, jnp.asarray(s, jnp.int32)
+
+    # -- decode ------------------------------------------------------------------------
+
+    def decode(
+        self,
+        params: Params,
+        cache: Cache,
+        tokens: jax.Array,  # [B, 1]
+        cache_len: jax.Array,
+    ) -> Tuple[jax.Array, Cache]:
+        x = self._embed(params, tokens)
+        positions = cache_len + jnp.arange(x.shape[1])
+        windows = _layer_windows(self.cfg)[self.n_prefix :]
+
+        new_prefix = []
+        for i in range(self.n_prefix):
+            p = params["prefix"][i]
+            x, kv = self._attn(
+                p["attn"], x, positions=positions, cache=cache["prefix"][i], cache_len=cache_len
+            )
+            x = self._ffn_apply(p["ffn"], x, dense=True)
+            new_prefix.append(kv)
+
+        def body(h, xs):
+            layer, w, c = xs
+            h, kv = self._attn(
+                layer["attn"], h, positions=positions, window=w, cache=c, cache_len=cache_len
+            )
+            h = self._ffn_apply(layer["ffn"], h, dense=False)
+            return h, kv
+
+        x, stacked = jax.lax.scan(body, x, (params["layers"], windows, cache["layers"]))
+        logits = self._head(params, x)
+        new_cache: Dict[str, Any] = {"layers": stacked}
+        if self.n_prefix:
+            new_cache["prefix"] = new_prefix
+        return logits, new_cache
+
+    # -- dry-run inputs ------------------------------------------------------------------
+
+    def input_specs(self, case: ShapeCase) -> Dict[str, jax.ShapeDtypeStruct]:
+        b, s = case.global_batch, case.seq_len
+        if self.cfg.family == VLM:
+            p = self.cfg.num_patches
+            toks = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+            return {
+                "tokens": toks,
+                "patches": jax.ShapeDtypeStruct((b, p, self.cfg.d_model), jnp.bfloat16),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Encoder LM (hubert)
+# ---------------------------------------------------------------------------
+
+
+class EncoderLM:
+    """Bidirectional encoder over precomputed frame embeddings (audio stub)."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder_only
+        self.cfg = cfg
+
+    def _layer_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d, f = cfg.d_model, cfg.d_ff
+        return {
+            "attn": blocks.attn_specs(cfg),
+            "ffn": {
+                "ln": spec((d,), ("act_embed",), init="zeros"),
+                "w_up": spec((d, f), ("embed", "mlp")),
+                "b_up": spec((f,), ("mlp",), init="zeros"),
+                "w_down": spec((f, d), ("mlp", "embed")),
+                "b_down": spec((d,), ("act_embed",), init="zeros"),
+            },
+        }
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "frame_proj": spec((cfg.frontend_dim, cfg.d_model), ("frames", "embed")),
+            "layers": stack_layers(self._layer_specs(), cfg.num_layers),
+            "final_ln": spec((cfg.d_model,), ("act_embed",), init="zeros"),
+            "head": spec((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+        }
+
+    def init(self, key: jax.Array, dtype: Any = jnp.float32) -> Params:
+        return init_tree(self.param_specs(), key, dtype)
+
+    def forward(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        x = batch["frames"].astype(params["frame_proj"].dtype) @ params["frame_proj"]
+        positions = jnp.arange(x.shape[1])
+
+        @jax.checkpoint
+        def body(h, layer):
+            h, _ = blocks.attn_apply(
+                self.cfg, layer["attn"], h, positions=positions, causal=False
+            )
+            f = layer["ffn"]
+            hn = rms_norm(h, f["ln"])
+            h = h + (jax.nn.gelu(hn @ f["w_up"] + f["b_up"]) @ f["w_down"] + f["b_down"])
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_ln"])
+        return (x @ params["head"]).astype(jnp.float32)
+
+    def input_specs(self, case: ShapeCase) -> Dict[str, jax.ShapeDtypeStruct]:
+        b, s = case.global_batch, case.seq_len
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, self.cfg.frontend_dim), jnp.bfloat16),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): Mamba2 stack + shared attention block
+# ---------------------------------------------------------------------------
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        s = cfg.ssm
+        assert s is not None
+        self.every = s.shared_block_every
+        if cfg.num_layers % self.every:
+            raise ValueError("hybrid: num_layers must be a multiple of shared_block_every")
+        self.groups = cfg.num_layers // self.every
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        inner = stack_layers(ssd.ssd_specs(cfg), self.every)
+        return {
+            "embed": spec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+            "groups": stack_layers(inner, self.groups),  # [G, E, ...]
+            "shared_attn": blocks.attn_specs(cfg),
+            "shared_mlp": blocks.mlp_specs(cfg),
+            "final_ln": spec((cfg.d_model,), ("act_embed",), init="zeros"),
+            "head": spec((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+        }
+
+    def init(self, key: jax.Array, dtype: Any = jnp.float32) -> Params:
+        return init_tree(self.param_specs(), key, dtype)
+
+    def _ssd_cache_spec(self, b: int) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        d_in, nheads, hd, n, conv_dim = ssd.ssd_dims(cfg)
+        k = cfg.ssm.d_conv
+        return {
+            "conv": spec((b, k - 1, conv_dim), ("batch", None, "ssm_inner")),
+            "state": spec((b, nheads, hd, n), ("batch", "ssm_heads", None, "ssm_state")),
+        }
+
+    def cache_specs(self, batch_size: int, max_len: int, *, ring: bool = False) -> Any:
+        cfg = self.cfg
+        m = min(max_len, cfg.sliding_window) if ring and cfg.sliding_window else max_len
+        hd = cfg.resolved_head_dim
+        attn_c = {
+            "k": spec((batch_size, cfg.num_kv_heads, m, hd), ("batch", "kv_heads", "seq", "head_dim")),
+            "v": spec((batch_size, cfg.num_kv_heads, m, hd), ("batch", "kv_heads", "seq", "head_dim")),
+        }
+        return {
+            "ssd": stack_layers(stack_layers(self._ssd_cache_spec(batch_size), self.every), self.groups),
+            "attn": stack_layers(attn_c, self.groups),
+        }
+
+    def init_cache(self, batch_size: int, max_len: int, dtype: Any, *, ring: bool = False) -> Cache:
+        del dtype  # SSM states and small window caches stay f32
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32),
+            self.cache_specs(batch_size, max_len, ring=ring),
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+
+    def _shared_block(self, params, x, *, positions, window=None, cache=None, cache_len=None, ring=False):
+        cfg = self.cfg
+        if cache is not None and ring:
+            # ring-buffer window attention (long-context decode)
+            p = params["shared_attn"]
+            h = rms_norm(x, p["ln"])
+            q = blocks._split_heads(h @ p["wq"], cfg.num_heads)
+            k = blocks._split_heads(h @ p["wk"], cfg.num_kv_heads)
+            v = blocks._split_heads(h @ p["wv"], cfg.num_kv_heads)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            w = cache["k"].shape[2]
+            slot = _ring_slot(cache_len, w)
+            k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, slot, 0))
+            v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, slot, 0))
+            out = _ring_attention_step(q, k_all, v_all, cache_len, cfg.attn_softcap)
+            x = x + blocks._merge_heads(out) @ p["wo"]
+            new_cache = {"k": k_all, "v": v_all}
+        else:
+            x, new_cache = blocks.attn_apply(
+                self.cfg, params["shared_attn"], x, positions=positions,
+                window=window, cache=cache, cache_len=cache_len,
+            )
+        x = blocks.mlp_apply(params["shared_mlp"], x)
+        return x, new_cache
+
+    def forward(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        x = params["embed"][batch["tokens"]]
+        positions = jnp.arange(x.shape[1])
+
+        def group_body(h, gparams):
+            @jax.checkpoint
+            def inner(h2, lparams):
+                h2, _ = ssd.ssd_block_apply(self.cfg, lparams, h2)
+                return h2, None
+
+            h, _ = jax.lax.scan(inner, h, gparams)
+            h, _ = self._shared_block(params, h, positions=positions)
+            return h, None
+
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+        x = rms_norm(x, params["final_ln"])
+        return (x @ params["head"]).astype(jnp.float32)
+
+    def prefill(
+        self, params: Params, batch: Dict[str, jax.Array], *, max_len: Optional[int] = None
+    ) -> Tuple[jax.Array, Cache, jax.Array]:
+        x = params["embed"][batch["tokens"]]
+        s = x.shape[1]
+        m = max_len or s
+        positions = jnp.arange(s)
+
+        def group_body(h, gparams):
+            def inner(h2, lparams):
+                h2, c = ssd.ssd_block_apply(self.cfg, lparams, h2)
+                return h2, c
+
+            h, ssd_c = jax.lax.scan(inner, h, gparams)
+            h, kv = self._shared_block(params, h, positions=positions)
+            kv = {
+                name: jnp.pad(arr, [(0, 0), (0, 0), (0, m - arr.shape[2]), (0, 0)])
+                for name, arr in kv.items()
+            }
+            return h, (ssd_c, kv)
+
+        x, (ssd_caches, attn_caches) = jax.lax.scan(group_body, x, params["groups"])
+        x = rms_norm(x, params["final_ln"])
+        logits = (x[:, -1:] @ params["head"]).astype(jnp.float32)
+        cache = {"ssd": ssd_caches, "attn": attn_caches}
+        return logits, cache, jnp.asarray(s, jnp.int32)
+
+    def decode(
+        self,
+        params: Params,
+        cache: Cache,
+        tokens: jax.Array,
+        cache_len: jax.Array,
+        *,
+        ring: bool = False,
+    ) -> Tuple[jax.Array, Cache]:
+        x = params["embed"][tokens]
+        positions = cache_len + jnp.arange(x.shape[1])
+
+        def group_body(h, xs):
+            gparams, g_ssd, g_attn = xs
+
+            def inner(h2, xs2):
+                lparams, c = xs2
+                h2, c2 = ssd.ssd_block_apply(self.cfg, lparams, h2, cache=c)
+                return h2, c2
+
+            h, new_ssd = jax.lax.scan(inner, h, (gparams, g_ssd))
+            h, new_kv = self._shared_block(
+                params, h, positions=positions, cache=g_attn, cache_len=cache_len, ring=ring
+            )
+            return h, (new_ssd, new_kv)
+
+        x, (ssd_caches, attn_caches) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["ssd"], cache["attn"])
+        )
+        x = rms_norm(x, params["final_ln"])
+        logits = (x @ params["head"]).astype(jnp.float32)
+        return logits, {"ssd": ssd_caches, "attn": attn_caches}
+
+    def input_specs(self, case: ShapeCase) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {"tokens": jax.ShapeDtypeStruct((case.global_batch, case.seq_len), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        x = cfg.xlstm
+        assert x is not None
+        self.every = x.slstm_every
+        if cfg.num_layers % self.every:
+            raise ValueError("xlstm: num_layers must be a multiple of slstm_every")
+        self.pairs = cfg.num_layers // self.every
+        self.n_mlstm_per_pair = self.every - 1
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        mspecs = stack_layers(xlstm_blocks.mlstm_specs(cfg), self.n_mlstm_per_pair)
+        return {
+            "embed": spec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+            "pairs": {
+                "mlstm": stack_layers(mspecs, self.pairs),
+                "slstm": stack_layers(xlstm_blocks.slstm_specs(cfg), self.pairs),
+            },
+            "final_ln": spec((cfg.d_model,), ("act_embed",), init="zeros"),
+            "head": spec((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+        }
+
+    def init(self, key: jax.Array, dtype: Any = jnp.float32) -> Params:
+        return init_tree(self.param_specs(), key, dtype)
+
+    def _state_specs(self, b: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        d_in, nh, dh = xlstm_blocks.mlstm_dims(cfg)
+        dhs = cfg.d_model // cfg.num_heads
+        m_state = {
+            "c": spec((b, nh, dh, dh), ("batch", "ssm_heads", None, None), init="zeros"),
+            "n": spec((b, nh, dh), ("batch", "ssm_heads", None), init="zeros"),
+            "m": spec((b, nh), ("batch", "ssm_heads"), init="zeros"),
+        }
+        s_state = {
+            "h": spec((b, nh, dhs), ("batch", "ssm_heads", None), init="zeros"),
+            "c": spec((b, nh, dhs), ("batch", "ssm_heads", None), init="zeros"),
+            "n": spec((b, nh, dhs), ("batch", "ssm_heads", None), init="zeros"),
+            "m": spec((b, nh, dhs), ("batch", "ssm_heads", None), init="zeros"),
+        }
+        return {
+            "mlstm": stack_layers(stack_layers(m_state, self.n_mlstm_per_pair), self.pairs),
+            "slstm": stack_layers(s_state, self.pairs),
+        }
+
+    def cache_specs(self, batch_size: int, max_len: int, *, ring: bool = False) -> Any:
+        del max_len, ring  # recurrent state is O(1) in sequence length
+        return self._state_specs(batch_size)
+
+    def init_cache(self, batch_size: int, max_len: int, dtype: Any, *, ring: bool = False) -> Cache:
+        del dtype
+        tree = self.cache_specs(batch_size, max_len, ring=ring)
+        cache = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32),
+            tree,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        # stabilizers start at -inf-ish
+        cache["mlstm"]["m"] = jnp.full_like(cache["mlstm"]["m"], -1e30)
+        cache["slstm"]["m"] = jnp.full_like(cache["slstm"]["m"], -1e30)
+        return cache
+
+    def _run(self, params, x, cache):
+        cfg = self.cfg
+
+        def pair_body(h, xs):
+            pparams, pcache = xs
+
+            def m_body(h2, xs2):
+                lp, lc = xs2
+                h2, st = xlstm_blocks.mlstm_block_apply(cfg, lp, h2, cache=lc)
+                return h2, st
+
+            h, m_states = jax.lax.scan(m_body, h, (pparams["mlstm"], pcache["mlstm"]))
+            h, s_state = xlstm_blocks.slstm_block_apply(cfg, pparams["slstm"], h, cache=pcache["slstm"])
+            return h, {"mlstm": m_states, "slstm": s_state}
+
+        x, new_cache = jax.lax.scan(pair_body, x, (params["pairs"], cache))
+        return x, new_cache
+
+    def forward(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        x = params["embed"][batch["tokens"]]
+        cache = self.init_cache(x.shape[0], 0, x.dtype)
+        x, _ = self._run(params, x, cache)
+        x = rms_norm(x, params["final_ln"])
+        return (x @ params["head"]).astype(jnp.float32)
+
+    def prefill(
+        self, params: Params, batch: Dict[str, jax.Array], *, max_len: Optional[int] = None
+    ) -> Tuple[jax.Array, Cache, jax.Array]:
+        x = params["embed"][batch["tokens"]]
+        s = x.shape[1]
+        cache = self.init_cache(x.shape[0], 0, x.dtype)
+        x, new_cache = self._run(params, x, cache)
+        x = rms_norm(x, params["final_ln"])
+        return (x[:, -1:] @ params["head"]).astype(jnp.float32), new_cache, jnp.asarray(s, jnp.int32)
+
+    def decode(
+        self, params: Params, cache: Cache, tokens: jax.Array, cache_len: jax.Array
+    ) -> Tuple[jax.Array, Cache]:
+        del cache_len  # recurrent: no positional cache index
+        x = params["embed"][tokens]
+        x, new_cache = self._run(params, x, cache)
+        x = rms_norm(x, params["final_ln"])
+        return (x @ params["head"]).astype(jnp.float32), new_cache
+
+    def input_specs(self, case: ShapeCase) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {"tokens": jax.ShapeDtypeStruct((case.global_batch, case.seq_len), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in (DENSE, MOE, VLM):
+        return DecoderLM(cfg)
+    if cfg.family == AUDIO:
+        return EncoderLM(cfg)
+    if cfg.family == HYBRID:
+        return HybridLM(cfg)
+    if cfg.family == SSM:
+        return XLSTMLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def param_count(model) -> int:
+    return tree_size(model.param_specs())
+
+
+def active_param_count(cfg: ModelConfig, model) -> int:
+    """Exact active parameters per token: total minus the routed-expert
+    fraction that top-k routing leaves idle."""
+    total = tree_size(model.param_specs())
+    if cfg.moe is None:
+        return total
+    mo = cfg.moe
+    expert_elems = 3 * cfg.d_model * mo.d_expert * mo.num_experts * (cfg.num_layers - mo.first_dense)
+    return int(total - expert_elems * (1.0 - mo.top_k / mo.num_experts))

@@ -1,0 +1,88 @@
+"""Beyond-paper performance knobs (EXPERIMENTS.md Perf).
+
+The dry-run roofline exposed concrete inefficiencies in the *baseline*
+sharding; each knob here is one hypothesis->change cycle. Knobs are process
+globals (set by the dry-run/launch entry points before tracing) so the
+model code stays a pure function of (params, batch).
+
+H1 ``shard_attn_heads``: with GQA, kv_heads often doesn't divide the model
+axis (llama3: 8 kv heads on 16-way TP), and GSPMD then replicates the whole
+attention einsum on every model rank — 16x redundant compute AND it
+all-reduces the f32 score tensors. Fix: broadcast K/V to the full query
+head count (a local gather: each rank materializes only its own 2 heads)
+and constrain q/k/v/o to shard on the q-head axis, which IS divisible.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass
+class OptFlags:
+    mesh: Optional[Mesh] = None
+    #: H1: shard attention on (batch, q-heads) — see module docstring.
+    #: IMPORTANT: the constraint must pin the batch axis too; a
+    #: with_sharding_constraint is a FULL spec, and leaving batch as None
+    #: pins it replicated (the first H1 attempt did exactly that and made
+    #: things worse — recorded in EXPERIMENTS.md Perf).
+    shard_attn_heads: bool = False
+    #: name of the mesh axis used for tensor parallelism
+    model_axis: str = "model"
+    #: mesh axes carrying the batch (outer data parallel)
+    batch_axes: tuple = ("pod", "data")
+    #: H2: apply the RMS-norm scale in the residual dtype instead of
+    #: materializing full f32 copies of the residual stream (the variance
+    #: reduction stays f32). ~1/3 of llama3 train HBM traffic was f32
+    #: residual copies.
+    lowp_norm: bool = False
+    #: H3: expert-parallel MoE via shard_map — per-device local dispatch
+    #: (sort over LOCAL tokens only) + local expert matmuls + one psum over
+    #: the model axis, instead of GSPMD's replicated global sort/scatter
+    #: (which all-gathers the whole dispatch buffer on every device).
+    shardmap_moe: bool = False
+
+
+FLAGS = OptFlags()
+
+
+@contextlib.contextmanager
+def optimizations(**kw) -> Iterator[OptFlags]:
+    global FLAGS
+    prev = FLAGS
+    FLAGS = dataclasses.replace(FLAGS, **kw)
+    try:
+        yield FLAGS
+    finally:
+        FLAGS = prev
+
+
+def shard_attn(x: jax.Array, *, batch_axis: int = 0, head_axis: int = 1) -> jax.Array:
+    """Constrain `x` to shard batch over the data axes AND heads over the
+    model axis (when active, mesh known, and the dims divide)."""
+    f = FLAGS
+    if not f.shard_attn_heads or f.mesh is None:
+        return x
+    sizes = dict(f.mesh.shape)
+    spec = [None] * x.ndim
+    batch = tuple(a for a in f.batch_axes if a in sizes)
+    bsz = 1
+    for a in batch:
+        bsz *= sizes[a]
+    if batch and bsz > 1 and x.shape[batch_axis] % bsz == 0:
+        spec[batch_axis] = batch if len(batch) > 1 else batch[0]
+    n = sizes.get(f.model_axis, 1)
+    if n > 1 and x.shape[head_axis] % n == 0:
+        spec[head_axis] = f.model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(f.mesh, PartitionSpec(*spec))
+    )
+
+
+def broadcast_kv_active() -> bool:
+    return FLAGS.shard_attn_heads and FLAGS.mesh is not None

@@ -1,0 +1,106 @@
+"""Parameter specs: shapes + logical sharding axes, one source of truth.
+
+Every model builds an *abstract* parameter tree of :class:`ParamSpec` leaves.
+From it we derive, without ever materializing weights:
+
+* ``jax.ShapeDtypeStruct`` trees for the dry-run (``.lower()`` inputs),
+* ``NamedSharding`` trees via ``repro.sharding.rules``,
+* real initialized parameters for smoke tests / examples,
+* the named-tensor dict that TensorHub ``register()``/``publish()`` consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Axes  # logical sharding axes, len == ndim
+    init: str = "normal"  # "normal" | "zeros" | "ones"
+    scale: float = 1.0  # stddev multiplier on fan-in init
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"spec {self.shape} has {len(self.axes)} axes")
+
+    def struct(self, dtype: Any) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, dtype)
+
+
+def spec(shape: Tuple[int, ...], axes: Axes, *, init: str = "normal", scale: float = 1.0) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init=init, scale=scale)
+
+
+def stack_layers(tree: Any, num_layers: int) -> Any:
+    """Prepend a scan-stacked 'layers' dimension to every spec in a tree."""
+
+    def bump(p: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            (num_layers, *p.shape), ("layers", *p.axes), init=p.init, scale=p.scale
+        )
+
+    return jax.tree.map(bump, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_tree(tree: Any, dtype: Any) -> Any:
+    return jax.tree.map(
+        lambda p: p.struct(dtype), tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def init_tree(tree: Any, key: jax.Array, dtype: Any) -> Any:
+    """Materialize real parameters (smoke tests / examples only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+
+    def make(p: ParamSpec, k: jax.Array) -> jax.Array:
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else max(p.shape[-1], 1)
+        std = p.scale / np.sqrt(fan_in)
+        return (jax.random.normal(k, p.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(p, k) for p, k in zip(leaves, keys)])
+
+
+def named_tensors(params: Any, prefix: str = "") -> Dict[str, Any]:
+    """Flatten a param pytree into the named-tensor dict consumed by
+    TensorHub register()/publish() (DESIGN.md 4)."""
+    out: Dict[str, Any] = {}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        name = prefix + "/".join(_key_str(k) for k in path)
+        out[name] = leaf
+    return out
+
+
+def _key_str(k: Any) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def tree_size(tree: Any) -> int:
+    """Total element count of a spec tree (for param-count cross-checks)."""
+    total = 0
+    for p in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        n = 1
+        for s in p.shape:
+            n *= s
+        total += n
+    return total

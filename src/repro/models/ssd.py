@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) block: chunked-parallel scan for training, single-step
+recurrence for decode (arXiv:2405.21060, used by zamba2).
+
+State-space recurrence per head h with head size P and state size N:
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + (dt_t * x_t) outer B_t      [P, N]
+    y_t = S_t @ C_t + D_h * x_t
+
+Training uses the chunked algorithm: within-chunk quadratic (attention-like
+masked matmul), cross-chunk state propagation via a short lax.scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec, spec
+
+Params = Dict[str, Any]
+
+
+def ssd_dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return d_in, nheads, s.head_dim, s.d_state, conv_dim
+
+
+def ssd_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    d_in, nheads, _, n, conv_dim = ssd_dims(cfg)
+    return {
+        "ln": spec((d,), ("act_embed",), init="zeros"),
+        # in_proj -> [z (d_in), xBC (d_in + 2N), dt (nheads)]
+        "w_in": spec((d, 2 * d_in + 2 * n + nheads), ("embed", "ssm_inner")),
+        "conv_w": spec((s.d_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": spec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": spec((nheads,), ("ssm_heads",), init="zeros"),
+        "d_skip": spec((nheads,), ("ssm_heads",), init="ones"),
+        "dt_bias": spec((nheads,), ("ssm_heads",), init="zeros"),
+        "norm": spec((d_in,), ("ssm_inner",), init="zeros"),
+        "w_out": spec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _ssd_chunked(
+    x: jax.Array,  # [B, T, H, P]
+    dt: jax.Array,  # [B, T, H]  (post-softplus)
+    a: jax.Array,  # [H]        (negative)
+    bmat: jax.Array,  # [B, T, N]
+    cmat: jax.Array,  # [B, T, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,H,P], final_state [B,H,P,N])."""
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    L = min(chunk, t)
+    nc = (t + L - 1) // L
+    pad = nc * L - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, L, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, L, n).astype(jnp.float32)
+
+    log_a = dtc * a.astype(jnp.float32)  # [B,nc,L,H] (negative)
+    cum = jnp.cumsum(log_a, axis=2)  # inclusive cumulative log decay
+    total = cum[:, :, -1]  # [B,nc,H]
+
+    dx = (dtc[..., None] * xc.astype(jnp.float32))  # [B,nc,L,H,P]
+
+    # within-chunk (causal masked attention-like) term
+    g = jnp.einsum("bcln,bcmn->bclm", cc, bc)  # [B,nc,L,L]
+    li = cum[:, :, :, None, :]  # l index -> [B,nc,L,1,H]
+    lj = cum[:, :, None, :, :]  # m index -> [B,nc,1,L,H]
+    decay = jnp.exp(li - lj)  # [B,nc,L,L,H]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(causal[None, None, :, :, None], g[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", w, dx)
+
+    # chunk-final states: S_c = sum_j exp(total - cum_j) dx_j outer b_j
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # [B,nc,L,H]
+    s_chunk = jnp.einsum("bclh,bclhp,bcln->bchpn", decay_to_end, dx, bc)
+
+    # propagate chunk states: S_prev_{c} = exp(total_{c-1}) S_prev_{c-1} + S_{c-1}
+    def scan_fn(s_prev, inp):
+        tot_c, s_c = inp
+        s_next = jnp.exp(tot_c)[:, :, None, None] * s_prev + s_c
+        return s_next, s_prev
+
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    final_state, s_prevs = jax.lax.scan(
+        scan_fn,
+        s0,
+        (total.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_inter[i] = exp(cum_i) * C_i . S_prev
+    y_inter = jnp.einsum("bclh,bcln,bchpn->bclhp", jnp.exp(cum), cc, s_prevs)
+
+    y = (y_intra + y_inter).reshape(b, nc * L, h, p)[:, :t]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_reference(x, dt, a, bmat, cmat, init_state=None):
+    """Step-by-step oracle for tests."""
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    s = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    ys = []
+    for i in range(t):
+        decay = jnp.exp(dt[:, i].astype(jnp.float32) * a)  # [B,H]
+        dx = dt[:, i, :, None].astype(jnp.float32) * x[:, i].astype(jnp.float32)
+        s = decay[:, :, None, None] * s + jnp.einsum("bhp,bn->bhpn", dx, bmat[:, i].astype(jnp.float32))
+        ys.append(jnp.einsum("bhpn,bn->bhp", s, cmat[:, i].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), s
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: [B, T, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i : i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_block_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # [B, S, D]
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    # cache: {"conv": [B, K-1, conv_dim], "state": [B, H, P, N]}
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    s = cfg.ssm
+    assert s is not None
+    d_in, nheads, hd, n, conv_dim = ssd_dims(cfg)
+    bsz, seq, _ = x.shape
+
+    h = rms_norm(x, p["ln"])
+    proj = h @ p["w_in"]
+    z, xbc, dt_raw = jnp.split(proj, [d_in, d_in + conv_dim], axis=-1)
+
+    if cache is None:
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        new_conv = None
+    else:
+        # decode: shift-register conv state
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, K-1+S, C]
+        out = jnp.zeros_like(xbc, dtype=jnp.float32)
+        k = p["conv_w"].shape[0]
+        for i in range(k):
+            out = out + window[:, i : i + seq].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+        xbc = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        new_conv = window[:, -(k - 1) :]
+
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(bsz, seq, nheads, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    init = None if cache is None else cache["state"]
+    if cache is None or seq > 1:
+        y, state = _ssd_chunked(xs, dt, a, bmat, cmat, s.chunk, init)
+    else:
+        # single-token recurrence
+        decay = jnp.exp(dt[:, 0] * a)  # [B,H]
+        dx = dt[:, 0, :, None] * xs[:, 0].astype(jnp.float32)
+        state = decay[:, :, None, None] * init.astype(jnp.float32) + jnp.einsum(
+            "bhp,bn->bhpn", dx, bmat[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, cmat[:, 0].astype(jnp.float32))[:, None]
+        y = y.astype(x.dtype)
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, seq, d_in)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["norm"])
+    out = y @ p["w_out"]
+
+    new_cache: Dict[str, jax.Array] = {"state": state.astype(jnp.float32)}
+    if cache is None:
+        k = p["conv_w"].shape[0]
+        raw = h @ p["w_in"]
+        xbc_raw = raw[..., d_in : d_in + conv_dim]
+        tail = xbc_raw[:, -(k - 1) :] if seq >= k - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (k - 1 - seq, 0), (0, 0))
+        )
+        new_cache["conv"] = tail
+    else:
+        new_cache["conv"] = new_conv
+    return x + out, new_cache

@@ -1,0 +1,300 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential).
+
+Both carry a stabilizer state m so the exponential gating stays finite; the
+parallel (training) and recurrent (decode) forms are algebraically
+identical and the tests assert so.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec, spec
+
+Params = Dict[str, Any]
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    x = cfg.xlstm
+    assert x is not None
+    d_in = int(cfg.d_model * x.proj_factor)
+    heads = cfg.num_heads
+    return d_in, heads, d_in // heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in, h, _ = mlstm_dims(cfg)
+    return {
+        "ln": spec((d,), ("act_embed",), init="zeros"),
+        "w_up": spec((d, 2 * d_in), ("embed", "ssm_inner")),
+        "wq": spec((d_in, d_in), ("ssm_inner", None)),
+        "wk": spec((d_in, d_in), ("ssm_inner", None)),
+        "wv": spec((d_in, d_in), ("ssm_inner", None)),
+        "w_if": spec((d_in, 2 * h), ("ssm_inner", "ssm_heads")),
+        "b_if": spec((2 * h,), ("ssm_heads",), init="zeros"),
+        "w_down": spec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_parallel(
+    q: jax.Array, k: jax.Array, v: jax.Array, i_raw: jax.Array, f_raw: jax.Array
+) -> jax.Array:
+    """q,k,v: [B,H,T,Dh]; i_raw,f_raw: [B,H,T]. Returns [B,H,T,Dh]."""
+    dh = q.shape[-1]
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    cum = jnp.cumsum(log_f, axis=-1)  # F_t
+    # d[t,s] = F_t - F_s + i_s   (s <= t)
+    dmat = cum[..., :, None] - cum[..., None, :] + i_raw.astype(jnp.float32)[..., None, :]
+    t = q.shape[2]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1)  # [B,H,T] running max
+    dstab = jnp.exp(dmat - m[..., None])
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(dh, jnp.float32)) * dstab
+    b = jnp.sum(scores, axis=-1)  # [B,H,T]
+    denom = jnp.maximum(jnp.abs(b), jnp.exp(-m))
+    out = jnp.einsum("bhts,bhsd->bhtd", scores, v.astype(jnp.float32)) / denom[..., None]
+    return out.astype(q.dtype)
+
+
+def _mlstm_chunked(
+    q: jax.Array,  # [B,H,T,Dh]
+    k: jax.Array,
+    v: jax.Array,
+    i_raw: jax.Array,  # [B,H,T]
+    f_raw: jax.Array,
+    *,
+    chunk: int = 256,
+    init: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked mLSTM: within-chunk parallel (O(L^2)), cross-chunk recurrent
+    matrix state — linear in T, the form that makes xLSTM usable at 32k/500k
+    context. Algebraically identical to :func:`_mlstm_parallel` (tests).
+
+    State is tracked stabilized: C_hat = C*exp(-m), n_hat = n*exp(-m).
+    """
+    b, h, t, dh = q.shape
+    L = min(chunk, t)
+    nc = (t + L - 1) // L
+    pad = nc * L - t
+    if pad:
+        zq = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq)
+        # padded steps: forget-gate 'keep everything' (log_f=0 via +inf raw),
+        # input-gate 'add nothing' (i -> -inf)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, 0), (0, pad)), constant_values=1e30)
+
+    qc = q.reshape(b, h, nc, L, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    kc = k.reshape(b, h, nc, L, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    vc = v.reshape(b, h, nc, L, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    ic = i_raw.reshape(b, h, nc, L).transpose(2, 0, 1, 3).astype(jnp.float32)
+    fc = f_raw.reshape(b, h, nc, L).transpose(2, 0, 1, 3).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    if init is None:
+        state0 = {
+            "c": jnp.zeros((b, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((b, h, dh), jnp.float32),
+            "m": jnp.full((b, h), -1e30, jnp.float32),
+        }
+    else:
+        state0 = {k2: init[k2].astype(jnp.float32) for k2 in ("c", "n", "m")}
+
+    def body(state, inp):
+        qq, kk, vv, ii, ff = inp  # [B,H,L,(Dh)]
+        c_hat, n_hat, m_prev = state["c"], state["n"], state["m"]
+        log_f = jax.nn.log_sigmoid(ff)
+        cum = jnp.cumsum(log_f, axis=-1)  # F_t within chunk
+        # local pairwise weights d[t,s] = F_t - F_s + i_s (s <= t)
+        dmat = cum[..., :, None] - cum[..., None, :] + ii[..., None, :]
+        dmat = jnp.where(causal, dmat, -jnp.inf)
+        m_local = jnp.max(dmat, axis=-1)  # [B,H,L]
+        m_inter = cum + m_prev[..., None]  # state contribution weight F_t + m_prev
+        m_t = jnp.maximum(m_local, m_inter)
+        dstab = jnp.exp(dmat - m_t[..., None])
+        scores = jnp.einsum("bhtd,bhsd->bhts", qq, kk) * scale * dstab
+        inter_w = jnp.exp(m_inter - m_t)  # [B,H,L]
+        q_c = jnp.einsum("bhtd,bhde->bhte", qq, c_hat) * scale
+        q_n = jnp.einsum("bhtd,bhd->bht", qq, n_hat) * scale
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vv) + inter_w[..., None] * q_c
+        den = jnp.sum(scores, axis=-1) + inter_w * q_n
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # end-of-chunk state fold
+        total = cum[..., -1:]  # F_L
+        w = total - cum + ii  # contribution of step s to the final state
+        m_new = jnp.maximum(total[..., 0] + m_prev, jnp.max(w, axis=-1))
+        ws = jnp.exp(w - m_new[..., None])
+        carry_scale = jnp.exp(total[..., 0] + m_prev - m_new)
+        c_new = carry_scale[..., None, None] * c_hat + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", ws, kk, vv
+        )
+        n_new = carry_scale[..., None] * n_hat + jnp.einsum("bhs,bhsd->bhd", ws, kk)
+        return {"c": c_new, "n": n_new, "m": m_new}, out
+
+    state, outs = jax.lax.scan(body, state0, (qc, kc, vc, ic, fc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * L, dh)[:, :, :t]
+    return out.astype(q.dtype), state
+
+
+def _mlstm_step(
+    state: Dict[str, jax.Array],
+    q: jax.Array,  # [B,H,Dh]
+    k: jax.Array,
+    v: jax.Array,
+    i_raw: jax.Array,  # [B,H]
+    f_raw: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dh = q.shape[-1]
+    c, n, m = state["c"], state["n"], state["m"]  # [B,H,Dh,Dh], [B,H,Dh], [B,H]
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i32 = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, i32)
+    f_s = jnp.exp(log_f + m - m_new)
+    i_s = jnp.exp(i32 - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = f_s[..., None, None] * c + i_s[..., None, None] * (kf[..., :, None] * vf[..., None, :])
+    n = f_s[..., None] * n + i_s[..., None] * kf
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    b = jnp.einsum("bhd,bhd->bh", qf, n)
+    denom = jnp.maximum(jnp.abs(b), jnp.exp(-m_new))
+    h = jnp.einsum("bhd,bhde->bhe", qf, c) / denom[..., None]
+    return h.astype(q.dtype), {"c": c, "n": n, "m": m_new}
+
+
+def mlstm_block_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # [B,S,D]
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    d_in, nh, dh = mlstm_dims(cfg)
+    bsz, seq, _ = x.shape
+    h = rms_norm(x, p["ln"])
+    up = h @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+
+    def heads(t: jax.Array) -> jax.Array:
+        return t.reshape(bsz, seq, nh, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(xm @ p["wq"]), heads(xm @ p["wk"]), heads(xm @ p["wv"])
+    gates = xm @ p["w_if"] + p["b_if"]
+    i_raw, f_raw = jnp.split(gates.reshape(bsz, seq, 2, nh).transpose(0, 3, 1, 2), 2, axis=-1)
+    i_raw, f_raw = i_raw[..., 0], f_raw[..., 0]  # [B,H,T]
+
+    if seq > 1:
+        # chunked: O(T) memory — the form that scales to 32k/500k context
+        out, state = _mlstm_chunked(q, k, v, i_raw, f_raw, init=cache)
+    else:
+        state = cache if cache is not None else _mlstm_zero_state(bsz, nh, dh)
+        outs = []
+        for t in range(seq):
+            o, state = _mlstm_step(state, q[:, :, t], k[:, :, t], v[:, :, t], i_raw[:, :, t], f_raw[:, :, t])
+            outs.append(o)
+        out = jnp.stack(outs, axis=2)
+    merged = out.transpose(0, 2, 1, 3).reshape(bsz, seq, d_in)
+    y = merged * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + y @ p["w_down"], state
+
+
+def _mlstm_zero_state(b: int, h: int, dh: int) -> Dict[str, jax.Array]:
+    return {
+        "c": jnp.zeros((b, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((b, h, dh), jnp.float32),
+        "m": jnp.full((b, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_fold_state(q, k, v, i_raw, f_raw) -> Dict[str, jax.Array]:
+    """Final (C, n, m) after consuming the whole sequence (prefill)."""
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    cum = jnp.cumsum(log_f, axis=-1)
+    total = cum[..., -1:]
+    w = total - cum + i_raw.astype(jnp.float32)  # log-weight of step s in final state
+    m = jnp.max(w, axis=-1)  # [B,H]
+    ws = jnp.exp(w - m[..., None])
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c = jnp.einsum("bhs,bhsd,bhse->bhde", ws, kf, vf)
+    n = jnp.einsum("bhs,bhsd->bhd", ws, kf)
+    return {"c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    return {
+        "ln": spec((d,), ("act_embed",), init="zeros"),
+        "w_gates": spec((d, 4 * d), ("embed", "ssm_inner")),  # z,i,f,o
+        "b_gates": spec((4 * d,), ("ssm_inner",), init="zeros"),
+        "r_gates": spec((4, nh, dh, dh), (None, "ssm_heads", None, None), scale=0.5),
+        "w_out": spec((d, d), ("ssm_inner", "embed")),
+    }
+
+
+def slstm_block_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    bsz, seq, _ = x.shape
+    inp = rms_norm(x, p["ln"])
+    gates_x = (inp @ p["w_gates"] + p["b_gates"]).reshape(bsz, seq, 4, nh, dh)
+
+    state = cache if cache is not None else {
+        "h": jnp.zeros((bsz, nh, dh), jnp.float32),
+        "c": jnp.zeros((bsz, nh, dh), jnp.float32),
+        "n": jnp.zeros((bsz, nh, dh), jnp.float32),
+        "m": jnp.full((bsz, nh, dh), -1e30, jnp.float32),
+    }
+
+    r = p["r_gates"].astype(jnp.float32)  # [4, H, dh, dh]
+
+    def step(st, gx):
+        h_prev, c_prev, n_prev, m_prev = st["h"], st["c"], st["n"], st["m"]
+        rec = jnp.einsum("ghde,bhd->gbhe", r, h_prev)  # [4,B,H,dh]
+        gz = gx[:, 0].astype(jnp.float32) + rec[0]
+        gi = gx[:, 1].astype(jnp.float32) + rec[1]
+        gf = gx[:, 2].astype(jnp.float32) + rec[2]
+        go = gx[:, 3].astype(jnp.float32) + rec[3]
+        z = jnp.tanh(gz)
+        log_f = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(log_f + m_prev, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(log_f + m_prev - m_new)
+        c = f_s * c_prev + i_s * z
+        n = f_s * n_prev + i_s
+        h = jax.nn.sigmoid(go) * (c / jnp.maximum(n, 1e-6))
+        return {"h": h, "c": c, "n": n, "m": m_new}, h
+
+    new_state, hs = jax.lax.scan(
+        step, state, gates_x.transpose(1, 0, 2, 3, 4)
+    )
+    out = hs.transpose(1, 0, 2, 3).reshape(bsz, seq, d).astype(x.dtype)
+    return x + out @ p["w_out"], new_state

@@ -1,0 +1,3 @@
+from repro.rl.loop import RLConfig, RolloutWorker, TrainerWorker, sample_responses
+
+__all__ = ["RLConfig", "RolloutWorker", "TrainerWorker", "sample_responses"]

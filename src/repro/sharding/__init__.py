@@ -1,0 +1,23 @@
+from repro.sharding.rules import (
+    LONG_SERVE_RULES,
+    Rules,
+    SERVE_RULES,
+    TRAIN_RULES,
+    constrain,
+    rules_for,
+    sharding_for,
+    spec_for,
+    tree_shardings,
+)
+
+__all__ = [
+    "LONG_SERVE_RULES",
+    "Rules",
+    "SERVE_RULES",
+    "TRAIN_RULES",
+    "constrain",
+    "rules_for",
+    "sharding_for",
+    "spec_for",
+    "tree_shardings",
+]

@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md 5).
+
+Every parameter / activation / cache dimension carries a *logical* axis name
+(``repro.models.params.ParamSpec.axes``). A :class:`Rules` table maps logical
+names to (composite) mesh axes; :func:`spec_for` turns a concrete shape +
+axes tuple into a ``PartitionSpec`` with two safety properties:
+
+* **divisibility-aware**: a dim is only sharded if its size divides evenly
+  over the mapped mesh axes (e.g. gemma2's 4 KV heads stay replicated on a
+  16-way model axis; its fused kv projection of 1024 shards fine);
+* **first-fit**: each mesh axis is used at most once per tensor; later dims
+  that would reuse a taken axis stay unsharded. This resolves e.g.
+  [experts, embed, expert_mlp] where both "experts" and "expert_mlp" map to
+  "model": experts wins, expert_mlp replicates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.params import ParamSpec
+
+Composite = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mapping: Dict[str, Composite]
+
+    def lookup(self, logical: Optional[str]) -> Composite:
+        if logical is None:
+            return ()
+        return self.mapping.get(logical, ())
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    # works for both Mesh and AbstractMesh (tests use the latter: no need
+    # for 256 real devices to check rule logic)
+    return dict(mesh.shape)
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...], rules: Rules, mesh: Mesh) -> PartitionSpec:
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    dims = []
+    for dim_size, logical in zip(shape, axes):
+        cand = [a for a in rules.lookup(logical) if a in sizes and a not in used]
+        # composite fallback: if the full product doesn't divide, retry with
+        # trailing sub-tuples — e.g. experts->(data,model): 16 experts can't
+        # split 256 ways, but they split the 16-way model axis fine.
+        # (Without this, dbrx's expert stack was fully REPLICATED in serve
+        # mode: 423 s of redundant compute per step in the dry-run table.)
+        chosen: Tuple[str, ...] = ()
+        for start in range(len(cand)):
+            sub = cand[start:]
+            total = 1
+            for a in sub:
+                total *= sizes[a]
+            if total > 1 and dim_size % total == 0:
+                chosen = tuple(sub)
+                break
+        if chosen:
+            used.update(chosen)
+            dims.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            dims.append(None)
+    return PartitionSpec(*dims)
+
+
+def sharding_for(p: ParamSpec, rules: Rules, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(p.shape, p.axes, rules, mesh))
+
+
+def tree_shardings(tree: Any, rules: Rules, mesh: Mesh) -> Any:
+    """Map a ParamSpec tree to a NamedSharding tree."""
+    return jax.tree.map(
+        lambda p: sharding_for(p, rules, mesh),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...], rules: Rules, mesh: Mesh) -> jax.Array:
+    """In-graph sharding constraint from logical axes (activations)."""
+    spec = spec_for(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Rule tables (DESIGN.md 5)
+# ---------------------------------------------------------------------------
+
+#: Training: FSDP over (pod, data) on the embed dim of params (ZeRO-3
+#: analogue — jit inserts all-gathers at use sites), TP over model.
+TRAIN_RULES = Rules(
+    {
+        # activations
+        "batch": ("pod", "data"),
+        "seq": (),
+        "act_embed": (),
+        # params
+        "embed": ("pod", "data"),
+        "q_heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),  # fallback when head dims don't divide
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": ("model",),
+        "q_lora": (),
+        "kv_lora": (),
+        "ssm_inner": ("model",),
+        "ssm_heads": ("model",),
+        "ssm_state": (),
+        "conv": (),
+        "frames": (),
+        "layers": (),
+    }
+)
+
+#: Serving: weights stay TP-sharded (no FSDP — no per-step all-gathers);
+#: huge MoE expert stacks additionally shard experts over data (pure EP
+#: over the whole pod: deepseek-v3 fits this way).
+SERVE_RULES = Rules(
+    {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "act_embed": (),
+        "embed": (),
+        "q_heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("data", "model"),
+        "expert_mlp": (),
+        "q_lora": (),
+        "kv_lora": (),
+        "ssm_inner": ("model",),
+        "ssm_heads": ("model",),
+        "ssm_state": (),
+        "conv": (),
+        "frames": (),
+        "layers": (),
+    }
+)
+
+#: Long-context decode (batch=1): sequence-parallel KV/SSM caches — the
+#: cache seq dim shards over data since batch can't.
+LONG_SERVE_RULES = Rules(
+    {
+        **SERVE_RULES.mapping,
+        "batch": (),
+        "seq": ("pod", "data"),
+    }
+)
+
+
+def rules_for(kind: str, *, global_batch: int = 0) -> Rules:
+    if kind == "train":
+        return TRAIN_RULES
+    if kind in ("prefill", "decode"):
+        return LONG_SERVE_RULES if global_batch == 1 else SERVE_RULES
+    raise ValueError(f"unknown step kind {kind!r}")

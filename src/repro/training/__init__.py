@@ -1,0 +1,30 @@
+from repro.training.objectives import (
+    group_relative_advantages,
+    grpo_loss,
+    lm_cross_entropy,
+    masked_cross_entropy,
+)
+from repro.training.optimizer import AdamW, AdamWState, cosine_schedule, global_norm
+from repro.training.steps import (
+    make_decode_step,
+    make_grpo_step,
+    make_loss_fn,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "AdamW",
+    "AdamWState",
+    "cosine_schedule",
+    "global_norm",
+    "group_relative_advantages",
+    "grpo_loss",
+    "lm_cross_entropy",
+    "make_decode_step",
+    "make_grpo_step",
+    "make_loss_fn",
+    "make_prefill_step",
+    "make_train_step",
+    "masked_cross_entropy",
+]

@@ -1,0 +1,78 @@
+"""Loss functions: LM cross-entropy (shifted), masked CE (encoder), and a
+GRPO-style clipped policy-gradient objective for the RL loop."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_softmax(logits: jax.Array) -> jax.Array:
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def lm_cross_entropy(
+    logits: jax.Array,  # [B, S, V]
+    tokens: jax.Array,  # [B, S]
+    *,
+    text_offset: int = 0,  # VLM: logits include a patch prefix of this length
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE: logits[:, t] predicts tokens[:, t+1]."""
+    lp = _log_softmax(logits[:, text_offset:-1])
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean(jnp.argmax(lp, axis=-1) == tgt)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def masked_cross_entropy(
+    logits: jax.Array,  # [B, S, V]
+    targets: jax.Array,  # [B, S]
+    mask: jax.Array,  # [B, S] bool (True = scored position)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    lp = _log_softmax(logits)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = (nll * m).sum() / denom
+    acc = ((jnp.argmax(lp, axis=-1) == targets) * m).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def grpo_loss(
+    logits: jax.Array,  # [B, S, V] current policy
+    tokens: jax.Array,  # [B, S] sampled responses (incl. prompt prefix)
+    behavior_logprobs: jax.Array,  # [B, S-1] logprobs under the sampling policy
+    advantages: jax.Array,  # [B] group-relative advantages
+    loss_mask: jax.Array,  # [B, S-1] True on response tokens
+    *,
+    clip_eps: float = 0.2,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Clipped token-level policy gradient with group-relative advantages
+    (GRPO-style, the algorithm family the paper's workloads run: 2.1)."""
+    lp = _log_softmax(logits[:, :-1])
+    tok_lp = jnp.take_along_axis(lp, tokens[:, 1:][..., None], axis=-1)[..., 0]
+    ratio = jnp.exp(tok_lp - behavior_logprobs)
+    adv = advantages[:, None]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    per_tok = -jnp.minimum(unclipped, clipped)
+    m = loss_mask.astype(jnp.float32)
+    loss = (per_tok * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return loss, {
+        "loss": loss,
+        "mean_ratio": (ratio * m).sum() / jnp.maximum(m.sum(), 1.0),
+        "mean_advantage": jnp.mean(advantages),
+    }
+
+
+def group_relative_advantages(rewards: jax.Array, group_size: int) -> jax.Array:
+    """GRPO advantage: reward minus its prompt-group mean, normalized by the
+    group std. rewards: [B] with B = num_groups * group_size."""
+    g = rewards.reshape(-1, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    return ((g - mean) / jnp.maximum(std, 1e-6)).reshape(-1)

@@ -1,0 +1,91 @@
+"""AdamW, implemented directly on pytrees (no optax dependency).
+
+Moments may be kept in bf16 (``state_dtype``) — at 671B-scale this halves
+optimizer memory, the difference between fitting and not fitting a v5e pod
+(EXPERIMENTS.md records both). Moment shardings mirror the parameter
+shardings, so FSDP shards optimizer state exactly like ZeRO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Any  # first moment, like params
+    nu: Any  # second moment, like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = jnp.float32  # jnp.bfloat16 halves optimizer memory
+    grad_clip: float = 1.0
+    #: optional lr schedule step -> multiplier
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(
+        self, grads: Any, state: AdamWState, params: Any
+    ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = jnp.asarray(self.lr, jnp.float32)
+        if self.schedule is not None:
+            lr = lr * self.schedule(step)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+            nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mu_hat = mu_n / c1
+            nu_hat = nu_n / c2
+            delta = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return p_new, mu_n.astype(self.state_dtype), nu_n.astype(self.state_dtype)
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        p_new = jax.tree.unflatten(treedef, [t[0] for t in flat])
+        mu_new = jax.tree.unflatten(treedef, [t[1] for t in flat])
+        nu_new = jax.tree.unflatten(treedef, [t[2] for t in flat])
+        return p_new, AdamWState(step=step, mu=mu_new, nu=nu_new)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_schedule(warmup: int, total: int) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+    return fn

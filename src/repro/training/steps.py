@@ -1,0 +1,116 @@
+"""Step factories: train / prefill / decode, shared by examples, smoke
+tests and the multi-pod dry-run.
+
+The returned functions are pure (params, opt_state, batch) -> ... and are
+jitted by the caller with in/out shardings from ``repro.sharding.rules``;
+GSPMD propagates everything else.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AUDIO, VLM, ModelConfig
+from repro.training import objectives
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def make_loss_fn(model, cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits = model.forward(params, batch)
+        if cfg.family == AUDIO:
+            return objectives.masked_cross_entropy(logits, batch["targets"], batch["mask"])
+        offset = cfg.num_patches if cfg.family == VLM else 0
+        return objectives.lm_cross_entropy(logits, batch["tokens"], text_offset=offset)
+
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    cfg: ModelConfig,
+    opt: AdamW,
+    *,
+    accum: int = 1,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``accum > 1`` runs that many sequential microbatches (the
+    leading batch dim must divide evenly) and averages gradients."""
+    loss_fn = make_loss_fn(model, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
+        if accum == 1:
+            grads, metrics = single(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+            )
+
+            def body(carry, mb):
+                grads_acc = carry
+                g, m = single(params, mb)
+                return jax.tree.map(jnp.add, grads_acc, g), m
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache, cache_len = model.prefill(params, batch)
+        return logits, cache, cache_len
+
+    return prefill_step
+
+
+def make_decode_step(model, *, ring: bool = False) -> Callable:
+    """One serve_step: append one token to the KV/recurrent cache."""
+    kwargs = {}
+    if ring:
+        kwargs["ring"] = True
+
+    def decode_step(params, cache, tokens, cache_len):
+        try:
+            return model.decode(params, cache, tokens, cache_len, **kwargs)
+        except TypeError:  # families without a ring-cache mode
+            return model.decode(params, cache, tokens, cache_len)
+
+    return decode_step
+
+
+def make_grpo_step(model, cfg: ModelConfig, opt: AdamW) -> Callable:
+    """RL training step: GRPO clipped policy gradient over sampled rollouts."""
+
+    def loss_fn(params, batch):
+        logits = model.forward(params, {"tokens": batch["tokens"]})
+        return objectives.grpo_loss(
+            logits,
+            batch["tokens"],
+            batch["behavior_logprobs"],
+            batch["advantages"],
+            batch["loss_mask"],
+        )
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def rl_step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return rl_step

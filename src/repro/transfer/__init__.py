@@ -1,0 +1,26 @@
+"""Transfer engine package.
+
+Imports are lazy to break the ``repro.core`` <-> ``repro.transfer`` cycle
+(the client library lives in core and uses the engine; the engine raises
+core error types).
+"""
+
+__all__ = [
+    "LocalTransport",
+    "TransportError",
+    "WorkerRegistry",
+    "WorkerStore",
+    "fold_checksum",
+]
+
+
+def __getattr__(name):
+    if name == "fold_checksum":
+        from repro.transfer.checksum import checksum
+
+        return checksum
+    if name in ("LocalTransport", "TransportError", "WorkerRegistry", "WorkerStore"):
+        from repro.transfer import engine
+
+        return getattr(engine, name)
+    raise AttributeError(name)

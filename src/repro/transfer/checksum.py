@@ -1,0 +1,60 @@
+"""End-to-end transfer checksums (4.6).
+
+TensorHub attaches a per-unit checksum to every published reference and
+validates it after transfer. We use a position-weighted Fletcher-style fold
+over 32-bit words:
+
+    s1 = sum(w_i)                 mod 2^32
+    s2 = sum(((i & 0xffff)+1) * w_i) mod 2^32
+    checksum = (s2 << 32) | s1
+
+The position weight catches reordering/offset bugs that a plain sum misses.
+All arithmetic is mod-2^32, so the *same* value is computed by
+
+* this NumPy implementation (host side, used by the real transport),
+* the pure-jnp oracle ``repro.kernels.checksum.ref`` (int32 wraparound), and
+* the Pallas TPU kernel ``repro.kernels.checksum`` (device side, overlappable
+  with the RDMA transfer, per 4.6).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK32 = np.uint64(0xFFFFFFFF)
+
+
+def _as_words(buf: bytes | bytearray | memoryview | np.ndarray) -> np.ndarray:
+    if isinstance(buf, np.ndarray):
+        raw = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+    else:
+        raw = np.frombuffer(buf, dtype=np.uint8)
+    pad = (-raw.size) % 4
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, dtype=np.uint8)])
+    return raw.view(np.uint32)
+
+
+def checksum(buf: bytes | bytearray | memoryview | np.ndarray) -> int:
+    """64-bit fold checksum of a byte buffer (see module docstring)."""
+    words = _as_words(buf).astype(np.uint64)
+    n = words.size
+    if n == 0:
+        return 0
+    idx = np.arange(n, dtype=np.uint64)
+    weights = (idx & np.uint64(0xFFFF)) + np.uint64(1)
+    s1 = int(words.sum() & _MASK32)
+    s2 = int((words * weights).sum() & _MASK32)
+    return (s2 << 32) | s1
+
+
+def combine(chunks: list[int]) -> int:
+    """Order-sensitive combination of per-chunk checksums (for chunked
+    verification paths): a second-level fold over the chunk checksums."""
+    acc = np.uint64(0)
+    for i, c in enumerate(chunks):
+        w = np.uint64(c & 0xFFFFFFFFFFFFFFFF)
+        acc = (acc + (np.uint64((i & 0xFFFF) + 1) * (w ^ (w >> np.uint64(32))))) & np.uint64(
+            0xFFFFFFFFFFFFFFFF
+        )
+    return int(acc)

@@ -1,0 +1,220 @@
+"""Transfer engine: worker-side data plane (4.3.2).
+
+``WorkerStore`` is the per-worker registry of weight buffers — the memory
+that the reference server hands out references *to*. The store builds the
+transfer-unit schedule (tiny-tensor compaction, 4.3.2) and serves/absorbs
+unit payloads.
+
+``Transport`` abstracts the wire. The paper's engine has three modes (RDMA
+direct / RDMA copy / TCP) built on Mooncake; in this offline repo:
+
+* :class:`LocalTransport` — real in-process byte copies between stores.
+  Used by tests and examples; exercises the exact same control plane.
+* the event-driven simulated network (``repro.transfer.simnet``) — used by
+  the benchmark harness to reproduce the paper's timing behaviour.
+* a production TPU backend would implement ``Transport`` over
+  ``jax.experimental.transfer`` cross-slice DMA; nothing above this
+  interface would change.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.errors import ChecksumError, NotRegisteredError, TensorHubError
+from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, build_units
+from repro.transfer import checksum as checksum_lib
+
+
+class TransportError(TensorHubError):
+    """The peer died or the channel broke mid-transfer; the reader reports
+    to the server and is re-routed (4.5)."""
+
+
+def tensor_meta(name: str, arr: np.ndarray) -> TensorMeta:
+    return TensorMeta(name=name, shape=tuple(arr.shape), dtype=str(arr.dtype), nbytes=arr.nbytes)
+
+
+class WorkerStore:
+    """Registered weight buffers of one shard-owning worker.
+
+    Buffers are NumPy arrays (the CPU stand-in for GPU/TPU HBM). The store
+    is thread-safe: publishes are immutable by contract, so readers take no
+    lock on the bytes themselves — only registry mutations lock, mirroring
+    one-sided RDMA semantics.
+    """
+
+    def __init__(self, worker_id: str) -> None:
+        self.worker_id = worker_id
+        self._lock = threading.Lock()
+        self._buffers: Dict[str, np.ndarray] = {}
+        self._units: List[TransferUnit] = []
+        self._metas: List[TensorMeta] = []
+        #: simulate preemption: a failed store refuses all reads
+        self.failed = False
+
+    # -- registration ----------------------------------------------------------
+
+    def register(self, named_tensors: Mapping[str, np.ndarray]) -> None:
+        with self._lock:
+            for name, arr in named_tensors.items():
+                buf = np.ascontiguousarray(arr)
+                if not buf.flags.writeable:  # e.g. np.asarray(jax_array) views
+                    buf = buf.copy()
+                self._buffers[name] = buf
+            self._rebuild_units()
+
+    def unregister(self, names: Optional[Sequence[str]] = None) -> None:
+        with self._lock:
+            if names is None:
+                self._buffers.clear()
+            else:
+                for n in names:
+                    self._buffers.pop(n, None)
+            self._rebuild_units()
+
+    def _rebuild_units(self) -> None:
+        self._metas = [tensor_meta(n, a) for n, a in self._buffers.items()]
+        self._units = build_units(self._metas)
+
+    @property
+    def units(self) -> List[TransferUnit]:
+        return list(self._units)
+
+    @property
+    def metas(self) -> List[TensorMeta]:
+        return list(self._metas)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(u.nbytes for u in self._units)
+
+    def tensors(self) -> Dict[str, np.ndarray]:
+        with self._lock:
+            return dict(self._buffers)
+
+    def get(self, name: str) -> np.ndarray:
+        return self._buffers[name]
+
+    # -- manifest / checksums ----------------------------------------------------
+
+    def build_manifest(self, *, with_checksums: bool = True) -> ShardManifest:
+        if not self._buffers:
+            raise NotRegisteredError(f"{self.worker_id}: no tensors registered")
+        sums = tuple(
+            checksum_lib.checksum(self.read_unit(u)) if with_checksums else 0
+            for u in self._units
+        )
+        return ShardManifest(
+            tensors=tuple(self._metas), units=tuple(self._units), checksums=sums
+        )
+
+    # -- unit payload serve/absorb ------------------------------------------------
+
+    def read_unit(self, unit: TransferUnit) -> np.ndarray:
+        """Serve one transfer unit as a flat byte array (zero-copy for large
+        tensors; gather-into-staging for compacted buckets — the paper's
+        RDMA-copy path)."""
+        if self.failed:
+            raise TransportError(f"{self.worker_id} is dead")
+        if not unit.is_compact:
+            arr = self._buffers.get(unit.name)
+            if arr is None:
+                raise NotRegisteredError(f"{self.worker_id}: unknown tensor {unit.name}")
+            return arr.view(np.uint8).reshape(-1)
+        staging = np.empty(unit.nbytes, dtype=np.uint8)
+        for name, off, nbytes in unit.layout:
+            src = self._buffers[name].view(np.uint8).reshape(-1)
+            staging[off : off + nbytes] = src
+        return staging
+
+    def write_unit(self, unit: TransferUnit, payload: np.ndarray) -> None:
+        """Absorb one transfer unit into the registered buffers in place."""
+        if payload.nbytes != unit.nbytes:
+            raise TensorHubError(
+                f"unit {unit.name}: payload {payload.nbytes}B != expected {unit.nbytes}B"
+            )
+        flat = payload.view(np.uint8).reshape(-1)
+        if not unit.is_compact:
+            dst = self._buffers.get(unit.name)
+            if dst is None:
+                raise NotRegisteredError(f"{self.worker_id}: unknown tensor {unit.name}")
+            dst.view(np.uint8).reshape(-1)[:] = flat
+            return
+        for name, off, nbytes in unit.layout:
+            dst = self._buffers[name].view(np.uint8).reshape(-1)
+            dst[:] = flat[off : off + nbytes]
+
+    # -- offload ------------------------------------------------------------------
+
+    def snapshot_to(self, other: "WorkerStore") -> None:
+        """Copy all registered buffers into another store (the CPU offload
+        path of the retention protocol, 3.3 — PCIe copy in the paper)."""
+        with self._lock:
+            other.register({n: a.copy() for n, a in self._buffers.items()})
+
+
+class WorkerRegistry:
+    """In-process lookup: (replica, shard_idx) -> WorkerStore.
+
+    Stands in for the RDMA address exchange: the server hands out a replica
+    name, the transport resolves it to memory it can read.
+    """
+
+    def __init__(self) -> None:
+        self._stores: Dict[Tuple[str, int], WorkerStore] = {}
+        self._lock = threading.Lock()
+
+    def add(self, replica: str, shard_idx: int, store: WorkerStore) -> None:
+        with self._lock:
+            self._stores[(replica, shard_idx)] = store
+
+    def remove(self, replica: str, shard_idx: int) -> None:
+        with self._lock:
+            self._stores.pop((replica, shard_idx), None)
+
+    def get(self, replica: str, shard_idx: int) -> WorkerStore:
+        with self._lock:
+            store = self._stores.get((replica, shard_idx))
+        if store is None or store.failed:
+            raise TransportError(f"no live store for {replica}/shard{shard_idx}")
+        return store
+
+    def fail_replica(self, replica: str) -> None:
+        """Kill every shard of a replica (spot preemption in tests)."""
+        with self._lock:
+            for (r, _), store in self._stores.items():
+                if r == replica:
+                    store.failed = True
+
+
+class LocalTransport:
+    """Real byte-copy transport between in-process stores."""
+
+    def __init__(self, registry: WorkerRegistry, *, verify_checksums: bool = True) -> None:
+        self.registry = registry
+        self.verify_checksums = verify_checksums
+        self.bytes_moved = 0
+
+    def pull_unit(
+        self,
+        src_replica: str,
+        shard_idx: int,
+        unit: TransferUnit,
+        expected_checksum: int,
+        dst_store: WorkerStore,
+    ) -> None:
+        src = self.registry.get(src_replica, shard_idx)
+        payload = src.read_unit(unit).copy()  # the wire copy
+        if self.verify_checksums and expected_checksum:
+            got = checksum_lib.checksum(payload)
+            if got != expected_checksum:
+                raise ChecksumError(
+                    f"unit {unit.name} from {src_replica}/shard{shard_idx}: "
+                    f"checksum {got:#x} != expected {expected_checksum:#x}"
+                )
+        dst_store.write_unit(unit, payload)
+        self.bytes_moved += unit.nbytes

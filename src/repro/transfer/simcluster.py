@@ -1,0 +1,543 @@
+"""Simulated TensorHub cluster: real control plane, fluid data plane.
+
+The *same* :class:`repro.core.server.ReferenceServer` used by the threaded
+client is driven here by generator processes over the discrete-event
+network (``simnet``). Weight bytes are represented by sizes only; progress
+counters, transactions, retention, scheduling and failure handling are the
+real production code paths.
+
+This module is what the benchmark harness (one module per paper figure)
+builds on, together with the calibrated baselines at the bottom (NCCL /
+UCX / object-store models, 2.3 + 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
+
+from repro.core.errors import StaleHandleError, TensorHubError
+from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.server import Assignment, ReferenceServer, offload_name
+from repro.transfer.hardware import CLUSTER, ClusterHW
+from repro.transfer.simnet import FlowKilled, Link, SimEnv, SimEvent, SimNetwork
+
+
+class PreemptedError(Exception):
+    """The worker itself was killed; its process stops executing (a real
+    preempted worker sends nothing further — in particular it must NOT
+    report its own source as failed)."""
+
+
+def make_manifest(unit_bytes: Sequence[int]) -> ShardManifest:
+    """Size-only manifest (the simulator moves no real bytes)."""
+    tensors = tuple(
+        TensorMeta(name=f"t{i}", shape=(n,), dtype="uint8", nbytes=int(n))
+        for i, n in enumerate(unit_bytes)
+    )
+    units = tuple(
+        TransferUnit(index=i, name=f"t{i}", nbytes=int(n))
+        for i, n in enumerate(unit_bytes)
+    )
+    return ShardManifest(tensors=tensors, units=units, checksums=(0,) * len(units))
+
+
+@dataclasses.dataclass
+class SimWorker:
+    """One shard-owning worker: a GPU with its NIC slice and PCIe lane."""
+
+    worker_id: str
+    node: str
+    datacenter: str
+    up: Link
+    down: Link
+    pcie: Link
+    vpc_up: Link
+    vpc_down: Link
+    is_spot: bool = False
+    alive: bool = True
+    total_stall: float = 0.0
+    _stall_since: Optional[float] = None
+
+    def stall_begin(self, now: float) -> None:
+        if self._stall_since is None:
+            self._stall_since = now
+
+    def stall_end(self, now: float) -> None:
+        if self._stall_since is not None:
+            self.total_stall += now - self._stall_since
+            self._stall_since = None
+
+
+class SimCluster:
+    """Topology + server + process plumbing."""
+
+    def __init__(
+        self,
+        *,
+        hw: ClusterHW = CLUSTER,
+        pipeline_replication: bool = True,
+        smart_skipping: bool = True,
+        control_latency: Optional[float] = None,
+        tcp_compression: float = 1.0,
+    ) -> None:
+        #: cross-DC wire-byte multiplier: int8 quantization (kernels/quant)
+        #: moves q(int8) + per-1024 f32 scales = x0.2539 of bf16 bytes at
+        #: <1% relative error (beyond-paper; EXPERIMENTS.md Perf)
+        self.tcp_compression = tcp_compression
+        self.env = SimEnv()
+        self.net = SimNetwork(self.env)
+        self.hw = hw
+        self.control_latency = (
+            hw.control_latency if control_latency is None else control_latency
+        )
+        self.server = ReferenceServer(
+            heartbeat_timeout=hw.heartbeat_timeout,
+            pipeline_replication=pipeline_replication,
+            smart_skipping=smart_skipping,
+        )
+        self.server.add_watcher(self.env.state_notify)
+        self._workers: Dict[Tuple[str, int], SimWorker] = {}
+        self._node_seq = itertools.count()
+        self.replicas: Dict[str, "SimReplica"] = {}
+
+    # -- topology -----------------------------------------------------------------
+
+    def _make_worker(
+        self, replica: str, shard_idx: int, datacenter: str, node: str, is_spot: bool
+    ) -> SimWorker:
+        hw = self.hw
+        wid = f"{replica}/shard{shard_idx}"
+        w = SimWorker(
+            worker_id=wid,
+            node=node,
+            datacenter=datacenter,
+            up=self.net.link(f"{node}/{wid}:up", hw.rdma_per_shard),
+            down=self.net.link(f"{node}/{wid}:down", hw.rdma_per_shard),
+            pcie=self.net.link(f"{node}/{wid}:pcie", hw.pcie),
+            vpc_up=self.net.link(f"{node}:vpc_up", hw.vpc_per_node),
+            vpc_down=self.net.link(f"{node}:vpc_down", hw.vpc_per_node),
+            is_spot=is_spot,
+        )
+        self._workers[(replica, shard_idx)] = w
+        return w
+
+    def worker(self, replica: str, shard_idx: int) -> SimWorker:
+        # offload twins live on the origin replica's nodes (CPU memory)
+        key = (replica, shard_idx)
+        if key not in self._workers and replica.endswith("@offload"):
+            origin = replica[: -len("@offload")]
+            return self._workers[(origin, shard_idx)]
+        return self._workers[key]
+
+    def add_replica(
+        self,
+        model: str,
+        name: str,
+        num_shards: int,
+        *,
+        datacenter: str = "dc0",
+        nodes: Optional[Sequence[str]] = None,
+        shards_per_node: int = 8,
+        is_spot: bool = False,
+        retain: Optional[object] = None,
+        offload_seeding: bool = False,
+        unit_bytes: Sequence[int] = (),
+    ) -> "SimReplica":
+        rep = SimReplica(
+            cluster=self,
+            model=model,
+            name=name,
+            num_shards=num_shards,
+            datacenter=datacenter,
+            nodes=nodes,
+            shards_per_node=shards_per_node,
+            is_spot=is_spot,
+            retain=retain,
+            offload_seeding=offload_seeding,
+            unit_bytes=list(unit_bytes),
+        )
+        self.replicas[name] = rep
+        return rep
+
+    # -- failure injection ------------------------------------------------------------
+
+    def kill_replica(self, name: str) -> None:
+        """Spot preemption / node failure: immediate, no grace (5.3)."""
+        rep = self.replicas.get(name)
+        if rep is not None:
+            for s in rep.shards:
+                s.worker.alive = False
+                s.dead = True
+        # flows from/to the victim die; readers notice after the RDMA timeout
+        self.net.kill_flows(
+            lambda f: f.tag.startswith(f"{name}/") or f"->{name}/" in f.tag,
+            notice_delay=self.hw.rdma_fail_detect,
+        )
+        # the server learns via missed heartbeats
+        self.env.schedule(self.hw.heartbeat_timeout, lambda: self._server_fail(name))
+        self._notify_progress_keys(name)
+
+    def _server_fail(self, name: str) -> None:
+        for model in list(self.server._models):  # noqa: SLF001 — harness hook
+            try:
+                self.server.fail_replica(model, name, reason="heartbeat timeout")
+            except TensorHubError:
+                pass
+        self._notify_progress_keys(name)
+
+    def _notify_progress_keys(self, name: str) -> None:
+        rep = self.replicas.get(name)
+        n = rep.num_shards if rep is not None else 64
+        for i in range(n):
+            self.env.key_notify(("progress", name, i))
+            self.env.key_notify(("progress", offload_name(name), i))
+
+    # -- metrics -------------------------------------------------------------------------
+
+    def total_stall(self, replicas: Optional[Sequence[str]] = None) -> float:
+        names = self.replicas.keys() if replicas is None else replicas
+        return sum(
+            s.worker.total_stall for n in names for s in self.replicas[n].shards
+        )
+
+    def per_worker_stalls(self, replicas: Sequence[str]) -> List[float]:
+        return [s.worker.total_stall for n in replicas for s in self.replicas[n].shards]
+
+    def run(self, until: float = math.inf) -> float:
+        return self.env.run(until)
+
+
+class SimShard:
+    """Generator-based mirror of ``repro.core.client.ShardHandle``."""
+
+    def __init__(self, replica: "SimReplica", shard_idx: int, worker: SimWorker) -> None:
+        self.rep = replica
+        self.idx = shard_idx
+        self.worker = worker
+        self.dead = False
+        self._op = itertools.count()
+        self._off_op = itertools.count(1_000_000)
+        self._seeding: set = set()
+
+    # plumbing ------------------------------------------------------------------
+
+    @property
+    def env(self) -> SimEnv:
+        return self.rep.cluster.env
+
+    @property
+    def server(self) -> ReferenceServer:
+        return self.rep.cluster.server
+
+    @property
+    def hw(self) -> ClusterHW:
+        return self.rep.cluster.hw
+
+    def _ctrl(self) -> SimEvent:
+        return self.env.timeout(self.rep.cluster.control_latency)
+
+    # Table-2 ops (generators) -----------------------------------------------------
+
+    def g_open(self) -> Generator:
+        info = WorkerInfo(
+            worker_id=self.worker.worker_id,
+            node=self.worker.node,
+            datacenter=self.worker.datacenter,
+            is_spot=self.worker.is_spot,
+        )
+        yield self._ctrl()
+        self.server.open(
+            self.rep.model,
+            self.rep.name,
+            self.rep.num_shards,
+            self.idx,
+            worker=info,
+            retain=self.rep.retain,
+        )
+        self.server.register(self.rep.model, self.rep.name, self.idx)
+
+    def g_publish(self, version: int) -> Generator:
+        yield self._ctrl()
+        self.server.publish(
+            self.rep.model,
+            self.rep.name,
+            self.idx,
+            version,
+            self.rep.manifest,
+            op_id=next(self._op),
+        )
+        self.env.key_notify(("progress", self.rep.name, self.idx))
+
+    def g_unpublish(self) -> Generator:
+        yield self._ctrl()
+        res = self.server.unpublish(
+            self.rep.model, self.rep.name, self.idx, op_id=next(self._op)
+        )
+        if res.offload_required and res.offload_version is not None:
+            yield from self._g_offload_copy(res.offload_version)
+        yield from self._g_wait_drained()
+
+    def g_replicate(self, spec, *, stall: bool = True) -> Generator:
+        if stall:
+            self.worker.stall_begin(self.env.now)
+        op = next(self._op)
+        yield self._ctrl()
+        assignment = self.server.begin_replicate(
+            self.rep.model, self.rep.name, self.idx, spec, op_id=op
+        )
+        while assignment is None:
+            yield self.env.state_wait()
+            assignment = self.server.redeem(self.rep.model, self.rep.name, op_id=op)
+        yield from self._g_pull(assignment, dest=self.rep.name)
+        if stall:
+            self.worker.stall_end(self.env.now)
+        return assignment.version
+
+    def g_update(self, spec="latest", *, stall: bool = True) -> Generator:
+        """One update() poll; returns True if the weights changed."""
+        op = next(self._op)
+        yield self._ctrl()
+        d = self.server.begin_update(
+            self.rep.model,
+            self.rep.name,
+            self.idx,
+            spec,
+            op_id=op,
+            offload_seeding=self.rep.offload_seeding,
+        )
+        if d.seed_started and d.seed_version is not None:
+            if d.seed_version not in self._seeding:
+                self._seeding.add(d.seed_version)
+                self.env.process(self._g_seed_pull(d.seed_version))
+        if not d.updated:
+            return False
+        if stall:
+            self.worker.stall_begin(self.env.now)
+        if d.offload_required and d.offload_version is not None:
+            yield from self._g_offload_copy(d.offload_version)
+        yield from self._g_wait_drained()
+        assert d.assignment is not None
+        yield from self._g_pull(d.assignment, dest=self.rep.name)
+        if stall:
+            self.worker.stall_end(self.env.now)
+        return True
+
+    # internals ---------------------------------------------------------------------
+
+    def _g_wait_drained(self) -> Generator:
+        while not self.server.finish_unpublish(self.rep.model, self.rep.name):
+            yield self.env.state_wait()
+
+    def _g_offload_copy(self, version: int) -> Generator:
+        """Retention offload: GPU -> CPU over PCIe, then publish_offload."""
+        nbytes = self.rep.shard_bytes
+        yield self.rep.cluster.net.flow(
+            nbytes, [self.worker.pcie], tag=f"{self.rep.name}/s{self.idx}:offload"
+        )
+        yield self._ctrl()
+        self.server.publish_offload(
+            self.rep.model,
+            self.rep.name,
+            self.idx,
+            version,
+            self.rep.manifest,
+            op_id=next(self._op),
+        )
+        self.env.key_notify(("progress", offload_name(self.rep.name), self.idx))
+
+    def _flow_for_unit(
+        self, src_replica: str, unit: TransferUnit, transport: str, dest_name: str
+    ) -> SimEvent:
+        cluster = self.rep.cluster
+        src_w = cluster.worker(src_replica, self.idx)
+        dst_w = self.worker
+        hw = self.hw
+        if src_w.node == dst_w.node:
+            links = [dst_w.pcie]  # local CPU<->GPU consumption (seed twins)
+            cap = hw.pcie
+        elif transport == "tcp":
+            links = [src_w.vpc_up, dst_w.vpc_down]
+            # WAN TCP streams are stream-limited before they are NIC-limited
+            cap = min(hw.tensorhub_tcp_eff * hw.vpc_per_node, hw.tcp_stream_per_shard)
+        else:
+            links = [src_w.up, dst_w.down]
+            cap = hw.tensorhub_rdma_eff * hw.rdma_per_shard
+        nbytes = unit.nbytes
+        if transport == "tcp" and cluster.tcp_compression < 1.0:
+            nbytes = unit.nbytes * cluster.tcp_compression
+        tag = f"{src_replica}/s{self.idx}->{dest_name}/s{self.idx}"
+        return cluster.net.flow(
+            nbytes, links, rate_cap=cap, latency=hw.unit_latency, tag=tag
+        )
+
+    def _g_pull(self, assignment: Assignment, *, dest: str) -> Generator:
+        """The pipeline-replication read loop (4.3.3) in virtual time.
+
+        Progress waits use *keyed* events ("one wakeup per counter advance
+        per chained reader") instead of the global state event — with a
+        periodic re-check as a safety net for missed failure notifications.
+        """
+        env = self.env
+        version = assignment.version
+        manifest = self.rep.manifest
+        units = manifest.units
+        source = assignment.source
+        transport = assignment.transport
+        done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
+        while done < len(units):
+            if self.dead:
+                raise PreemptedError(self.worker.worker_id)
+            avail = -1
+            while True:
+                try:
+                    avail = self.server.shard_progress(
+                        self.rep.model, source, version, self.idx
+                    )
+                except (StaleHandleError, TensorHubError):
+                    avail = -1
+                    break
+                if avail > done:
+                    break
+                yield env.any_of(
+                    env.key_wait(("progress", source, self.idx)), env.timeout(0.5)
+                )
+                if self.dead:
+                    raise PreemptedError(self.worker.worker_id)
+            if avail < 0:
+                source, transport = yield from self._g_reroute(dest, source)
+                continue
+            failed = False
+            for i in range(done, avail):
+                try:
+                    yield self._flow_for_unit(source, units[i], transport, dest)
+                except FlowKilled:
+                    if self.dead:
+                        raise PreemptedError(self.worker.worker_id)
+                    source, transport = yield from self._g_reroute(dest, source)
+                    failed = True
+                    break
+                done += 1
+                self.server.update_progress(
+                    self.rep.model, dest, self.idx, version, done
+                )
+                env.key_notify(("progress", dest, self.idx))
+            if failed:
+                continue
+        yield self._ctrl()
+        self.server.complete_replicate(
+            self.rep.model,
+            dest,
+            self.idx,
+            version,
+            op_id=next(self._off_op) if dest != self.rep.name else next(self._op),
+        )
+
+    def _g_reroute(self, dest: str, dead_source: str) -> Generator:
+        if self.dead:
+            raise PreemptedError(self.worker.worker_id)
+        yield self._ctrl()
+        self.server.report_transfer_failure(self.rep.model, dest, dead_source)
+        while True:
+            new = self.server.get_assignment(self.rep.model, dest)
+            if new is not None:
+                return new.source, new.transport
+            yield self.env.state_wait()
+            if self.dead:
+                raise PreemptedError(self.worker.worker_id)
+
+    def _g_seed_pull(self, version: int) -> Generator:
+        """Background cross-DC fetch into CPU memory (offload seeding,
+        4.3.4) — does NOT count as GPU stall."""
+        twin = offload_name(self.rep.name)
+        while True:
+            assignment = self.server.get_assignment(self.rep.model, twin)
+            if assignment is not None:
+                break
+            yield self.env.state_wait()
+        yield from self._g_pull(assignment, dest=twin)
+
+
+class SimReplica:
+    """A model-parallel group of SimShards."""
+
+    def __init__(
+        self,
+        *,
+        cluster: SimCluster,
+        model: str,
+        name: str,
+        num_shards: int,
+        datacenter: str,
+        nodes: Optional[Sequence[str]],
+        shards_per_node: int,
+        is_spot: bool,
+        retain: Optional[object],
+        offload_seeding: bool,
+        unit_bytes: List[int],
+    ) -> None:
+        self.cluster = cluster
+        self.model = model
+        self.name = name
+        self.num_shards = num_shards
+        self.datacenter = datacenter
+        self.is_spot = is_spot
+        self.retain = retain
+        self.offload_seeding = offload_seeding
+        self.unit_bytes = unit_bytes
+        self.manifest = make_manifest(unit_bytes)
+        self.shard_bytes = sum(unit_bytes)
+        self.shards: List[SimShard] = []
+        for i in range(num_shards):
+            node = (
+                nodes[i // shards_per_node]
+                if nodes is not None
+                else f"{datacenter}/{name}-n{i // shards_per_node}"
+            )
+            w = cluster._make_worker(name, i, datacenter, node, is_spot)
+            self.shards.append(SimShard(self, i, w))
+
+    # -- group-level helpers: run an op on every shard, fire when all done ------------
+
+    def _all(self, gens: List[Generator]) -> SimEvent:
+        """Start one process per shard; the returned event fires (with the
+        list of per-shard results) when all of them finished. A failing
+        shard fails the group event."""
+        env = self.cluster.env
+        done = SimEvent(env)
+        remaining = len(gens)
+        results: List[object] = [None] * len(gens)
+
+        def on_finish(i: int) -> Callable[[SimEvent], None]:
+            def cb(ev: SimEvent) -> None:
+                nonlocal remaining
+                if ev.error is not None:
+                    done.fail(ev.error)
+                    return
+                results[i] = ev.value
+                remaining -= 1
+                if remaining == 0:
+                    done.succeed(results)
+
+            return cb
+
+        for i, g in enumerate(gens):
+            env.process(g).add_callback(on_finish(i))
+        return done
+
+    def open(self) -> SimEvent:
+        return self._all([s.g_open() for s in self.shards])
+
+    def publish(self, version: int) -> SimEvent:
+        return self._all([s.g_publish(version) for s in self.shards])
+
+    def unpublish(self) -> SimEvent:
+        return self._all([s.g_unpublish() for s in self.shards])
+
+    def replicate(self, spec="latest", *, stall: bool = True) -> SimEvent:
+        return self._all([s.g_replicate(spec, stall=stall) for s in self.shards])
+
+    def update(self, spec="latest", *, stall: bool = True) -> SimEvent:
+        return self._all([s.g_update(spec, stall=stall) for s in self.shards])

@@ -1,0 +1,398 @@
+"""Discrete-event network simulator with max-min fair bandwidth sharing.
+
+The container has one CPU and no RNIC, so the paper's *timing* behaviour is
+reproduced with a calibrated fluid-flow model: each transfer is a flow over
+a set of unidirectional links (full-duplex NICs are two links); active flows
+share every link max-min fairly (progressive filling), which naturally
+produces the contention effects the paper measures — e.g. the quadratic
+stall growth of single-rooted fan-out in Fig 7b vs the linear growth with
+pipeline replication.
+
+The *control plane* driven on top of this simulator is the real
+``ReferenceServer`` — identical code to the threaded client path.
+
+Processes are Python generators that yield:
+
+* ``env.timeout(dt)``   — resume after dt seconds of virtual time
+* ``SimEvent``          — resume when the event fires (``ev.succeed()``)
+* ``network.flow(...)`` — resume when the flow completes (raises
+  ``FlowKilled`` into the generator if a link endpoint died)
+
+Determinism: the event heap is ordered by (time, seq); no wall-clock or
+randomness enters unless a benchmark injects a seeded RNG.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, Generator, Iterable, List, Optional, Set, Tuple
+
+Process = Generator
+
+
+class FlowKilled(Exception):
+    """The flow's src/dst vanished; delivered after the detection delay."""
+
+
+class SimEvent:
+    """One-shot event; processes may wait on it, it may carry a value."""
+
+    __slots__ = ("env", "_done", "_value", "_error", "_waiters", "_callbacks")
+
+    def __init__(self, env: "SimEnv") -> None:
+        self.env = env
+        self._done = False
+        self._value = None
+        self._error: Optional[BaseException] = None
+        self._waiters: List[Process] = []
+        self._callbacks: List[Callable[["SimEvent"], None]] = []
+
+    @property
+    def triggered(self) -> bool:
+        return self._done
+
+    @property
+    def value(self):
+        return self._value
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._error
+
+    def add_callback(self, cb: Callable[["SimEvent"], None]) -> None:
+        if self._done:
+            self.env.schedule(0.0, lambda: cb(self))
+        else:
+            self._callbacks.append(cb)
+
+    def succeed(self, value=None) -> None:
+        if self._done:
+            return
+        self._done = True
+        self._value = value
+        for p in self._waiters:
+            self.env._resume(p, value=value)
+        self._waiters.clear()
+        for cb in self._callbacks:
+            cb(self)
+        self._callbacks.clear()
+
+    def fail(self, error: BaseException) -> None:
+        if self._done:
+            return
+        self._done = True
+        self._error = error
+        for p in self._waiters:
+            self.env._resume(p, error=error)
+        self._waiters.clear()
+        for cb in self._callbacks:
+            cb(self)
+        self._callbacks.clear()
+
+
+class SimEnv:
+    """Minimal deterministic event loop (SimPy-flavoured)."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        #: broadcast event for "server state changed" waiters; re-armed on
+        #: every notify (condition-variable analogue)
+        self._state_event = SimEvent(self)
+        #: keyed one-shot events for targeted wakeups (e.g. per-source
+        #: progress-counter advances) — avoids thundering-herd wake storms
+        self._keyed: Dict[object, SimEvent] = {}
+
+    # -- scheduling --------------------------------------------------------------
+
+    def schedule(self, delay: float, cb: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (self.now + max(delay, 0.0), next(self._seq), cb))
+
+    def timeout(self, delay: float) -> SimEvent:
+        ev = SimEvent(self)
+        self.schedule(delay, ev.succeed)
+        return ev
+
+    def state_wait(self) -> SimEvent:
+        """Wait until the next state_notify() (server watcher bump)."""
+        return self._state_event
+
+    def state_notify(self) -> None:
+        ev = self._state_event
+        self._state_event = SimEvent(self)
+        ev.succeed()
+
+    def key_wait(self, key: object) -> SimEvent:
+        """Wait until the next key_notify(key)."""
+        ev = self._keyed.get(key)
+        if ev is None:
+            ev = SimEvent(self)
+            self._keyed[key] = ev
+        return ev
+
+    def key_notify(self, key: object) -> None:
+        ev = self._keyed.pop(key, None)
+        if ev is not None:
+            ev.succeed()
+
+    def any_of(self, *events: SimEvent) -> SimEvent:
+        """Combined event that fires when the first constituent fires."""
+        out = SimEvent(self)
+        for ev in events:
+            ev.add_callback(
+                lambda e: out.fail(e.error) if e.error is not None else out.succeed(e.value)
+            )
+        return out
+
+    # -- processes ----------------------------------------------------------------
+
+    def process(self, gen: Process) -> SimEvent:
+        """Start a generator process; returns an event that fires with the
+        generator's return value (or error)."""
+        done = SimEvent(self)
+        self.schedule(0.0, lambda: self._step(gen, done, None, None))
+        return done
+
+    def _resume(self, gen_ctx, value=None, error: Optional[BaseException] = None) -> None:
+        gen, done = gen_ctx
+        self.schedule(0.0, lambda: self._step(gen, done, value, error))
+
+    def _step(self, gen: Process, done: SimEvent, value, error) -> None:
+        try:
+            if error is not None:
+                yielded = gen.throw(error)
+            else:
+                yielded = gen.send(value)
+        except StopIteration as stop:
+            done.succeed(stop.value)
+            return
+        except BaseException as exc:  # propagate process crash to waiters
+            done.fail(exc)
+            return
+        if isinstance(yielded, SimEvent):
+            if yielded.triggered:
+                if yielded._error is not None:
+                    self._resume((gen, done), error=yielded._error)
+                else:
+                    self._resume((gen, done), value=yielded._value)
+            else:
+                yielded._waiters.append((gen, done))
+        else:
+            raise TypeError(f"process yielded {yielded!r}; expected SimEvent")
+
+    # -- run ----------------------------------------------------------------------
+
+    def run(self, until: float = math.inf) -> float:
+        while self._heap and self._heap[0][0] <= until:
+            t, _, cb = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            cb()
+        if math.isfinite(until):
+            self.now = max(self.now, until)
+        return self.now
+
+
+# ---------------------------------------------------------------------------
+# Fluid-flow network
+# ---------------------------------------------------------------------------
+
+
+class Link:
+    """Unidirectional capacity (bytes/s). A full-duplex NIC is two links."""
+
+    __slots__ = ("name", "capacity", "flows")
+
+    def __init__(self, name: str, capacity: float) -> None:
+        self.name = name
+        self.capacity = capacity
+        self.flows: Set["Flow"] = set()
+
+    def __repr__(self) -> str:
+        return f"Link({self.name}, {self.capacity/1e9:.1f} GB/s, {len(self.flows)} flows)"
+
+
+class Flow:
+    __slots__ = (
+        "nbytes", "links", "rate_cap", "remaining", "rate", "event", "dead", "tag",
+    )
+
+    def __init__(
+        self,
+        nbytes: float,
+        links: Tuple[Link, ...],
+        rate_cap: float,
+        event: SimEvent,
+        tag: str = "",
+    ) -> None:
+        self.nbytes = nbytes
+        self.links = links
+        self.rate_cap = rate_cap
+        self.remaining = float(nbytes)
+        self.rate = 0.0
+        self.event = event
+        self.dead = False
+        self.tag = tag
+
+
+class SimNetwork:
+    """Flows over links with max-min fair sharing, on a SimEnv."""
+
+    def __init__(self, env: SimEnv) -> None:
+        self.env = env
+        self._links: Dict[str, Link] = {}
+        self._flows: Set[Flow] = set()
+        self._last_advance = 0.0
+        self.bytes_delivered = 0.0
+        #: per-link cumulative bytes (for traffic accounting, Fig 12c)
+        self.link_bytes: Dict[str, float] = {}
+
+    # -- topology -------------------------------------------------------------------
+
+    def link(self, name: str, capacity: Optional[float] = None) -> Link:
+        lk = self._links.get(name)
+        if lk is None:
+            if capacity is None:
+                raise KeyError(f"unknown link {name}")
+            lk = Link(name, capacity)
+            self._links[name] = lk
+            self.link_bytes[name] = 0.0
+        elif capacity is not None and lk.capacity != capacity:
+            raise ValueError(f"link {name} redefined with different capacity")
+        return lk
+
+    # -- flows ------------------------------------------------------------------------
+
+    def flow(
+        self,
+        nbytes: float,
+        links: Iterable[Link],
+        *,
+        rate_cap: float = math.inf,
+        latency: float = 0.0,
+        tag: str = "",
+    ) -> SimEvent:
+        """Start a flow; returns its completion event. ``latency`` models the
+        fixed per-message setup cost (registration, rendezvous, headers)."""
+        ev = SimEvent(self.env)
+        fl = Flow(nbytes, tuple(links), rate_cap, ev, tag)
+        if nbytes <= 0:
+            self.env.schedule(latency, ev.succeed)
+            return ev
+
+        def start() -> None:
+            if fl.dead:
+                return
+            self._advance_to_now()
+            self._flows.add(fl)
+            for lk in fl.links:
+                lk.flows.add(fl)
+            self._reallocate()
+
+        self.env.schedule(latency, start)
+        return ev
+
+    def kill_flows(self, pred: Callable[[Flow], bool], *, notice_delay: float = 0.0) -> int:
+        """Abort flows matching pred; waiters get FlowKilled after
+        notice_delay (the reader-side failure-detection timeout, 5.1.3)."""
+        victims = [f for f in self._flows if pred(f)]
+        self._advance_to_now()
+        for fl in victims:
+            self._detach(fl)
+            fl.dead = True
+            self.env.schedule(
+                notice_delay, (lambda f=fl: f.event.fail(FlowKilled(f.tag)))
+            )
+        if victims:
+            self._reallocate()
+        return len(victims)
+
+    # -- fluid model ---------------------------------------------------------------------
+
+    def _detach(self, fl: Flow) -> None:
+        self._flows.discard(fl)
+        for lk in fl.links:
+            lk.flows.discard(fl)
+
+    def _advance_to_now(self) -> None:
+        """Credit every active flow with rate * elapsed."""
+        dt = self.env.now - self._last_advance
+        self._last_advance = self.env.now
+        if dt <= 0:
+            return
+        finished: List[Flow] = []
+        for fl in self._flows:
+            moved = min(fl.remaining, fl.rate * dt)
+            fl.remaining -= moved
+            self.bytes_delivered += moved
+            for lk in fl.links:
+                self.link_bytes[lk.name] += moved
+            # relative epsilon: float rounding can strand sub-byte residues
+            # whose completion time underflows now+dt (dt ~ 1e-17 s), which
+            # would spin the event loop forever
+            if fl.remaining <= max(1e-6, fl.nbytes * 1e-9):
+                finished.append(fl)
+        for fl in finished:
+            self._detach(fl)
+            fl.event.succeed()
+
+    def _reallocate(self) -> None:
+        """Max-min fair (progressive filling) over all active flows."""
+        flows = list(self._flows)
+        if not flows:
+            return
+        unfixed: Set[Flow] = set(flows)
+        cap: Dict[Link, float] = {}
+        for fl in flows:
+            for lk in fl.links:
+                cap.setdefault(lk, lk.capacity)
+        for fl in flows:
+            fl.rate = 0.0
+        while unfixed:
+            # bottleneck link: min fair share among links carrying unfixed flows
+            best_share = math.inf
+            for lk, c in cap.items():
+                n = sum(1 for f in lk.flows if f in unfixed)
+                if n:
+                    best_share = min(best_share, c / n)
+            # flows individually capped below the share are fixed at cap
+            capped = [f for f in unfixed if f.rate_cap <= best_share]
+            if capped:
+                for f in capped:
+                    f.rate = f.rate_cap
+                    unfixed.discard(f)
+                    for lk in f.links:
+                        cap[lk] = max(cap[lk] - f.rate_cap, 0.0)
+                continue
+            if not math.isfinite(best_share):
+                break
+            # fix all flows crossing the bottleneck link(s)
+            for lk, c in list(cap.items()):
+                n = sum(1 for f in lk.flows if f in unfixed)
+                if n and abs(c / n - best_share) < 1e-12:
+                    for f in [f for f in lk.flows if f in unfixed]:
+                        f.rate = best_share
+                        unfixed.discard(f)
+                        for l2 in f.links:
+                            cap[l2] = max(cap[l2] - best_share, 0.0)
+        self._schedule_next_completion()
+
+    def _schedule_next_completion(self) -> None:
+        # Schedule a tick at the earliest completion under *current* rates.
+        # Rates may change before it fires (stale ticks advance the fluid
+        # model and recompute — harmless); every reallocation re-schedules,
+        # so the true earliest completion is always covered.
+        nxt = math.inf
+        for fl in self._flows:
+            if fl.rate > 0:
+                nxt = min(nxt, fl.remaining / fl.rate)
+        if not math.isfinite(nxt):
+            return
+
+        def tick() -> None:
+            self._advance_to_now()
+            self._reallocate()
+
+        self.env.schedule(nxt, tick)

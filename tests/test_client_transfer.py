@@ -1,0 +1,146 @@
+"""Threaded-client end-to-end tests: real byte movement through the
+LocalTransport, checksum verification, peer chaining, failure re-route."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import ChecksumError, ReferenceServer, TensorHubClient
+
+
+def tensors(seed: float, n=3, shape=(32, 16)):
+    return {f"w{i}": np.full(shape, seed + i, dtype=np.float32) for i in range(n)}
+
+
+def group(hub, name, shards, register_with=None, **kw):
+    handles = [hub.open("m", name, shards, i, **kw) for i in range(shards)]
+    if register_with is not None:
+        for h in handles:
+            h.register(register_with())
+    return handles
+
+
+def run_group(handles, fn):
+    errs = []
+
+    def wrap(h):
+        try:
+            fn(h)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=wrap, args=(h,)) for h in handles]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    if errs:
+        raise errs[0]
+
+
+class TestEndToEnd:
+    def test_publish_replicate_bytes(self):
+        hub = TensorHubClient(ReferenceServer())
+        pubs = group(hub, "pub", 2, lambda: tensors(1.0))
+        run_group(pubs, lambda h: h.publish(0))
+        subs = group(hub, "sub", 2, lambda: tensors(0.0))
+        got = []
+        run_group(subs, lambda h: got.append(h.replicate("latest")))
+        assert got == [0, 0]
+        for h in subs:
+            assert np.allclose(h.store.get("w2"), 3.0)
+
+    def test_peer_to_peer_chain(self):
+        """A replica created by replicate() serves the next reader."""
+        server = ReferenceServer()
+        hub = TensorHubClient(server)
+        pubs = group(hub, "pub", 1, lambda: tensors(5.0))
+        run_group(pubs, lambda h: h.publish(0))
+        r1 = group(hub, "r1", 1, lambda: tensors(0.0))
+        run_group(r1, lambda h: h.replicate(0))
+        r2 = group(hub, "r2", 1, lambda: tensors(0.0))
+        assignments = []
+        orig = server.begin_replicate
+
+        def spy(*a, **k):
+            res = orig(*a, **k)
+            assignments.append(res)
+            return res
+
+        server.begin_replicate = spy
+        run_group(r2, lambda h: h.replicate(0))
+        assert assignments[0].source in ("r1", "pub")
+        assert np.allclose(r2[0].store.get("w0"), 5.0)
+
+    def test_update_polling(self):
+        hub = TensorHubClient(ReferenceServer())
+        pubs = group(hub, "pub", 2, lambda: tensors(1.0), retain="latest")
+        run_group(pubs, lambda h: h.publish(0))
+        subs = group(hub, "sub", 2, lambda: tensors(0.0))
+        run_group(subs, lambda h: h.replicate("latest"))
+        # nothing new yet
+        updated = []
+        run_group(subs, lambda h: updated.append(h.update("latest")))
+        assert updated == [False, False]
+        # publisher rolls a version
+        run_group(pubs, lambda h: h.unpublish())
+        for h in pubs:
+            h.store.register(tensors(9.0))
+        run_group(pubs, lambda h: h.publish(1))
+        updated = []
+        run_group(subs, lambda h: updated.append(h.update("latest")))
+        assert updated == [True, True]
+        assert np.allclose(subs[0].store.get("w0"), 9.0)
+
+    def test_checksum_detects_contract_violation(self):
+        """Mutating published weights (contract violation) is caught by the
+        end-to-end checksum (4.6)."""
+        hub = TensorHubClient(ReferenceServer())
+        pubs = group(hub, "pub", 1, lambda: tensors(1.0))
+        run_group(pubs, lambda h: h.publish(0))
+        # violate the contract: scribble on the published buffer
+        pubs[0].store.get("w0")[:] = 777.0
+        subs = group(hub, "sub", 1, lambda: tensors(0.0))
+        with pytest.raises(ChecksumError):
+            run_group(subs, lambda h: h.replicate(0))
+
+    def test_retention_offload_roundtrip(self):
+        """Trainer unpublishes the only copy of a retained version: the
+        offload copy must serve a later reader with intact bytes."""
+        hub = TensorHubClient(ReferenceServer())
+        pubs = group(hub, "pub", 2, lambda: tensors(4.0), retain="latest")
+        run_group(pubs, lambda h: h.publish(0))
+        run_group(pubs, lambda h: h.unpublish())  # triggers offload
+        # trainer now mutates its GPU buffers freely
+        for h in pubs:
+            h.store.get("w0")[:] = -1.0
+        subs = group(hub, "sub", 2, lambda: tensors(0.0))
+        run_group(subs, lambda h: h.replicate(0))
+        assert np.allclose(subs[0].store.get("w0"), 4.0)  # offload bytes, not -1
+
+    def test_source_failure_reroutes_mid_transfer(self):
+        """Kill the assigned source once the transfer starts; the reader
+        must finish from another replica."""
+        server = ReferenceServer(pipeline_replication=True)
+        hub = TensorHubClient(server)
+        big = lambda: {f"w{i}": np.full((256, 256), float(i), np.float32) for i in range(8)}
+        pubs = group(hub, "pub", 1, big)
+        run_group(pubs, lambda h: h.publish(0))
+        r1 = group(hub, "r1", 1, big)
+        run_group(r1, lambda h: h.replicate(0))
+        r2 = group(hub, "r2", 1, big)
+
+        # r2 will be routed to r1 (least loaded); kill r1 after it starts
+        def kill_soon():
+            import time
+
+            time.sleep(0.05)
+            hub.registry.fail_replica("r1")
+            server.fail_replica("m", "r1", reason="test kill")
+
+        killer = threading.Thread(target=kill_soon)
+        killer.start()
+        run_group(r2, lambda h: h.replicate(0))
+        killer.join()
+        assert np.allclose(r2[0].store.get("w7"), 7.0)

@@ -1,0 +1,176 @@
+"""Retention protocol (3.3) and mutability contract (3.2) — unit tests +
+a hypothesis state-machine property over random op interleavings."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.errors import MutabilityViolationError
+from repro.core.server import KIND_OFFLOAD, ReferenceServer, offload_name
+
+from tests.test_server_consistency import manifest, open_replica, publish
+
+
+class TestMutabilityContract:
+    def test_publish_twice_requires_unpublish(self):
+        s = ReferenceServer()
+        open_replica(s, "t")
+        publish(s, "t", 0)
+        with pytest.raises(MutabilityViolationError):
+            publish(s, "t", 1, op=1)
+
+    def test_unpublish_then_publish_ok(self):
+        s = ReferenceServer()
+        open_replica(s, "t", retain=None)
+        publish(s, "t", 0)
+        for i in range(2):
+            s.unpublish("m", "t", i, op_id=1)
+        assert s.finish_unpublish("m", "t")
+        publish(s, "t", 1, op=2)
+        assert s.latest("m") == 1
+
+    def test_unpublish_drains_inflight_readers(self):
+        """The server must wait for in-flight replication before the
+        publisher may reuse buffers (3.2)."""
+        s = ReferenceServer()
+        open_replica(s, "t")
+        publish(s, "t", 0)
+        open_replica(s, "r")
+        for i in range(2):
+            s.begin_replicate("m", "r", i, 0, op_id=0)
+        res = s.unpublish("m", "t", 0, op_id=1)
+        s.unpublish("m", "t", 1, op_id=1)
+        assert not res.drained
+        assert not s.finish_unpublish("m", "t")  # reader still in flight
+        for i in range(2):
+            s.complete_replicate("m", "r", i, 0, op_id=1)
+        assert s.finish_unpublish("m", "t")
+
+    def test_unregister_while_published_raises(self):
+        s = ReferenceServer()
+        open_replica(s, "t")
+        publish(s, "t", 0)
+        with pytest.raises(MutabilityViolationError):
+            s.unregister("m", "t", 0)
+
+
+class TestRetentionProtocol:
+    def test_last_copy_of_retained_version_offloads(self):
+        s = ReferenceServer()
+        open_replica(s, "t", retain="latest")
+        publish(s, "t", 0)
+        res = s.unpublish("m", "t", 0, op_id=1)
+        s.unpublish("m", "t", 1, op_id=1)
+        assert res.offload_required and res.offload_version == 0
+        # completing the offload satisfies availability
+        for i in range(2):
+            s.publish_offload("m", "t", i, 0, manifest(), op_id=2)
+        assert s.finish_unpublish("m", "t")
+        assert offload_name("t") in s.list_versions("m")[0]
+
+    def test_no_offload_when_replicated_elsewhere(self):
+        s = ReferenceServer()
+        open_replica(s, "t", retain="latest")
+        open_replica(s, "r")
+        publish(s, "t", 0)
+        for i in range(2):
+            s.begin_replicate("m", "r", i, 0, op_id=0)
+        for i in range(2):
+            s.complete_replicate("m", "r", i, 0, op_id=1)
+        res = s.unpublish("m", "t", 0, op_id=2)
+        s.unpublish("m", "t", 1, op_id=2)
+        assert not res.offload_required  # the rollout holds a live copy
+
+    def test_offload_released_when_no_longer_retained(self):
+        s = ReferenceServer()
+        open_replica(s, "t", retain="latest")
+        publish(s, "t", 0)
+        res = s.unpublish("m", "t", 0, op_id=1)
+        s.unpublish("m", "t", 1, op_id=1)
+        assert res.offload_required
+        for i in range(2):
+            s.publish_offload("m", "t", i, 0, manifest(), op_id=2)
+        # a newer version shifts the retain window; the offload is released
+        publish(s, "t", 1, op=3)
+        assert 0 not in s.list_versions("m")
+        evs = s.poll_events("t/s0")
+        assert any(e.kind == "offload_release" and e.version == 0 for e in evs)
+
+    def test_spot_replicas_do_not_count_for_retention(self):
+        s = ReferenceServer()
+        open_replica(s, "t", retain="latest")
+        open_replica(s, "spot_r", spot=True)
+        publish(s, "t", 0)
+        for i in range(2):
+            s.begin_replicate("m", "spot_r", i, 0, op_id=0)
+        for i in range(2):
+            s.complete_replicate("m", "spot_r", i, 0, op_id=1)
+        res = s.unpublish("m", "t", 0, op_id=2)
+        s.unpublish("m", "t", 1, op_id=2)
+        # the only other copy is on a spot instance: still offload
+        assert res.offload_required
+
+    def test_lost_retained_version_is_graceful(self):
+        """4.5: if the last non-spot copy dies, readers get a graceful
+        unavailable (parked), not a crash."""
+        s = ReferenceServer()
+        open_replica(s, "t", retain="latest")
+        publish(s, "t", 0)
+        s.fail_replica("m", "t")
+        open_replica(s, "r")
+        a = s.begin_replicate("m", "r", 0, "latest", op_id=0)
+        assert a is None  # parked until a new version is published
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ops=st.lists(
+        st.sampled_from(["publish", "unpublish", "replicate", "update"]),
+        min_size=4,
+        max_size=24,
+    )
+)
+def test_retention_invariant_random_ops(ops):
+    """Property: after any op sequence, every version inside any live
+    replica's retain window that was ever published and still has a
+    non-spot holder (GPU or offload) remains listable — and the trainer is
+    never told to drop its last retained copy without offloading."""
+    s = ReferenceServer()
+    open_replica(s, "t", retain="latest")
+    open_replica(s, "r")
+    version = 0
+    published = False
+    r_holds = None
+    r_inflight = None
+    t_op = iter(range(1000))
+    r_op = iter(range(1000, 2000))
+    for op in ops:
+        if op == "publish" and not published:
+            version += 1
+            publish(s, "t", version, op=next(t_op))
+            published = True
+        elif op == "unpublish" and published:
+            oid = next(t_op)
+            res = s.unpublish("m", "t", 0, op_id=oid)
+            s.unpublish("m", "t", 1, op_id=oid)
+            if res.offload_required:
+                oid = next(t_op)
+                for i in range(2):
+                    s.publish_offload("m", "t", i, res.offload_version, manifest(), op_id=oid)
+            published = False
+        elif op == "replicate" and published and r_holds is None and r_inflight is None:
+            oid = next(r_op)
+            a = [s.begin_replicate("m", "r", i, "latest", op_id=oid) for i in range(2)]
+            if a[0] is not None:
+                r_inflight = (a[0].version, next(r_op))
+        elif op == "update" and r_inflight is not None:
+            v, oid = r_inflight
+            for i in range(2):
+                s.complete_replicate("m", "r", i, v, op_id=oid)
+            r_holds = v
+            r_inflight = None
+        # invariant: the latest published version is always available
+        latest = s.latest("m")
+        if latest is not None and (published or r_holds == latest):
+            listed = s.list_versions("m")
+            assert latest in listed, f"latest v{latest} lost! ops={ops}"

@@ -1,0 +1,202 @@
+"""Deterministic consistency tests for the reference server (paper 4.6):
+one test process issues requests on behalf of multiple clients in chosen
+interleavings — the FoundationDB-style simulation approach. No threads, no
+transfers, no GPUs: the control plane alone."""
+
+import pytest
+
+from repro.core.errors import (
+    ConsistencyError,
+    MutabilityViolationError,
+    StaleHandleError,
+    VersionUnavailableError,
+)
+from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.server import ReferenceServer
+
+
+def manifest(n_units=2, unit_bytes=100):
+    tensors = tuple(
+        TensorMeta(f"t{i}", (unit_bytes,), "uint8", unit_bytes) for i in range(n_units)
+    )
+    units = tuple(
+        TransferUnit(index=i, name=f"t{i}", nbytes=unit_bytes) for i in range(n_units)
+    )
+    return ShardManifest(tensors=tensors, units=units, checksums=(0,) * n_units)
+
+
+def worker(replica, shard, dc="dc0", spot=False):
+    return WorkerInfo(f"{replica}/s{shard}", f"{dc}/{replica}", dc, spot)
+
+
+def open_replica(s, name, shards=2, dc="dc0", retain=None, spot=False):
+    for i in range(shards):
+        s.open("m", name, shards, i, worker=worker(name, i, dc, spot), retain=retain)
+        s.register("m", name, i)
+
+
+def publish(s, name, version, shards=2, op=0):
+    for i in range(shards):
+        s.publish("m", name, i, version, manifest(), op_id=op)
+
+
+class TestGroupTransactions:
+    def test_fig6_interleaved_latest(self):
+        """Fig 6: shard0 of replica-0 resolves 'latest' -> v12; a new v13
+        is published in between; shard1's identical request must still see
+        v12 (the transaction snapshot), not v13."""
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        open_replica(s, "pub2")
+        open_replica(s, "reader")
+        publish(s, "pub", 12)
+        a0 = s.begin_replicate("m", "reader", 0, "latest", op_id=0)
+        assert a0 is not None and a0.version == 12
+        publish(s, "pub2", 13)  # interleaved publish
+        a1 = s.begin_replicate("m", "reader", 1, "latest", op_id=0)
+        assert a1 is not None and a1.version == 12  # consistent snapshot
+
+    def test_divergent_group_op_raises(self):
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 1)
+        open_replica(s, "r")
+        s.begin_replicate("m", "r", 0, "latest", op_id=0)
+        with pytest.raises(ConsistencyError):
+            s.begin_replicate("m", "r", 1, 0, op_id=0)  # different args
+
+    def test_double_arrival_raises(self):
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        with pytest.raises(ConsistencyError):
+            s.publish("m", "pub", 0, 1, manifest(), op_id=0)
+            s.publish("m", "pub", 0, 1, manifest(), op_id=0)
+
+    def test_update_decision_is_group_wide(self):
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        open_replica(s, "r")
+        publish(s, "pub", 0)
+        # group replicates v0
+        for i in range(2):
+            s.begin_replicate("m", "r", i, "latest", op_id=0)
+        for i in range(2):
+            s.complete_replicate("m", "r", i, 0, op_id=1)
+        d0 = s.begin_update("m", "r", 0, "latest", op_id=2)
+        assert not d0.updated  # already current
+        # interleaved: the publisher rolls to v1 between the two shards
+        for i in range(2):
+            s.unpublish("m", "pub", i, op_id=1)
+        assert s.finish_unpublish("m", "pub")
+        publish(s, "pub", 1, op=2)
+        d1 = s.begin_update("m", "r", 1, "latest", op_id=2)
+        assert d1.updated == d0.updated  # snapshot: both say False
+
+
+class TestScheduling:
+    def test_least_loaded_source(self):
+        s = ReferenceServer()
+        open_replica(s, "a")
+        open_replica(s, "b")
+        publish(s, "a", 0)
+        publish(s, "b", 0)
+        # first reader -> one of them; second reader -> the other
+        open_replica(s, "r1")
+        open_replica(s, "r2")
+        src1 = {s.begin_replicate("m", "r1", i, 0, op_id=0).source for i in range(2)}
+        src2 = {s.begin_replicate("m", "r2", i, 0, op_id=0).source for i in range(2)}
+        assert src1 != src2  # load balanced across the two replicas
+
+    def test_same_dc_preferred(self):
+        s = ReferenceServer()
+        open_replica(s, "far", dc="dc0")
+        open_replica(s, "near", dc="dc1")
+        publish(s, "far", 0)
+        publish(s, "near", 0)
+        open_replica(s, "r", dc="dc1")
+        a = s.begin_replicate("m", "r", 0, 0, op_id=0)
+        assert a.source == "near" and a.transport == "rdma"
+
+    def test_cross_dc_falls_back_to_tcp_seeding(self):
+        s = ReferenceServer()
+        open_replica(s, "far", dc="dc0")
+        publish(s, "far", 0)
+        open_replica(s, "r", dc="dc1")
+        a = s.begin_replicate("m", "r", 0, 0, op_id=0)
+        assert a.transport == "tcp" and a.seeding
+
+    def test_pipeline_source_can_be_in_progress(self):
+        s = ReferenceServer(pipeline_replication=True)
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        open_replica(s, "r1")
+        open_replica(s, "r2")
+        for i in range(2):
+            s.begin_replicate("m", "r1", i, 0, op_id=0)
+        a = s.begin_replicate("m", "r2", 0, 0, op_id=0)
+        assert a.source == "r1"  # least-loaded: the in-progress replica
+
+    def test_no_pipeline_only_published_sources(self):
+        s = ReferenceServer(pipeline_replication=False)
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        open_replica(s, "r1")
+        open_replica(s, "r2")
+        for i in range(2):
+            s.begin_replicate("m", "r1", i, 0, op_id=0)
+        a = s.begin_replicate("m", "r2", 0, 0, op_id=0)
+        assert a.source == "pub"
+
+
+class TestFailures:
+    def test_reader_rerouted_after_source_death(self):
+        s = ReferenceServer(pipeline_replication=True)
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        open_replica(s, "r1")
+        open_replica(s, "r2")
+        for i in range(2):
+            s.begin_replicate("m", "r1", i, 0, op_id=0)
+        for i in range(2):
+            assert s.begin_replicate("m", "r2", i, 0, op_id=0).source == "r1"
+        s.report_transfer_failure("m", "r2", "r1")
+        a = s.get_assignment("m", "r2")
+        assert a is not None and a.source == "pub"
+
+    def test_evicted_replica_handles_go_stale(self):
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        s.fail_replica("m", "pub")
+        with pytest.raises(StaleHandleError):
+            s.heartbeat("m", "pub", 0, now=1.0)
+
+    def test_heartbeat_timeout_eviction(self):
+        s = ReferenceServer(heartbeat_timeout=1.0)
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        s.heartbeat("m", "pub", 0, now=0.0)
+        s.heartbeat("m", "pub", 1, now=0.0)
+        assert s.tick(0.5) == []
+        assert s.tick(2.0) == ["pub"]
+        assert s.list_versions("m") == {}
+
+    def test_failed_publisher_does_not_serve(self):
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        s.fail_replica("m", "pub")
+        open_replica(s, "r")
+        with pytest.raises(VersionUnavailableError):
+            # parked is fine; direct assign must not find the dead source
+            a = s.begin_replicate("m", "r", 0, 0, op_id=0)
+            if a is None:
+                raise VersionUnavailableError("parked: acceptable")
+
+    def test_soft_state_backup_server(self):
+        """4.5: a fresh backup server needs no state transfer — the next
+        publish repopulates it."""
+        backup = ReferenceServer()
+        open_replica(backup, "pub")
+        publish(backup, "pub", 7)
+        assert backup.latest("m") == 7

