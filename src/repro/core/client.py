@@ -37,13 +37,16 @@ from repro.transfer.engine import (
 _POLL = 0.02  # condition re-check period (seconds)
 
 
-def dtype_from_str(name: str) -> np.dtype:
-    try:
-        return np.dtype(name)
-    except TypeError:
-        import ml_dtypes  # registers bfloat16 etc.
+class _SourceLost(Exception):
+    """Internal: the assigned source died mid-pull; re-route and resume."""
 
-        return np.dtype(getattr(ml_dtypes, name))
+    def __init__(self, source: str) -> None:
+        super().__init__(source)
+        self.source = source
+
+
+#: re-exported for callers that imported it from here historically
+from repro.core.meta import dtype_from_str  # noqa: E402
 
 
 class TensorHubClient:
@@ -87,6 +90,7 @@ class TensorHubClient:
         is_spot: bool = False,
         offload_seeding: bool = False,
         with_checksums: bool = True,
+        device_repack: bool = False,
     ) -> "ShardHandle":
         worker = WorkerInfo(
             worker_id=f"{replica_name}/shard{shard_idx}",
@@ -112,6 +116,7 @@ class TensorHubClient:
             worker=worker,
             offload_seeding=offload_seeding,
             with_checksums=with_checksums,
+            device_repack=device_repack,
         )
 
 
@@ -129,6 +134,7 @@ class ShardHandle:
         worker: WorkerInfo,
         offload_seeding: bool,
         with_checksums: bool,
+        device_repack: bool = False,
     ) -> None:
         self.client = client
         self.model = model
@@ -138,8 +144,15 @@ class ShardHandle:
         self.worker = worker
         self.offload_seeding = offload_seeding
         self.with_checksums = with_checksums
+        #: repack staged reshard bytes through the Pallas gather kernel
+        #: (repro.kernels.repack) instead of the NumPy reference path
+        self.device_repack = device_repack
         self.store = WorkerStore(worker.worker_id)
         self.current_version: Optional[int] = None
+        #: lifetime count of striped interval reads this handle completed
+        #: across all reshard pulls (per-interval progress; the
+        #: server-visible counter advances in completed destination units)
+        self.intervals_pulled = 0
         self._op_seq = 0
         self._off_op_seq = 1_000_000  # twin namespace, disjoint from main ops
         self._offload_stores: Dict[int, WorkerStore] = {}
@@ -168,8 +181,17 @@ class ShardHandle:
 
     # -- Table 2: register / unregister -----------------------------------------
 
-    def register(self, named_tensors: Mapping[str, np.ndarray]) -> None:
-        self.store.register(named_tensors)
+    def register(
+        self,
+        named_tensors: Mapping[str, np.ndarray],
+        *,
+        layout: Optional[Mapping[str, tuple]] = None,
+    ) -> None:
+        """Register weight buffers. ``layout`` maps tensor name to
+        ``(global_shape, offset)`` — the layout descriptor that makes this
+        shard a valid source/destination for cross-layout resharding
+        (see ``repro.resharding``; ``tp_shard`` builds it)."""
+        self.store.register(named_tensors, layout=layout)
         self.client.registry.add(self.replica, self.shard_idx, self.store)
         with self._cv:
             self._server.register(self.model, self.replica, self.shard_idx)
@@ -328,12 +350,23 @@ class ShardHandle:
 
     # -- data plane ---------------------------------------------------------------------
 
-    def _wait_manifest(self, version: int):
+    def _wait_src_manifest(
+        self, version: int, source: str, shard_idx: Optional[int] = None
+    ):
+        """Wait for the assigned source replica's manifest for one of its
+        shards. Resolution is by *replica* (falling back to its count
+        family), so a same-count source sharded along different axes
+        cannot be mistaken for our own layout."""
+        idx = self.shard_idx if shard_idx is None else shard_idx
         with self._cv:
             while True:
-                m = self._server.manifest(self.model, version, self.shard_idx)
+                m = self._server.replica_manifest(self.model, version, source, idx)
                 if m is not None:
                     return m
+                try:  # liveness: don't wait forever on an evicted source
+                    self._server.shard_progress(self.model, source, version, idx)
+                except (StaleHandleError, TensorHubError):
+                    raise _SourceLost(source)
                 self._cv.wait(_POLL)
 
     def _pull(
@@ -346,8 +379,15 @@ class ShardHandle:
         twin: bool = False,
     ) -> None:
         """The replication loop (4.3.3): repeatedly read the source's
-        progress counter, fetch the available prefix of transfer units,
-        advance our own counter; re-route on source failure (4.5).
+        progress counter, fetch the available prefix, advance our own
+        counter; re-route on source failure (4.5).
+
+        Same-layout sources serve whole transfer units shard-to-shard;
+        a source with a different shard count is served by the reshard
+        path (striped interval reads + repack). Progress counts completed
+        *destination* units in both cases, so a re-route mid-transfer may
+        switch pull modes and still resume from the same counter — the
+        replacement source can have yet another layout (re-planning).
 
         ``complete_replicate`` gets its *own* op id, allocated here — the
         allocation point is the same in every shard's program order (SPMD),
@@ -356,59 +396,182 @@ class ShardHandle:
         """
         del op_id  # the begin op id; completion uses a fresh one (below)
         version = assignment.version
-        manifest = self._wait_manifest(version)
-        units = manifest.units
-        source = assignment.source
         done = 0
-        while done < len(units):
-            # wait for the source to have at least one more unit than us
-            avail = -1
+        used_reshard = False
+        while True:
+            # the server-side counter is authoritative (max-based): a span
+            # that advanced it before the source died resumes from there,
+            # not from this attempt's stale local count
             with self._cv:
-                while True:
-                    try:
-                        avail = self._server.shard_progress(
-                            self.model, source, version, self.shard_idx
-                        )
-                    except (StaleHandleError, TensorHubError):
-                        avail = -1
-                        break
-                    if avail > done:
-                        break
-                    self._cv.wait(_POLL)
-            if avail < 0:
-                source = self._handle_source_failure(dest_name, source)
-                continue
-            failed = False
-            for i in range(done, avail):
                 try:
-                    self.client.transport.pull_unit(
-                        source, self.shard_idx, units[i], manifest.checksums[i], dest_store
+                    done = max(
+                        done,
+                        self._server.shard_progress(
+                            self.model, dest_name, version, self.shard_idx
+                        ),
                     )
-                except TransportError:
-                    source = self._handle_source_failure(dest_name, source)
-                    failed = True
-                    break
-                done += 1
-                with self._cv:
-                    self._server.update_progress(
-                        self.model, dest_name, self.shard_idx, version, done
+                except (StaleHandleError, TensorHubError):
+                    pass  # no in-progress state yet (first span)
+            try:
+                reshard = assignment.resharded
+                src_manifest = None
+                if not reshard:
+                    # equal shard counts are necessary but not sufficient:
+                    # a same-count source sliced along other axes must go
+                    # through the reshard path too, or unit copies would
+                    # silently scramble weights
+                    src_manifest = self._wait_src_manifest(version, assignment.source)
+                    reshard = not src_manifest.same_layout(
+                        dest_store.build_manifest(with_checksums=False)
                     )
-            if failed:
-                continue
+                if reshard:
+                    used_reshard = True
+                    done = self._pull_resharded_span(
+                        assignment, dest_name, dest_store, done
+                    )
+                else:
+                    done = self._pull_units_span(
+                        assignment, dest_name, dest_store, done, src_manifest
+                    )
+                break
+            except _SourceLost as e:
+                assignment = self._handle_source_failure(dest_name, e.source)
+        if used_reshard and self.with_checksums:
+            # our layout family was registered with zero checksums (pre-pull
+            # buffers); now that the bytes are final, upgrade it so readers
+            # chaining off us get end-to-end verification back
+            with self._cv:
+                self._server.put_manifest(
+                    self.model,
+                    dest_name,
+                    self.shard_idx,
+                    version,
+                    dest_store.build_manifest(with_checksums=True),
+                )
         complete_op = self._next_off_op() if twin else self._next_op()
         with self._cv:
             self._server.complete_replicate(
                 self.model, dest_name, self.shard_idx, version, op_id=complete_op
             )
 
-    def _handle_source_failure(self, dest_name: str, dead_source: str) -> str:
+    def _pull_units_span(
+        self,
+        assignment: Assignment,
+        dest_name: str,
+        dest_store: WorkerStore,
+        done: int,
+        manifest,
+    ) -> int:
+        """Same-layout pull: whole transfer units, shard i <- shard i,
+        against the source replica's manifest (schema + checksums)."""
+        version = assignment.version
+        units = manifest.units
+        source = assignment.source
+        while done < len(units):
+            avail = self._await_source_progress(source, version, self.shard_idx, done)
+            for i in range(done, avail):
+                try:
+                    self.client.transport.pull_unit(
+                        source, self.shard_idx, units[i], manifest.checksums[i], dest_store
+                    )
+                except TransportError:
+                    raise _SourceLost(source)
+                done += 1
+                with self._cv:
+                    self._server.update_progress(
+                        self.model, dest_name, self.shard_idx, version, done
+                    )
+        return done
+
+    def _pull_resharded_span(
+        self,
+        assignment: Assignment,
+        dest_name: str,
+        dest_store: WorkerStore,
+        done: int,
+    ) -> int:
+        """Cross-layout pull: plan striped interval reads against the
+        source layout, stage each destination unit, repack, publish unit
+        progress. Starts at destination unit ``done`` (resume)."""
+        from repro.resharding import ReshardExecutor, layout_from_manifests, plan_shard
+
+        version = assignment.version
+        # our own layout family: checksums are disabled because they would
+        # be computed over the *pre-pull* buffer contents; same-layout
+        # readers chaining off us skip per-unit verification (zeros).
+        local_manifest = dest_store.build_manifest(with_checksums=False)
+        with self._cv:
+            self._server.put_manifest(
+                self.model, dest_name, self.shard_idx, version, local_manifest
+            )
+        src_n = assignment.source_shards or self.num_shards
+        src_manifests = {
+            s: self._wait_src_manifest(version, assignment.source, shard_idx=s)
+            for s in range(src_n)
+        }
+        src_layout = layout_from_manifests(src_manifests, src_n)
+        dst_layout = layout_from_manifests(
+            {self.shard_idx: local_manifest}, self.num_shards
+        )
+        plan = plan_shard(
+            src_layout,
+            dst_layout,
+            self.shard_idx,
+            num_dest_units=local_manifest.num_units,
+        )
+        executor = ReshardExecutor(
+            plan, local_manifest, use_kernel=self.device_repack
+        )
+        source = assignment.source
+        for unit, placed in executor.unit_batches(start_unit=done):
+            staging = executor.make_staging(unit.index)
+            for p in placed:
+                iv = p.interval
+                self._await_source_progress(
+                    source, version, iv.source_shard, iv.source_unit
+                )
+                try:
+                    payload = self.client.transport.read_interval(
+                        source, iv.source_shard, iv.tensor, iv.src_offset, iv.nbytes
+                    )
+                except TransportError:
+                    raise _SourceLost(source)
+                staging[p.staging_offset : p.staging_offset + iv.nbytes] = payload
+                self.intervals_pulled += 1
+            dest_store.write_unit(unit, executor.repack(unit.index, staging))
+            done += 1
+            with self._cv:
+                self._server.update_progress(
+                    self.model, dest_name, self.shard_idx, version, done
+                )
+        return done
+
+    def _await_source_progress(
+        self, source: str, version: int, src_shard: int, needed: int
+    ) -> int:
+        """Block until the source shard's progress counter exceeds
+        ``needed`` (pipeline replication gating); raises
+        :class:`_SourceLost` if the source is evicted meanwhile."""
+        with self._cv:
+            while True:
+                try:
+                    avail = self._server.shard_progress(
+                        self.model, source, version, src_shard
+                    )
+                except (StaleHandleError, TensorHubError):
+                    raise _SourceLost(source)
+                if avail > needed:
+                    return avail
+                self._cv.wait(_POLL)
+
+    def _handle_source_failure(self, dest_name: str, dead_source: str) -> Assignment:
         """Report a dead source and wait for the server to re-route us."""
         with self._cv:
             self._server.report_transfer_failure(self.model, dest_name, dead_source)
             while True:
                 new = self._server.get_assignment(self.model, dest_name)
                 if new is not None:
-                    return new.source
+                    return new
                 self._cv.wait(_POLL)
 
     # -- offload seeding (4.3.4) -----------------------------------------------------------
@@ -417,23 +580,43 @@ class ShardHandle:
         if version in self._seed_threads:
             return
         t = threading.Thread(
-            target=self._seed_pull, args=(version,), daemon=True,
+            target=self._seed_pull_guarded, args=(version,), daemon=True,
             name=f"{self.worker.worker_id}-seed-v{version}",
         )
         self._seed_threads[version] = t
         t.start()
 
+    def _seed_pull_guarded(self, version: int) -> None:
+        """Seed pulls run in a daemon thread with no caller to raise to:
+        on failure (e.g. a non-convertible layout surfacing as
+        ShardLayoutError mid-plan) fail the twin so the server unwinds
+        its in-progress state and source refcounts, instead of leaving a
+        forever-IN_PROGRESS seeder that blocks smart skipping."""
+        twin = offload_name(self.replica)
+        try:
+            self._seed_pull(version)
+        except TensorHubError as e:
+            import logging
+
+            logging.getLogger(__name__).warning(
+                "%s: offload seed pull of v%s failed: %s", twin, version, e
+            )
+            with self._cv:
+                try:
+                    self._server.fail_replica(self.model, twin, reason=str(e))
+                except TensorHubError:
+                    pass
+
     def _seed_pull(self, version: int) -> None:
         """Background cross-DC fetch into a CPU buffer; the accelerator keeps
         computing and a later update() consumes the completed seed locally."""
         twin = offload_name(self.replica)
-        manifest = self._wait_manifest(version)
-        buffers = {
-            t.name: np.zeros(t.shape, dtype=dtype_from_str(t.dtype))
-            for t in manifest.tensors
-        }
+        # seed buffers mirror our registered shard (same local layout), so
+        # the twin can be fed by a cross-layout source and later consumed
+        # locally over PCIe without any further conversion
+        buffers = {n: np.zeros_like(a) for n, a in self.store.tensors().items()}
         off_store = WorkerStore(f"{self.worker.worker_id}@seed")
-        off_store.register(buffers)
+        off_store.register(buffers, layout=self.store.layouts)
         self._offload_stores[version] = off_store
         self.client.registry.add(twin, self.shard_idx, off_store)
         with self._cv:

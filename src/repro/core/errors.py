@@ -36,11 +36,15 @@ class NotRegisteredError(TensorHubError):
 
 
 class ShardLayoutError(TensorHubError):
-    """Source and destination replicas disagree on shard layout.
+    """Source and destination shard layouts are not convertible.
 
-    ROS transfers shard i -> shard i; resharding must be done by the
-    publisher before publish() (paper 2.1 step 4: weights are resharded
-    and converted to inference-ready format *then* transferred).
+    Mismatched-but-convertible layouts (same tensors, dtypes and global
+    shapes; source slices cover every destination slice) are served by the
+    cross-layout resharding engine (``repro.resharding``) — a destination
+    shard stripes byte-interval reads across all source shards. This
+    error is reserved for genuinely incompatible layouts: missing layout
+    descriptors with differing local shapes, disagreeing global shapes or
+    dtypes, or uncovered destination bytes.
     """
 
 

@@ -17,16 +17,55 @@ TINY_TENSOR_BYTES = 2 * 1024 * 1024
 
 @dataclasses.dataclass(frozen=True)
 class TensorMeta:
-    """Descriptor of one named weight tensor held by a shard."""
+    """Descriptor of one named weight tensor held by a shard.
+
+    ``shape`` is the *local* shape of the block this shard holds. The
+    optional layout descriptor (``global_shape`` + ``offset``) places the
+    local block inside the logical global tensor, enabling cross-layout
+    resharding (``repro.resharding``): a destination sharded differently
+    from the source intersects its slice against every source shard's
+    slice and stripes byte-interval reads across them.
+
+    * ``global_shape is None`` — no layout metadata: the tensor is treated
+      as unsharded/identical across layouts (convertible only if the peer
+      holds a block of the same local shape).
+    * ``offset`` — per-dim start of the local block in global coordinates;
+      the slice held is ``[offset[d], offset[d] + shape[d])`` per dim d.
+    """
 
     name: str
     shape: Tuple[int, ...]
     dtype: str  # numpy dtype string, e.g. "bfloat16", "float32"
     nbytes: int
+    global_shape: Optional[Tuple[int, ...]] = None
+    offset: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self) -> None:
         if self.nbytes < 0:
             raise ValueError(f"tensor {self.name}: negative nbytes")
+        if self.global_shape is not None:
+            off = self.offset or (0,) * len(self.global_shape)
+            if len(off) != len(self.global_shape) or len(self.shape) != len(
+                self.global_shape
+            ):
+                raise ValueError(f"tensor {self.name}: rank mismatch in layout")
+            for o, n, g in zip(off, self.shape, self.global_shape):
+                if o < 0 or o + n > g:
+                    raise ValueError(
+                        f"tensor {self.name}: slice [{o}, {o + n}) exceeds "
+                        f"global dim {g}"
+                    )
+
+    @property
+    def start(self) -> Tuple[int, ...]:
+        """Slice start in global coordinates (zeros when unspecified)."""
+        if self.offset is not None:
+            return self.offset
+        return (0,) * len(self.shape)
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.global_shape is not None and self.global_shape != self.shape
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +116,42 @@ class ShardManifest:
             a.name == b.name and a.nbytes == b.nbytes and a.members == b.members
             for a, b in zip(self.units, other.units)
         )
+
+    def same_layout(self, other: "ShardManifest") -> bool:
+        """True when both shards hold byte-identical slices: same tensors,
+        dtypes, local shapes AND layout descriptors. Two manifests can
+        share a unit schema (validate_against) yet slice the global
+        tensors along different axes — unit-for-unit copying between them
+        would silently scramble weights; this is the check that gates the
+        same-layout fast path."""
+        theirs = {t.name: t for t in other.tensors}
+        if len(self.tensors) != len(theirs):
+            return False
+        for a in self.tensors:
+            b = theirs.get(a.name)
+            if b is None:
+                return False
+            if (
+                a.shape != b.shape
+                or a.dtype != b.dtype
+                or (a.global_shape or a.shape) != (b.global_shape or b.shape)
+                or a.start != b.start
+            ):
+                return False
+        return True
+
+
+def dtype_from_str(name: str):
+    """numpy dtype from its string name, including ml_dtypes extras
+    (bfloat16 etc.). Shared by the client and the resharding layer."""
+    import numpy as np
+
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registers bfloat16 etc.
+
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def build_units(

@@ -137,9 +137,22 @@ class ModelState:
     versions: Dict[int, Dict[str, ReplicaVersionState]] = dataclasses.field(
         default_factory=dict
     )
-    #: canonical per-shard manifests per version (set by first publisher)
-    manifests: Dict[int, Dict[int, ShardManifest]] = dataclasses.field(
+    #: per-shard manifests per version, keyed by (layout, shard_idx) where
+    #: *layout* is the replica's shard count — replicas with different
+    #: layouts register their own manifest families, and cross-layout
+    #: readers fetch the source family to build a reshard plan. The
+    #: family holds the FIRST layout registered at that shard count;
+    #: a same-count replica sharded along different axes is tracked only
+    #: in ``replica_manifests`` (below), which is alias-free.
+    manifests: Dict[int, Dict[Tuple[int, int], ShardManifest]] = dataclasses.field(
         default_factory=dict
+    )
+    #: exact per-replica manifests, keyed by (replica_name, shard_idx).
+    #: Readers resolve their assigned *source replica* here (falling back
+    #: to its count family), so two same-count layouts can coexist on one
+    #: version without unit pulls silently crossing layouts.
+    replica_manifests: Dict[int, Dict[Tuple[str, int], ShardManifest]] = (
+        dataclasses.field(default_factory=dict)
     )
     txns: Dict[Tuple[str, int], _Txn] = dataclasses.field(default_factory=dict)
     pending: List[_PendingReplicate] = dataclasses.field(default_factory=list)
@@ -152,13 +165,31 @@ class ModelState:
 
 @dataclasses.dataclass(frozen=True)
 class Assignment:
-    """Where a shard should pull its data from."""
+    """Where a shard should pull its data from.
+
+    ``source_shards``/``dest_shards`` carry the two replicas' shard
+    layouts; when they differ the destination runs the cross-layout
+    resharding path (``repro.resharding``): every destination shard
+    stripes byte-interval reads across *all* source shards instead of the
+    shard-to-shard unit pipe. Zero means "unknown" (legacy constructors)
+    and is treated as same-layout.
+    """
 
     version: int
     source: str
     source_kind: str
     transport: str  # "rdma" | "tcp"
     seeding: bool = False  # dest becomes its DC's seeding replica
+    source_shards: int = 0
+    dest_shards: int = 0
+
+    @property
+    def resharded(self) -> bool:
+        return (
+            self.source_shards > 0
+            and self.dest_shards > 0
+            and self.source_shards != self.dest_shards
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,12 +296,12 @@ class ReferenceServer:
     ) -> None:
         st = self._models.setdefault(model, ModelState(name=model))
         if st.num_shards is None:
+            # canonical layout = the first opener's; replicas with other
+            # shard counts are welcome — mismatched-but-convertible layouts
+            # are served by the resharding data plane (repro.resharding),
+            # with convertibility checked against layout descriptors at
+            # replicate time rather than rejected here.
             st.num_shards = num_shards
-        elif st.num_shards != num_shards:
-            raise ShardLayoutError(
-                f"model {model!r} has {st.num_shards} shards per replica; "
-                f"replica {replica!r} opened with {num_shards}"
-            )
         info = st.replicas.get(replica)
         if info is None or info.failed:
             retain_lag = (
@@ -426,7 +457,7 @@ class ReferenceServer:
             st, info, shard_idx, op_id, "publish", repr(version), on_first
         )
         # per-shard manifest registration (data-plane visibility)
-        self._set_manifest(st, version, shard_idx, manifest)
+        self._set_manifest(st, version, replica, info.num_shards, shard_idx, manifest)
         rv = st.versions[version][replica]
         rv.progress[shard_idx] = manifest.num_units
         self._service_pending(st)
@@ -471,7 +502,7 @@ class ReferenceServer:
         res = self._group_op(
             st, info, shard_idx, op_id, "publish_offload", repr(version), on_first
         )
-        self._set_manifest(st, version, shard_idx, manifest)
+        self._set_manifest(st, version, off_name, info.num_shards, shard_idx, manifest)
         st.versions[version][off_name].progress[shard_idx] = manifest.num_units
         if info.draining.get(version):
             info.draining[version] = False  # retention satisfied by the offload copy
@@ -726,9 +757,54 @@ class ReferenceServer:
         st = self._models.get(model)
         return None if st is None else st.num_shards
 
-    def manifest(self, model: str, version: int, shard_idx: int) -> Optional[ShardManifest]:
+    def manifest(
+        self,
+        model: str,
+        version: int,
+        shard_idx: int,
+        *,
+        num_shards: Optional[int] = None,
+    ) -> Optional[ShardManifest]:
+        """Manifest of one shard of one layout family; ``num_shards``
+        defaults to the model's canonical (first-opened) layout."""
         st = self._model(model)
-        return st.manifests.get(version, {}).get(shard_idx)
+        layout = st.num_shards if num_shards is None else num_shards
+        return st.manifests.get(version, {}).get((layout, shard_idx))
+
+    def put_manifest(
+        self,
+        model: str,
+        replica: str,
+        shard_idx: int,
+        version: int,
+        manifest: ShardManifest,
+    ) -> None:
+        """Register a manifest for a replica's own layout family.
+
+        Called by cross-layout readers at replicate start so that (a) the
+        planner's inputs are server-visible and (b) downstream readers
+        with the *same* non-canonical layout can pipeline plain unit
+        pulls off this replica's progress counter."""
+        st = self._model(model)
+        info = self._replica(model, replica)
+        self._set_manifest(st, version, replica, info.num_shards, shard_idx, manifest)
+        self._bump()
+
+    def replica_manifest(
+        self, model: str, version: int, replica: str, shard_idx: int
+    ) -> Optional[ShardManifest]:
+        """The exact manifest a given replica's shard holds for a version,
+        falling back to its shard-count family (publishers and same-layout
+        chains never diverge from their family). Readers resolve their
+        assigned source through this — not through the count family — so
+        two same-count layouts on one version cannot alias."""
+        st = self._model(model)
+        m = st.replica_manifests.get(version, {}).get((replica, shard_idx))
+        if m is not None:
+            return m
+        info = st.replicas.get(replica)
+        layout = st.num_shards if info is None else info.num_shards
+        return st.manifests.get(version, {}).get((layout, shard_idx))
 
     def replica_datacenter(self, model: str, replica: str) -> str:
         return self._replica(model, replica).datacenter
@@ -892,9 +968,14 @@ class ReferenceServer:
             src = vmap.get(rv.source)
             if src is not None and src.refcount > 0:
                 src.refcount -= 1
+        rep_map = st.replica_manifests.get(version)
+        if rep_map:
+            for key in [k for k in rep_map if k[0] == replica]:
+                del rep_map[key]
         if not vmap:
             del st.versions[version]
             st.manifests.pop(version, None)
+            st.replica_manifests.pop(version, None)
         self._gc_versions(st)
 
     def _gc_versions(self, st: ModelState) -> None:
@@ -902,6 +983,7 @@ class ReferenceServer:
             if not st.versions[v]:
                 del st.versions[v]
                 st.manifests.pop(v, None)
+                st.replica_manifests.pop(v, None)
 
     def _maybe_release_offloads(self, st: ModelState, version: int) -> None:
         """Release offload replicas that outlived their purpose (3.3, 4.3.4):
@@ -950,17 +1032,44 @@ class ReferenceServer:
                     )
 
     def _set_manifest(
-        self, st: ModelState, version: int, shard_idx: int, manifest: ShardManifest
+        self,
+        st: ModelState,
+        version: int,
+        replica: str,
+        layout: int,
+        shard_idx: int,
+        manifest: ShardManifest,
     ) -> None:
+        # exact per-replica entry first (alias-free; readers resolve their
+        # assigned source here)
+        rep_map = st.replica_manifests.setdefault(version, {})
+        rprev = rep_map.get((replica, shard_idx))
+        if rprev is None or (
+            all(c == 0 for c in rprev.checksums) and any(manifest.checksums)
+        ):
+            rep_map[(replica, shard_idx)] = manifest
+        # count-keyed family: first layout at this count wins; a same-count
+        # manifest slicing along other axes is NOT an error (it lives in
+        # the replica map), but a conflicting unit schema for the *same*
+        # layout is.
         shard_map = st.manifests.setdefault(version, {})
-        prev = shard_map.get(shard_idx)
-        if prev is not None and not prev.validate_against(manifest):
-            raise ShardLayoutError(
-                f"shard {shard_idx} of v{version}: manifest mismatch with the "
-                "canonical layout (resharding must happen before publish)"
-            )
-        if prev is None:
-            shard_map[shard_idx] = manifest
+        prev = shard_map.get((layout, shard_idx))
+        if prev is not None:
+            if prev.same_layout(manifest):
+                if not prev.validate_against(manifest):
+                    raise ShardLayoutError(
+                        f"shard {shard_idx} of v{version}: manifest mismatch "
+                        f"with the {layout}-shard layout family already "
+                        "registered"
+                    )
+                # checksum upgrade: a resharding reader registers with zero
+                # checksums (its buffers are pre-pull garbage) and re-puts
+                # real ones once the pull completes, restoring end-to-end
+                # verification for downstream same-layout readers
+                if all(c == 0 for c in prev.checksums) and any(manifest.checksums):
+                    shard_map[(layout, shard_idx)] = manifest
+            return
+        shard_map[(layout, shard_idx)] = manifest
 
     # -- scheduling (4.3.1) -----------------------------------------------------
 
@@ -989,12 +1098,18 @@ class ReferenceServer:
             return None
         local = [c for c in cands if st.replicas[c.replica].datacenter == dest.datacenter]
         pool = local or cands
+
+        def layout_penalty(c: ReplicaVersionState) -> int:
+            # prefer same-layout sources: plain unit pulls beat the
+            # reshard path (no repack) when both are available
+            return 0 if st.replicas[c.replica].num_shards == dest.num_shards else 1
+
         if self._scheduler == "depth_aware":
             # prefer shallow sources, then least-loaded: builds a balanced
             # replication tree instead of a chain (EXPERIMENTS.md Perf)
-            return min(pool, key=lambda c: (c.refcount, c.depth, c.replica))
+            return min(pool, key=lambda c: (layout_penalty(c), c.refcount, c.depth, c.replica))
         # paper 4.3.1: least-loaded, deterministic tie-break
-        return min(pool, key=lambda c: (c.refcount, c.replica))
+        return min(pool, key=lambda c: (layout_penalty(c), c.refcount, c.replica))
 
     def _only_seeding_sources(
         self, st: ModelState, version: int, dest: ReplicaInfo
@@ -1023,6 +1138,8 @@ class ReferenceServer:
             source_kind=src.kind,
             transport="tcp" if cross else "rdma",
             seeding=cross,
+            source_shards=st.replicas[src.replica].num_shards,
+            dest_shards=dest.num_shards,
         )
 
     def _assign(self, st: ModelState, dest: ReplicaInfo, version: int) -> Assignment:

@@ -1,0 +1,54 @@
+"""Host-facing repack entry points: gather-map building + kernel call."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.repack.kernel import _LANES, gather_bytes
+
+
+def build_gather_map(
+    instructions: Sequence[Tuple[int, int, int]],
+    out_nbytes: int,
+    staging_nbytes: int,
+) -> np.ndarray:
+    """int32[out_nbytes] mapping every output byte to its staging byte.
+
+    Output bytes no instruction covers point at ``staging_nbytes`` — the
+    zero byte :func:`repack_bytes` appends — so they repack to 0, matching
+    the NumPy reference.
+    """
+    idx = np.full(out_nbytes, staging_nbytes, dtype=np.int32)
+    for s_off, d_off, nbytes in instructions:
+        if d_off < 0 or d_off + nbytes > out_nbytes:
+            raise ValueError(f"instruction out of range: {(s_off, d_off, nbytes)}")
+        if s_off < 0 or s_off + nbytes > staging_nbytes:
+            raise ValueError(f"staging read out of range: {(s_off, d_off, nbytes)}")
+        idx[d_off : d_off + nbytes] = np.arange(
+            s_off, s_off + nbytes, dtype=np.int32
+        )
+    return idx
+
+
+def repack_bytes(
+    staging: np.ndarray,
+    instructions: Sequence[Tuple[int, int, int]],
+    out_nbytes: int,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Device repack: assemble the destination unit payload (uint8
+    [out_nbytes]) from the staging buffer via the Pallas gather kernel."""
+    flat = np.asarray(staging, dtype=np.uint8).reshape(-1)
+    idx = build_gather_map(instructions, out_nbytes, flat.shape[0])
+    # append the zero byte uncovered positions index, then pad to lanes
+    padded = np.concatenate([flat, np.zeros(1, np.uint8)])
+    pad = (-padded.shape[0]) % _LANES
+    if pad:
+        padded = np.concatenate([padded, np.zeros(pad, np.uint8)])
+    return gather_bytes(
+        jnp.asarray(padded), jnp.asarray(idx), interpret=interpret
+    )

@@ -1,0 +1,141 @@
+"""Plan execution: staging assembly + repack into registered buffers.
+
+The transport lands each :class:`ReadInterval`'s payload in a contiguous
+*staging* buffer (the analogue of the RDMA landing zone — striped reads
+arrive out of tensor order, from many source shards). Once every interval
+of a destination transfer unit is in, ``repack`` gathers the staging
+bytes into the unit's payload layout and the store absorbs it with the
+ordinary ``write_unit`` path, so downstream machinery (progress counters,
+pipelined readers, compact buckets) is unchanged.
+
+Repack runs either as a NumPy scatter (the reference path the threaded
+client uses by default) or through the Pallas gather kernel in
+``repro.kernels.repack`` (``use_kernel=True``; parity is tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.errors import TensorHubError
+from repro.core.meta import ShardManifest, TransferUnit
+from repro.resharding.planner import ReadInterval, ShardPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacedInterval:
+    """An interval plus where its payload lands in the unit's staging
+    buffer and in the assembled unit payload."""
+
+    interval: ReadInterval
+    staging_offset: int
+    unit_offset: int  # destination offset within the assembled unit payload
+
+
+class ReshardExecutor:
+    """Drives one destination shard's :class:`ShardPlan`."""
+
+    def __init__(
+        self,
+        plan: ShardPlan,
+        dest_manifest: ShardManifest,
+        *,
+        use_kernel: bool = False,
+        interpret: Optional[bool] = None,
+    ) -> None:
+        self.plan = plan
+        self.manifest = dest_manifest
+        self.use_kernel = use_kernel
+        #: None = auto: compiled on TPU, Pallas interpreter elsewhere
+        #: (CPU/GPU backends cannot compile the TPU gather kernel)
+        self.interpret = interpret
+        self._units: Dict[int, List[PlacedInterval]] = {}
+        self._staging_bytes: Dict[int, int] = {}
+        by_unit = plan.intervals_by_unit()
+        for u in dest_manifest.units:
+            member_off = self._member_offsets(u)
+            placed: List[PlacedInterval] = []
+            pos = 0
+            for iv in by_unit.get(u.index, []):
+                if iv.tensor not in member_off:
+                    raise TensorHubError(
+                        f"plan interval for {iv.tensor!r} does not belong to "
+                        f"dest unit {u.index} ({u.name})"
+                    )
+                placed.append(
+                    PlacedInterval(
+                        interval=iv,
+                        staging_offset=pos,
+                        unit_offset=member_off[iv.tensor] + iv.dst_offset,
+                    )
+                )
+                pos += iv.nbytes
+            self._units[u.index] = placed
+            self._staging_bytes[u.index] = pos
+
+    @staticmethod
+    def _member_offsets(unit: TransferUnit) -> Dict[str, int]:
+        if not unit.is_compact:
+            return {unit.name: 0}
+        return {name: off for name, off, _ in unit.layout}
+
+    # -- iteration --------------------------------------------------------------
+
+    @property
+    def num_units(self) -> int:
+        return len(self.manifest.units)
+
+    def unit_batches(
+        self, *, start_unit: int = 0
+    ) -> Iterator[Tuple[TransferUnit, List[PlacedInterval]]]:
+        """Destination units in progress order, with their placed
+        intervals. ``start_unit`` skips units already completed (resume
+        after a source failure re-plan)."""
+        for u in self.manifest.units[start_unit:]:
+            yield u, self._units[u.index]
+
+    def staging_bytes(self, dest_unit: int) -> int:
+        return self._staging_bytes[dest_unit]
+
+    def make_staging(self, dest_unit: int) -> np.ndarray:
+        return np.empty(self._staging_bytes[dest_unit], dtype=np.uint8)
+
+    # -- repack -----------------------------------------------------------------
+
+    def instructions(self, dest_unit: int) -> List[Tuple[int, int, int]]:
+        """``(staging_offset, unit_offset, nbytes)`` gather triples."""
+        return [
+            (p.staging_offset, p.unit_offset, p.interval.nbytes)
+            for p in self._units[dest_unit]
+        ]
+
+    def repack(self, dest_unit: int, staging: np.ndarray) -> np.ndarray:
+        """Assemble the destination unit's payload from staging bytes."""
+        unit = self.manifest.units[dest_unit]
+        instrs = self.instructions(dest_unit)
+        if self.use_kernel:
+            import jax
+
+            from repro.kernels.repack import repack_bytes
+
+            interpret = self.interpret
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            return np.asarray(
+                repack_bytes(staging, instrs, unit.nbytes, interpret=interpret)
+            )
+        return repack_np(staging, instrs, unit.nbytes)
+
+
+def repack_np(
+    staging: np.ndarray, instructions: List[Tuple[int, int, int]], out_nbytes: int
+) -> np.ndarray:
+    """Host reference repack: scatter staging runs into the unit payload."""
+    out = np.zeros(out_nbytes, dtype=np.uint8)
+    src = staging.view(np.uint8).reshape(-1)
+    for s_off, d_off, nbytes in instructions:
+        out[d_off : d_off + nbytes] = src[s_off : s_off + nbytes]
+    return out

@@ -1,0 +1,190 @@
+"""Replica shard layouts, assembled from per-shard manifests.
+
+A :class:`ReplicaLayout` is the planner's view of one replica: for every
+tensor, the global shape plus each shard's slice (see the package
+docstring for the descriptor format). It also records which transfer unit
+carries the tensor in each shard's manifest — the planner annotates every
+read interval with that unit index so pipelined readers can gate on the
+source's per-unit progress counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.errors import ShardLayoutError
+from repro.core.meta import ShardManifest, TensorMeta, dtype_from_str
+
+
+def dtype_itemsize(name: str) -> int:
+    """Itemsize of a numpy dtype string, including ml_dtypes extras."""
+    return dtype_from_str(name).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSlice:
+    """One shard's block of one tensor, in global coordinates."""
+
+    shard: int
+    start: Tuple[int, ...]
+    shape: Tuple[int, ...]
+    #: index of the TransferUnit carrying this tensor in the shard manifest
+    unit: int
+
+    @property
+    def stop(self) -> Tuple[int, ...]:
+        return tuple(s + n for s, n in zip(self.start, self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorLayout:
+    """All shards' slices of one tensor."""
+
+    name: str
+    dtype: str
+    itemsize: int
+    global_shape: Tuple[int, ...]
+    slices: Tuple[ShardSlice, ...]
+
+    @property
+    def global_nbytes(self) -> int:
+        n = self.itemsize
+        for d in self.global_shape:
+            n *= d
+        return n
+
+    def slice_for(self, shard: int) -> Optional[ShardSlice]:
+        for s in self.slices:
+            if s.shard == shard:
+                return s
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaLayout:
+    """Planner's view of one replica: tensors in manifest order."""
+
+    num_shards: int
+    tensors: Tuple[TensorLayout, ...]
+
+    def tensor(self, name: str) -> Optional[TensorLayout]:
+        for t in self.tensors:
+            if t.name == name:
+                return t
+        return None
+
+    def names(self) -> List[str]:
+        return [t.name for t in self.tensors]
+
+
+def _unit_index(manifest: ShardManifest, tensor: str) -> int:
+    for u in manifest.units:
+        if u.name == tensor or tensor in u.members:
+            return u.index
+    raise ShardLayoutError(f"tensor {tensor!r} not carried by any transfer unit")
+
+
+def layout_from_manifests(
+    manifests: Mapping[int, ShardManifest], num_shards: Optional[int] = None
+) -> ReplicaLayout:
+    """Assemble a :class:`ReplicaLayout` from per-shard manifests.
+
+    ``manifests`` may be partial (a destination planning only its own
+    shard passes just that one); ``num_shards`` defaults to the number of
+    manifests provided.
+    """
+    if not manifests:
+        raise ShardLayoutError("no manifests to build a layout from")
+    n = len(manifests) if num_shards is None else num_shards
+    by_name: Dict[str, List[ShardSlice]] = {}
+    meta_by_name: Dict[str, TensorMeta] = {}
+    order: List[str] = []
+    for shard, manifest in sorted(manifests.items()):
+        for meta in manifest.tensors:
+            gshape = meta.global_shape or meta.shape
+            prev = meta_by_name.get(meta.name)
+            if prev is None:
+                meta_by_name[meta.name] = meta
+                order.append(meta.name)
+            else:
+                prev_g = prev.global_shape or prev.shape
+                if prev_g != gshape or prev.dtype != meta.dtype:
+                    raise ShardLayoutError(
+                        f"tensor {meta.name!r}: shards disagree on global "
+                        f"shape/dtype ({prev_g}/{prev.dtype} vs "
+                        f"{gshape}/{meta.dtype})"
+                    )
+            by_name[meta.name] = by_name.get(meta.name, [])
+            by_name[meta.name].append(
+                ShardSlice(
+                    shard=shard,
+                    start=meta.start,
+                    shape=meta.shape,
+                    unit=_unit_index(manifest, meta.name),
+                )
+            )
+    tensors = tuple(
+        TensorLayout(
+            name=name,
+            dtype=meta_by_name[name].dtype,
+            itemsize=dtype_itemsize(meta_by_name[name].dtype),
+            global_shape=meta_by_name[name].global_shape or meta_by_name[name].shape,
+            slices=tuple(by_name[name]),
+        )
+        for name in order
+    )
+    return ReplicaLayout(num_shards=n, tensors=tensors)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel splitting helper (tests, examples, benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def tp_axis_for(name: str, shape: Tuple[int, ...], num_shards: int) -> Optional[int]:
+    """Default TP rule: shard the first dim divisible by ``num_shards``
+    (row parallelism); tensors with no divisible dim stay replicated."""
+    for axis, d in enumerate(shape):
+        if d % num_shards == 0 and d >= num_shards:
+            return axis
+    return None
+
+
+def tp_shard(
+    global_tensors: Mapping[str, np.ndarray],
+    shard_idx: int,
+    num_shards: int,
+    *,
+    axis_overrides: Optional[Mapping[str, Optional[int]]] = None,
+) -> Tuple[Dict[str, np.ndarray], Dict[str, Tuple[Tuple[int, ...], Tuple[int, ...]]]]:
+    """Slice global tensors for one TP shard.
+
+    Returns ``(local_tensors, layout)`` where ``layout`` maps tensor name
+    to ``(global_shape, offset)`` — the arguments
+    :meth:`repro.transfer.engine.WorkerStore.register` takes to stamp the
+    layout descriptor onto the registered buffers. Tensors whose shard
+    axis is ``None`` (no divisible dim, or overridden) are replicated.
+    """
+    locals_: Dict[str, np.ndarray] = {}
+    layout: Dict[str, Tuple[Tuple[int, ...], Tuple[int, ...]]] = {}
+    for name, arr in global_tensors.items():
+        gshape = tuple(arr.shape)
+        if axis_overrides is not None and name in axis_overrides:
+            axis = axis_overrides[name]
+        else:
+            axis = tp_axis_for(name, gshape, num_shards)
+        if axis is None:
+            locals_[name] = np.ascontiguousarray(arr)
+            layout[name] = (gshape, (0,) * arr.ndim)
+            continue
+        per = gshape[axis] // num_shards
+        sel = [slice(None)] * arr.ndim
+        sel[axis] = slice(shard_idx * per, (shard_idx + 1) * per)
+        offset = [0] * arr.ndim
+        offset[axis] = shard_idx * per
+        locals_[name] = np.ascontiguousarray(arr[tuple(sel)])
+        layout[name] = (gshape, tuple(offset))
+    return locals_, layout

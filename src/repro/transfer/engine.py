@@ -28,14 +28,28 @@ from repro.core.errors import ChecksumError, NotRegisteredError, TensorHubError
 from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, build_units
 from repro.transfer import checksum as checksum_lib
 
+#: per-tensor layout descriptor: (global_shape, offset) — see
+#: ``repro.resharding`` for the format
+LayoutEntry = Tuple[Tuple[int, ...], Tuple[int, ...]]
+
 
 class TransportError(TensorHubError):
     """The peer died or the channel broke mid-transfer; the reader reports
     to the server and is re-routed (4.5)."""
 
 
-def tensor_meta(name: str, arr: np.ndarray) -> TensorMeta:
-    return TensorMeta(name=name, shape=tuple(arr.shape), dtype=str(arr.dtype), nbytes=arr.nbytes)
+def tensor_meta(
+    name: str, arr: np.ndarray, layout: Optional[LayoutEntry] = None
+) -> TensorMeta:
+    gshape, offset = layout if layout is not None else (None, None)
+    return TensorMeta(
+        name=name,
+        shape=tuple(arr.shape),
+        dtype=str(arr.dtype),
+        nbytes=arr.nbytes,
+        global_shape=gshape,
+        offset=offset,
+    )
 
 
 class WorkerStore:
@@ -51,6 +65,7 @@ class WorkerStore:
         self.worker_id = worker_id
         self._lock = threading.Lock()
         self._buffers: Dict[str, np.ndarray] = {}
+        self._layouts: Dict[str, LayoutEntry] = {}
         self._units: List[TransferUnit] = []
         self._metas: List[TensorMeta] = []
         #: simulate preemption: a failed store refuses all reads
@@ -58,27 +73,45 @@ class WorkerStore:
 
     # -- registration ----------------------------------------------------------
 
-    def register(self, named_tensors: Mapping[str, np.ndarray]) -> None:
+    def register(
+        self,
+        named_tensors: Mapping[str, np.ndarray],
+        *,
+        layout: Optional[Mapping[str, LayoutEntry]] = None,
+    ) -> None:
+        """Register weight buffers; ``layout`` optionally stamps each
+        tensor's layout descriptor (global shape + slice offset) onto its
+        metadata so cross-layout readers can reshard from this shard."""
         with self._lock:
             for name, arr in named_tensors.items():
                 buf = np.ascontiguousarray(arr)
                 if not buf.flags.writeable:  # e.g. np.asarray(jax_array) views
                     buf = buf.copy()
                 self._buffers[name] = buf
+                if layout is not None and name in layout:
+                    self._layouts[name] = layout[name]
             self._rebuild_units()
 
     def unregister(self, names: Optional[Sequence[str]] = None) -> None:
         with self._lock:
             if names is None:
                 self._buffers.clear()
+                self._layouts.clear()
             else:
                 for n in names:
                     self._buffers.pop(n, None)
+                    self._layouts.pop(n, None)
             self._rebuild_units()
 
     def _rebuild_units(self) -> None:
-        self._metas = [tensor_meta(n, a) for n, a in self._buffers.items()]
+        self._metas = [
+            tensor_meta(n, a, self._layouts.get(n)) for n, a in self._buffers.items()
+        ]
         self._units = build_units(self._metas)
+
+    @property
+    def layouts(self) -> Dict[str, LayoutEntry]:
+        return dict(self._layouts)
 
     @property
     def units(self) -> List[TransferUnit]:
@@ -148,13 +181,46 @@ class WorkerStore:
             dst = self._buffers[name].view(np.uint8).reshape(-1)
             dst[:] = flat[off : off + nbytes]
 
+    # -- sub-unit byte ranges (cross-layout resharding) ---------------------------
+
+    def read_range(self, name: str, offset: int, nbytes: int) -> np.ndarray:
+        """Serve a byte range of one tensor's local buffer (zero-copy
+        view; the transport makes the wire copy). The striped reads of a
+        reshard plan are exactly these one-sided range reads."""
+        if self.failed:
+            raise TransportError(f"{self.worker_id} is dead")
+        arr = self._buffers.get(name)
+        if arr is None:
+            raise NotRegisteredError(f"{self.worker_id}: unknown tensor {name}")
+        if offset < 0 or offset + nbytes > arr.nbytes:
+            raise TensorHubError(
+                f"{self.worker_id}/{name}: range [{offset}, {offset + nbytes}) "
+                f"exceeds buffer of {arr.nbytes}B"
+            )
+        return arr.view(np.uint8).reshape(-1)[offset : offset + nbytes]
+
+    def write_range(self, name: str, offset: int, payload: np.ndarray) -> None:
+        dst = self._buffers.get(name)
+        if dst is None:
+            raise NotRegisteredError(f"{self.worker_id}: unknown tensor {name}")
+        flat = payload.view(np.uint8).reshape(-1)
+        if offset < 0 or offset + flat.nbytes > dst.nbytes:
+            raise TensorHubError(
+                f"{self.worker_id}/{name}: write [{offset}, {offset + flat.nbytes}) "
+                f"exceeds buffer of {dst.nbytes}B"
+            )
+        dst.view(np.uint8).reshape(-1)[offset : offset + flat.nbytes] = flat
+
     # -- offload ------------------------------------------------------------------
 
     def snapshot_to(self, other: "WorkerStore") -> None:
         """Copy all registered buffers into another store (the CPU offload
         path of the retention protocol, 3.3 — PCIe copy in the paper)."""
         with self._lock:
-            other.register({n: a.copy() for n, a in self._buffers.items()})
+            other.register(
+                {n: a.copy() for n, a in self._buffers.items()},
+                layout=dict(self._layouts),
+            )
 
 
 class WorkerRegistry:
@@ -218,3 +284,33 @@ class LocalTransport:
                 )
         dst_store.write_unit(unit, payload)
         self.bytes_moved += unit.nbytes
+
+    def read_interval(
+        self,
+        src_replica: str,
+        src_shard: int,
+        tensor: str,
+        offset: int,
+        nbytes: int,
+    ) -> np.ndarray:
+        """Pull one striped byte range of a reshard plan.
+
+        Unlike :meth:`pull_unit` there is no precomputed manifest checksum
+        at interval granularity; the source checksums the range at read
+        time and the reader re-verifies after the wire copy — the same
+        end-to-end transit protection, scoped to the interval (4.6).
+        """
+        src = self.registry.get(src_replica, src_shard)
+        view = src.read_range(tensor, offset, nbytes)
+        expected = checksum_lib.checksum(view) if self.verify_checksums else 0
+        payload = view.copy()  # the wire copy
+        if self.verify_checksums:
+            got = checksum_lib.checksum(payload)
+            if got != expected:
+                raise ChecksumError(
+                    f"interval {tensor}[{offset}:{offset + nbytes}] from "
+                    f"{src_replica}/shard{src_shard}: checksum {got:#x} != "
+                    f"expected {expected:#x}"
+                )
+        self.bytes_moved += nbytes
+        return payload

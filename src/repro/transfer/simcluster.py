@@ -31,6 +31,14 @@ class PreemptedError(Exception):
     report its own source as failed)."""
 
 
+class _SimSourceLost(Exception):
+    """Internal: assigned source died mid-pull; re-route and resume."""
+
+    def __init__(self, source: str) -> None:
+        super().__init__(source)
+        self.source = source
+
+
 def make_manifest(unit_bytes: Sequence[int]) -> ShardManifest:
     """Size-only manifest (the simulator moves no real bytes)."""
     tensors = tuple(
@@ -42,6 +50,45 @@ def make_manifest(unit_bytes: Sequence[int]) -> ShardManifest:
         for i, n in enumerate(unit_bytes)
     )
     return ShardManifest(tensors=tensors, units=units, checksums=(0,) * len(units))
+
+
+def make_layout_manifests(
+    global_unit_bytes: Sequence[int], num_shards: int
+) -> List[ShardManifest]:
+    """Per-shard manifests with layout descriptors: each global transfer
+    unit is a 1-D byte tensor sliced contiguously across ``num_shards``
+    (the remainder rides on the last shard). Replicas built from the same
+    ``global_unit_bytes`` with *different* shard counts are convertible —
+    the resharding planner stripes reads across their shards."""
+    out: List[ShardManifest] = []
+    for shard in range(num_shards):
+        tensors: List[TensorMeta] = []
+        units: List[TransferUnit] = []
+        for k, g in enumerate(global_unit_bytes):
+            g = int(g)
+            per = g // num_shards
+            start = shard * per
+            stop = g if shard == num_shards - 1 else start + per
+            n = stop - start
+            tensors.append(
+                TensorMeta(
+                    name=f"t{k}",
+                    shape=(n,),
+                    dtype="uint8",
+                    nbytes=n,
+                    global_shape=(g,),
+                    offset=(start,),
+                )
+            )
+            units.append(TransferUnit(index=k, name=f"t{k}", nbytes=n))
+        out.append(
+            ShardManifest(
+                tensors=tuple(tensors),
+                units=tuple(units),
+                checksums=(0,) * len(units),
+            )
+        )
+    return out
 
 
 @dataclasses.dataclass
@@ -145,7 +192,13 @@ class SimCluster:
         retain: Optional[object] = None,
         offload_seeding: bool = False,
         unit_bytes: Sequence[int] = (),
+        global_unit_bytes: Optional[Sequence[int]] = None,
     ) -> "SimReplica":
+        """``unit_bytes`` sizes one shard's units directly (same-layout
+        replicas only); ``global_unit_bytes`` instead sizes the *global*
+        model's units and slices them over ``num_shards`` — replicas
+        created from the same global sizes with different shard counts
+        reshard into each other."""
         rep = SimReplica(
             cluster=self,
             model=model,
@@ -158,6 +211,9 @@ class SimCluster:
             retain=retain,
             offload_seeding=offload_seeding,
             unit_bytes=list(unit_bytes),
+            global_unit_bytes=(
+                None if global_unit_bytes is None else list(global_unit_bytes)
+            ),
         )
         self.replicas[name] = rep
         return rep
@@ -266,7 +322,7 @@ class SimShard:
             self.rep.name,
             self.idx,
             version,
-            self.rep.manifest,
+            self.rep.manifest_for(self.idx),
             op_id=next(self._op),
         )
         self.env.key_notify(("progress", self.rep.name, self.idx))
@@ -333,7 +389,7 @@ class SimShard:
 
     def _g_offload_copy(self, version: int) -> Generator:
         """Retention offload: GPU -> CPU over PCIe, then publish_offload."""
-        nbytes = self.rep.shard_bytes
+        nbytes = self.rep.manifest_for(self.idx).total_bytes
         yield self.rep.cluster.net.flow(
             nbytes, [self.worker.pcie], tag=f"{self.rep.name}/s{self.idx}:offload"
         )
@@ -343,16 +399,21 @@ class SimShard:
             self.rep.name,
             self.idx,
             version,
-            self.rep.manifest,
+            self.rep.manifest_for(self.idx),
             op_id=next(self._op),
         )
         self.env.key_notify(("progress", offload_name(self.rep.name), self.idx))
 
-    def _flow_for_unit(
-        self, src_replica: str, unit: TransferUnit, transport: str, dest_name: str
+    def _flow_for_bytes(
+        self,
+        src_replica: str,
+        src_shard: int,
+        nbytes: float,
+        transport: str,
+        dest_name: str,
     ) -> SimEvent:
         cluster = self.rep.cluster
-        src_w = cluster.worker(src_replica, self.idx)
+        src_w = cluster.worker(src_replica, src_shard)
         dst_w = self.worker
         hw = self.hw
         if src_w.node == dst_w.node:
@@ -365,10 +426,9 @@ class SimShard:
         else:
             links = [src_w.up, dst_w.down]
             cap = hw.tensorhub_rdma_eff * hw.rdma_per_shard
-        nbytes = unit.nbytes
         if transport == "tcp" and cluster.tcp_compression < 1.0:
-            nbytes = unit.nbytes * cluster.tcp_compression
-        tag = f"{src_replica}/s{self.idx}->{dest_name}/s{self.idx}"
+            nbytes = nbytes * cluster.tcp_compression
+        tag = f"{src_replica}/s{src_shard}->{dest_name}/s{self.idx}"
         return cluster.net.flow(
             nbytes, links, rate_cap=cap, latency=hw.unit_latency, tag=tag
         )
@@ -376,56 +436,22 @@ class SimShard:
     def _g_pull(self, assignment: Assignment, *, dest: str) -> Generator:
         """The pipeline-replication read loop (4.3.3) in virtual time.
 
-        Progress waits use *keyed* events ("one wakeup per counter advance
-        per chained reader") instead of the global state event — with a
-        periodic re-check as a safety net for missed failure notifications.
+        Dispatches per assignment: same-layout sources stream whole units
+        shard-to-shard; a source with a different shard count runs the
+        resharding plan (striped interval flows from *all* source shards).
+        Progress counts completed destination units either way, so a
+        re-route mid-transfer may switch modes and resume (4.5).
         """
-        env = self.env
         version = assignment.version
-        manifest = self.rep.manifest
-        units = manifest.units
-        source = assignment.source
-        transport = assignment.transport
-        done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
-        while done < len(units):
-            if self.dead:
-                raise PreemptedError(self.worker.worker_id)
-            avail = -1
-            while True:
-                try:
-                    avail = self.server.shard_progress(
-                        self.rep.model, source, version, self.idx
-                    )
-                except (StaleHandleError, TensorHubError):
-                    avail = -1
-                    break
-                if avail > done:
-                    break
-                yield env.any_of(
-                    env.key_wait(("progress", source, self.idx)), env.timeout(0.5)
-                )
-                if self.dead:
-                    raise PreemptedError(self.worker.worker_id)
-            if avail < 0:
-                source, transport = yield from self._g_reroute(dest, source)
-                continue
-            failed = False
-            for i in range(done, avail):
-                try:
-                    yield self._flow_for_unit(source, units[i], transport, dest)
-                except FlowKilled:
-                    if self.dead:
-                        raise PreemptedError(self.worker.worker_id)
-                    source, transport = yield from self._g_reroute(dest, source)
-                    failed = True
-                    break
-                done += 1
-                self.server.update_progress(
-                    self.rep.model, dest, self.idx, version, done
-                )
-                env.key_notify(("progress", dest, self.idx))
-            if failed:
-                continue
+        while True:
+            try:
+                if assignment.resharded:
+                    yield from self._g_pull_resharded(assignment, dest)
+                else:
+                    yield from self._g_pull_units(assignment, dest)
+                break
+            except _SimSourceLost as e:
+                assignment = yield from self._g_reroute(dest, e.source)
         yield self._ctrl()
         self.server.complete_replicate(
             self.rep.model,
@@ -435,6 +461,111 @@ class SimShard:
             op_id=next(self._off_op) if dest != self.rep.name else next(self._op),
         )
 
+    def _g_await_source_unit(
+        self, source: str, version: int, src_shard: int, needed: int
+    ) -> Generator:
+        """Wait until the source shard's progress counter exceeds
+        ``needed``; keyed wakeups with a periodic re-check safety net."""
+        env = self.env
+        while True:
+            if self.dead:
+                raise PreemptedError(self.worker.worker_id)
+            try:
+                avail = self.server.shard_progress(
+                    self.rep.model, source, version, src_shard
+                )
+            except (StaleHandleError, TensorHubError):
+                raise _SimSourceLost(source)
+            if avail > needed:
+                return avail
+            yield env.any_of(
+                env.key_wait(("progress", source, src_shard)), env.timeout(0.5)
+            )
+
+    def _g_pull_units(self, assignment: Assignment, dest: str) -> Generator:
+        env = self.env
+        version = assignment.version
+        manifest = self.rep.manifest_for(self.idx)
+        units = manifest.units
+        source = assignment.source
+        transport = assignment.transport
+        done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
+        while done < len(units):
+            if self.dead:
+                raise PreemptedError(self.worker.worker_id)
+            avail = yield from self._g_await_source_unit(
+                source, version, self.idx, done
+            )
+            for i in range(done, avail):
+                try:
+                    yield self._flow_for_bytes(
+                        source, self.idx, units[i].nbytes, transport, dest
+                    )
+                except FlowKilled:
+                    if self.dead:
+                        raise PreemptedError(self.worker.worker_id)
+                    raise _SimSourceLost(source)
+                done += 1
+                self.server.update_progress(
+                    self.rep.model, dest, self.idx, version, done
+                )
+                env.key_notify(("progress", dest, self.idx))
+
+    def _g_pull_resharded(self, assignment: Assignment, dest: str) -> Generator:
+        """Striped cross-layout pull in virtual time: real planner, fluid
+        bytes. Each interval flows over the *owning* source shard's NIC,
+        so bandwidth aggregates across all source shards exactly as the
+        byte accounting says it should."""
+        from repro.resharding import layout_from_manifests, plan_shard
+
+        env = self.env
+        version = assignment.version
+        src_n = assignment.source_shards
+        local_manifest = self.rep.manifest_for(self.idx)
+        self.server.put_manifest(
+            self.rep.model, dest, self.idx, version, local_manifest
+        )
+        source = assignment.source
+        src_manifests = {}
+        for s in range(src_n):
+            while True:
+                m = self.server.replica_manifest(self.rep.model, version, source, s)
+                if m is not None:
+                    break
+                yield env.state_wait()
+                if self.dead:
+                    raise PreemptedError(self.worker.worker_id)
+            src_manifests[s] = m
+        src_layout = layout_from_manifests(src_manifests, src_n)
+        dst_layout = layout_from_manifests(
+            {self.idx: local_manifest}, self.rep.num_shards
+        )
+        plan = plan_shard(
+            src_layout,
+            dst_layout,
+            self.idx,
+            num_dest_units=local_manifest.num_units,
+        )
+        by_unit = plan.intervals_by_unit()
+        transport = assignment.transport
+        done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
+        for unit in local_manifest.units[done:]:
+            for iv in by_unit.get(unit.index, []):
+                yield from self._g_await_source_unit(
+                    source, version, iv.source_shard, iv.source_unit
+                )
+                try:
+                    yield self._flow_for_bytes(
+                        source, iv.source_shard, iv.nbytes, transport, dest
+                    )
+                except FlowKilled:
+                    if self.dead:
+                        raise PreemptedError(self.worker.worker_id)
+                    raise _SimSourceLost(source)
+            done += 1
+            self.server.update_progress(self.rep.model, dest, self.idx, version, done)
+            env.key_notify(("progress", dest, self.idx))
+
     def _g_reroute(self, dest: str, dead_source: str) -> Generator:
         if self.dead:
             raise PreemptedError(self.worker.worker_id)
@@ -443,7 +574,7 @@ class SimShard:
         while True:
             new = self.server.get_assignment(self.rep.model, dest)
             if new is not None:
-                return new.source, new.transport
+                return new
             yield self.env.state_wait()
             if self.dead:
                 raise PreemptedError(self.worker.worker_id)
@@ -477,6 +608,7 @@ class SimReplica:
         retain: Optional[object],
         offload_seeding: bool,
         unit_bytes: List[int],
+        global_unit_bytes: Optional[List[int]] = None,
     ) -> None:
         self.cluster = cluster
         self.model = model
@@ -487,8 +619,13 @@ class SimReplica:
         self.retain = retain
         self.offload_seeding = offload_seeding
         self.unit_bytes = unit_bytes
-        self.manifest = make_manifest(unit_bytes)
-        self.shard_bytes = sum(unit_bytes)
+        self.global_unit_bytes = global_unit_bytes
+        if global_unit_bytes is not None:
+            self.manifests = make_layout_manifests(global_unit_bytes, num_shards)
+        else:
+            self.manifests = [make_manifest(unit_bytes)] * num_shards
+        self.manifest = self.manifests[0]
+        self.shard_bytes = self.manifests[0].total_bytes
         self.shards: List[SimShard] = []
         for i in range(num_shards):
             node = (
@@ -498,6 +635,9 @@ class SimReplica:
             )
             w = cluster._make_worker(name, i, datacenter, node, is_spot)
             self.shards.append(SimShard(self, i, w))
+
+    def manifest_for(self, shard_idx: int) -> ShardManifest:
+        return self.manifests[shard_idx]
 
     # -- group-level helpers: run an op on every shard, fire when all done ------------
 

@@ -1,0 +1,105 @@
+"""Hypothesis compatibility layer for the test suite.
+
+``hypothesis`` is a declared test dependency (see pyproject.toml), but
+the suite must still *collect and run* in environments where it is not
+installed. When the real library is importable it is re-exported
+unchanged; otherwise a minimal seeded-random fallback implements exactly
+the strategy subset this suite uses (integers, floats, booleans,
+sampled_from, lists, binary) and ``@given`` draws a fixed number of
+deterministic examples per test — property coverage degrades gracefully
+instead of the module failing to import.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    #: fallback examples per property (capped: no shrinking, keep it quick)
+    _MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            return _Strategy(
+                lambda rng: [
+                    elements.example(rng)
+                    for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+        @staticmethod
+        def binary(min_size=0, max_size=64):
+            return _Strategy(
+                lambda rng: bytes(
+                    rng.randrange(256)
+                    for _ in range(rng.randint(min_size, max_size))
+                )
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples=_MAX_EXAMPLES, deadline=None, **_kw):  # noqa: ARG001
+        def deco(fn):
+            fn._compat_max_examples = min(max_examples, _MAX_EXAMPLES)
+            return fn
+
+        return deco
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", _MAX_EXAMPLES)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = [s.example(rng) for s in gargs]
+                    named = {k: s.example(rng) for k, s in gkwargs.items()}
+                    fn(*args, *drawn, **named, **kwargs)
+
+            # pytest must not mistake strategy params for fixtures:
+            # positional strategies bind right-to-left (like hypothesis),
+            # keyword strategies by name; expose only what remains.
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            if gargs:
+                params = params[: len(params) - len(gargs)]
+            params = [p for p in params if p.name not in gkwargs]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            wrapper.__dict__.pop("__wrapped__", None)
+            return wrapper
+
+        return deco

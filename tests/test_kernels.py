@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.checksum import checksum_ref, fold64, tensor_checksum
 from repro.kernels.checksum.kernel import checksum_words

@@ -2,8 +2,7 @@
 a hypothesis state-machine property over random op interleavings."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.errors import MutabilityViolationError
 from repro.core.server import KIND_OFFLOAD, ReferenceServer, offload_name

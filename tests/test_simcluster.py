@@ -3,8 +3,7 @@ and TensorHub-on-sim behaviors the benchmarks rely on."""
 
 import math
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.transfer.simcluster import SimCluster
 from repro.transfer.simnet import SimEnv, SimNetwork

@@ -1,8 +1,7 @@
 """Unit + property tests: version algebra and tiny-tensor compaction."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import versions
 from repro.core.meta import TINY_TENSOR_BYTES, TensorMeta, build_units
