@@ -1,0 +1,239 @@
+"""Multi-source fan-out — N standalone destinations pull one version from
+M publisher replicas (4.3.3 "fully saturates RDMA bandwidth").
+
+The multi-source transfer scheduler partitions each destination's
+transfer-unit list across every published replica holding the version
+(same-node > same-DC preference, least-loaded weighting), and the
+windowed data plane keeps several unit flows in flight per shard,
+splitting giant units into sub-unit chunks so one tensor can aggregate
+every source uplink. This benchmark sweeps window depth, source count
+and chunking, and reports aggregate delivered bandwidth against:
+
+* ``pinned`` — the naive-broadcast baseline: every destination pinned to
+  the same publisher, one whole-unit flow at a time (what a system with
+  no load-aware scheduler does); it plateaus at a single uplink.
+* ``legacy`` — the pre-scheduler TensorHub data plane (least-loaded
+  single source, sequential unit flows), reproduced exactly by
+  ``window=1, chunk_bytes=None, max_sources=1``; the recorded timings
+  below were measured on the pre-scheduler implementation and the knobs
+  must reproduce them within 5%.
+
+The new path should approach ``min(M * src_uplink, N * dst_downlink)``
+per shard column; with pipeline chains it can exceed the publisher-only
+bound (in-progress replicas relay).
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Optional, Sequence
+
+from repro.transfer.hardware import CLUSTER
+from repro.transfer.simcluster import SimCluster
+
+GB = 1e9
+SHARDS = 2
+UNIFORM_UNITS = [GB] * 16  # 16 GB/shard, chunk-free granularity
+SKEWED_UNITS = [8 * GB] + [GB] * 8  # one giant tensor dominates the shard
+
+#: makespans recorded on the pre-scheduler sequential data plane
+#: (completion timestamps of the replicate group events). The
+#: window=1/chunking-off/max_sources=1 configuration must reproduce
+#: these within 5% — it runs the identical one-flow-at-a-time loop.
+OLD_TIMINGS = {
+    "fanout_8x4": 1.00315,
+    "single_1x1": 0.69845,
+    "fanout_4x2": 0.82904,
+    "skew_8x4": 3.13323,
+}
+
+
+def fanout_makespan(
+    n_dest: int,
+    m_src: int,
+    units: Sequence[float],
+    *,
+    window: int = 4,
+    chunk_bytes: Optional[float] = None,
+    max_sources: int = 4,
+    scheduler: str = "least_loaded",
+    pipeline: bool = True,
+) -> Dict[str, float]:
+    """M publishers all hold v0 (one publishes, the rest replicate it up
+    front); N destinations then pull concurrently. Returns the makespan
+    (time until the last destination finished) and aggregate bandwidth."""
+    cl = SimCluster(
+        window=window,
+        chunk_bytes=chunk_bytes,
+        max_sources=max_sources,
+        scheduler=scheduler,
+        pipeline_replication=pipeline,
+    )
+    pubs = [
+        cl.add_replica("m", f"pub{i}", SHARDS, unit_bytes=units) for i in range(m_src)
+    ]
+    dests = [
+        cl.add_replica("m", f"dst{i}", SHARDS, unit_bytes=units) for i in range(n_dest)
+    ]
+    for r in pubs + dests:
+        r.open()
+    cl.run()
+    pubs[0].publish(0)
+    cl.run()
+    seeds = [p.replicate("latest") for p in pubs[1:]]
+    cl.run()
+    assert all(e.triggered and e.error is None for e in seeds)
+    t0 = cl.env.now
+    finish: Dict[str, float] = {}
+    for d in dests:
+        ev = d.replicate("latest")
+        ev.add_callback(
+            lambda e, name=d.name: (
+                finish.setdefault(name, cl.env.now) if e.error is None else None
+            )
+        )
+    cl.run()
+    assert len(finish) == n_dest, f"incomplete fan-out: {sorted(finish)}"
+    makespan = max(finish.values()) - t0
+    total_bytes = n_dest * sum(units) * SHARDS
+    return {
+        "makespan_s": makespan,
+        "agg_gbps": total_bytes / makespan / GB,
+        "multi_assignments": cl.server.stats["multi_source_assignments"],
+        "work_steals": cl.server.stats["work_steals"],
+    }
+
+
+def min_formula_gbps(n_dest: int, m_src: int) -> float:
+    """min(M x src uplink, N x dst downlink), summed over shard columns."""
+    per_column = min(m_src * CLUSTER.rdma_per_shard, n_dest * CLUSTER.rdma_per_shard)
+    return per_column * SHARDS / GB
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+
+    def row(name, units, n, m, **kw) -> Dict:
+        r = fanout_makespan(n, m, units, **kw)
+        return {
+            "scenario": name,
+            "n_dest": n,
+            "m_src": m,
+            "makespan_s": round(r["makespan_s"], 3),
+            "agg_gbps": round(r["agg_gbps"], 1),
+            "multi": r["multi_assignments"],
+            "steals": r["work_steals"],
+            **{k: v for k, v in kw.items() if k in ("window", "max_sources")},
+        }
+
+    legacy = dict(window=1, chunk_bytes=None, max_sources=1)
+
+    # headline: 8 destinations / 4 sources
+    rows.append(row("pinned_8x4", UNIFORM_UNITS, 8, 4, scheduler="pinned",
+                    pipeline=False, **legacy))
+    rows.append(row("legacy_8x4", UNIFORM_UNITS, 8, 4, **legacy))
+    rows.append(row("multi_8x4", UNIFORM_UNITS, 8, 4,
+                    window=4, chunk_bytes=GB, max_sources=4))
+
+    # parity scenarios: knobs-off must reproduce the old data plane
+    for name, units, n, m in [
+        ("single_1x1", UNIFORM_UNITS, 1, 1),
+        ("fanout_4x2", UNIFORM_UNITS, 4, 2),
+        ("skew_8x4", SKEWED_UNITS, 8, 4),
+    ]:
+        rows.append(row(f"parity_{name}", units, n, m, **legacy))
+
+    # chunking: one giant tensor per shard, spread across source uplinks
+    rows.append(row("skew_legacy", SKEWED_UNITS, 8, 4, **legacy))
+    rows.append(row("skew_multi_chunk", SKEWED_UNITS, 8, 4,
+                    window=4, chunk_bytes=GB, max_sources=4))
+    rows.append(row("skew_multi_nochunk", SKEWED_UNITS, 8, 4,
+                    window=4, chunk_bytes=None, max_sources=4))
+
+    if not quick:
+        for w in (1, 2, 4, 8):  # window sweep at 8x4
+            rows.append(row(f"sweep_window_{w}", UNIFORM_UNITS, 8, 4,
+                            window=w, chunk_bytes=GB, max_sources=4))
+        for ms in (1, 2, 4):  # source-count sweep at window 4
+            rows.append(row(f"sweep_sources_{ms}", UNIFORM_UNITS, 8, 4,
+                            window=4, chunk_bytes=GB, max_sources=ms))
+        # giant single tensor: chunking is the only way to split it
+        rows.append(row("giant_legacy", [16 * GB], 2, 4, **legacy))
+        rows.append(row("giant_multi", [16 * GB], 2, 4,
+                        window=4, chunk_bytes=GB, max_sources=4))
+    return rows
+
+
+def _get(rows: List[Dict], scenario: str) -> Dict:
+    return next(r for r in rows if r["scenario"] == scenario)
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    checks = []
+    pinned = _get(rows, "pinned_8x4")
+    multi = _get(rows, "multi_8x4")
+    speedup = pinned["makespan_s"] / multi["makespan_s"]
+    checks.append(
+        f"8 dests / 4 sources: multi-source {multi['agg_gbps']} GB/s vs "
+        f"pinned single-source {pinned['agg_gbps']} GB/s -> x{speedup:.1f} "
+        f"aggregate-bandwidth improvement (required >= 3x) -> "
+        f"{'OK' if speedup >= 3.0 else 'MISMATCH'}"
+    )
+    bound = min_formula_gbps(8, 4)
+    frac = multi["agg_gbps"] / bound
+    checks.append(
+        f"approaches min(M*src_uplink, N*dst_downlink) = {bound:.0f} GB/s: "
+        f"measured {multi['agg_gbps']} GB/s ({frac*100:.0f}%) -> "
+        f"{'OK' if frac >= 0.85 else 'MISMATCH'}"
+    )
+    parity_map = {
+        "legacy_8x4": "fanout_8x4",
+        "parity_single_1x1": "single_1x1",
+        "parity_fanout_4x2": "fanout_4x2",
+        "parity_skew_8x4": "skew_8x4",
+    }
+    worst = 0.0
+    for scen, key in parity_map.items():
+        got = _get(rows, scen)["makespan_s"]
+        want = OLD_TIMINGS[key]
+        worst = max(worst, abs(got - want) / want)
+    checks.append(
+        f"window=1/chunking-off reproduces the pre-scheduler timings: "
+        f"max deviation {worst*100:.2f}% (required < 5%) -> "
+        f"{'OK' if worst < 0.05 else 'MISMATCH'}"
+    )
+    skew_gain = (
+        _get(rows, "skew_legacy")["makespan_s"]
+        / _get(rows, "skew_multi_chunk")["makespan_s"]
+    )
+    checks.append(
+        f"giant-unit shard: chunked multi-source x{skew_gain:.1f} faster than "
+        f"the sequential chain -> {'OK' if skew_gain >= 1.5 else 'MISMATCH'}"
+    )
+    if any(r["scenario"] == "giant_multi" for r in rows):
+        g = (
+            _get(rows, "giant_legacy")["makespan_s"]
+            / _get(rows, "giant_multi")["makespan_s"]
+        )
+        checks.append(
+            f"single 16 GB tensor: sub-unit chunking x{g:.1f} faster "
+            f"-> {'OK' if g >= 1.5 else 'MISMATCH'}"
+        )
+    return checks
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    rows = run(quick=quick)
+    for r in rows:
+        print(r)
+    bad = 0
+    for c in validate(rows):
+        print("  " + c)
+        bad += "MISMATCH" in c
+    if quick:
+        raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

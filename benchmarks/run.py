@@ -14,6 +14,7 @@ import traceback
 from benchmarks import (
     cross_dc,
     elastic,
+    fanout,
     micro_bandwidth,
     micro_burst,
     micro_failure,
@@ -26,6 +27,7 @@ MODULES = [
     ("fig7a_bandwidth", micro_bandwidth),
     ("fig7b_burst", micro_burst),
     ("fig7c_failure", micro_failure),
+    ("fanout_scheduler", fanout),
     ("fig9_standalone", standalone),
     ("fig11_elastic", elastic),
     ("fig12_cross_dc", cross_dc),

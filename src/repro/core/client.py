@@ -13,20 +13,23 @@ hook wakes waiters after each state mutation.
 
 from __future__ import annotations
 
+import collections
 import threading
 import time
-from typing import Callable, Dict, Mapping, Optional
+from typing import Callable, Dict, List, Mapping, Optional, Set
 
 import numpy as np
 
 from repro.core import server as server_lib
 from repro.core.errors import (
+    ChecksumError,
     StaleHandleError,
     TensorHubError,
     VersionUnavailableError,
 )
-from repro.core.meta import WorkerInfo
-from repro.core.server import Assignment, ReferenceServer, offload_name
+from repro.core.meta import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW, WorkerInfo
+from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
+from repro.transfer import checksum as checksum_lib
 from repro.transfer.engine import (
     LocalTransport,
     TransportError,
@@ -45,6 +48,11 @@ class _SourceLost(Exception):
         self.source = source
 
 
+#: one data-plane fetch: a whole transfer unit, or a byte sub-range of
+#: one; ``owner`` is the plan slice the server assigned it to (load hint)
+_PullTask = collections.namedtuple("_PullTask", "unit offset nbytes owner")
+
+
 #: re-exported for callers that imported it from here historically
 from repro.core.meta import dtype_from_str  # noqa: E402
 
@@ -59,11 +67,21 @@ class TensorHubClient:
         registry: Optional[WorkerRegistry] = None,
         transport: Optional[LocalTransport] = None,
         clock: Callable[[], float] = time.monotonic,
+        window: int = DEFAULT_WINDOW,
+        chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
     ) -> None:
         self.server = server
         self.registry = registry or WorkerRegistry()
         self.transport = transport or LocalTransport(self.registry)
         self.clock = clock
+        #: data-plane knobs inherited by every handle opened through this
+        #: client: concurrent unit fetches per shard, and the sub-unit
+        #: chunk threshold (None disables chunking). window=1 + no
+        #: chunking reproduces the sequential one-fetch-at-a-time loop.
+        self.window = max(1, window)
+        self.chunk_bytes = (
+            int(chunk_bytes) if chunk_bytes and chunk_bytes > 0 else None
+        )
         self._cv = threading.Condition(threading.RLock())
         server.add_watcher(self._wake)
 
@@ -91,6 +109,8 @@ class TensorHubClient:
         offload_seeding: bool = False,
         with_checksums: bool = True,
         device_repack: bool = False,
+        window: Optional[int] = None,
+        chunk_bytes: Optional[int] = None,
     ) -> "ShardHandle":
         worker = WorkerInfo(
             worker_id=f"{replica_name}/shard{shard_idx}",
@@ -117,6 +137,10 @@ class TensorHubClient:
             offload_seeding=offload_seeding,
             with_checksums=with_checksums,
             device_repack=device_repack,
+            window=self.window if window is None else max(1, window),
+            chunk_bytes=self.chunk_bytes if chunk_bytes is None else (
+                int(chunk_bytes) if chunk_bytes and chunk_bytes > 0 else None
+            ),
         )
 
 
@@ -135,6 +159,8 @@ class ShardHandle:
         offload_seeding: bool,
         with_checksums: bool,
         device_repack: bool = False,
+        window: int = DEFAULT_WINDOW,
+        chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
     ) -> None:
         self.client = client
         self.model = model
@@ -144,6 +170,10 @@ class ShardHandle:
         self.worker = worker
         self.offload_seeding = offload_seeding
         self.with_checksums = with_checksums
+        #: windowed data plane: concurrent unit fetches for this shard's
+        #: pulls, and the sub-unit chunk threshold (None = off)
+        self.window = window
+        self.chunk_bytes = chunk_bytes
         #: repack staged reshard bytes through the Pallas gather kernel
         #: (repro.kernels.repack) instead of the NumPy reference path
         self.device_repack = device_repack
@@ -462,8 +492,61 @@ class ShardHandle:
         done: int,
         manifest,
     ) -> int:
-        """Same-layout pull: whole transfer units, shard i <- shard i,
-        against the source replica's manifest (schema + checksums)."""
+        """Same-layout pull: whole transfer units (or byte-range chunks of
+        them), shard i <- shard i, against the source replicas' manifests
+        (schema + checksums). Multi-source assignments partition the unit
+        list across replicas; the windowed executor keeps up to ``window``
+        fetches in flight and advances the progress counter strictly over
+        the completed prefix."""
+        version = assignment.version
+        units = manifest.units
+        completed: Set[int] = set()
+        while done < len(units):
+            slices = assignment.slices(len(units))
+            if self.window <= 1 and self.chunk_bytes is None and len(slices) == 1:
+                return self._pull_units_seq(
+                    assignment, dest_name, dest_store, done, manifest
+                )
+            completed -= set(range(done))
+            slices = self._validated_slices(slices, version, manifest)
+            outcome, done = self._pull_units_windowed(
+                assignment, slices, dest_name, dest_store, done, manifest, completed
+            )
+            if outcome == "replan":
+                with self._cv:
+                    new = self._server.get_assignment(self.model, dest_name)
+                if new is not None and not new.resharded:
+                    assignment = new
+                # a None/resharded refetch loops and retries on the same
+                # plan; a dead source surfaces as _SourceLost upstream
+        return done
+
+    def _validated_slices(
+        self, slices: List[SourceSlice], version: int, manifest
+    ) -> List[SourceSlice]:
+        """Unit pulls are interchangeable only between byte-identical
+        layouts; drop any sibling source whose manifest diverges from the
+        primary's (the server filters too — this is the client-side
+        guard). The primary is never dropped."""
+        if len(slices) <= 1:
+            return slices
+        kept = [slices[0]]
+        for sl in slices[1:]:
+            m = self._wait_src_manifest(version, sl.source)
+            if m.same_layout(manifest):
+                kept.append(sl)
+        return kept
+
+    def _pull_units_seq(
+        self,
+        assignment: Assignment,
+        dest_name: str,
+        dest_store: WorkerStore,
+        done: int,
+        manifest,
+    ) -> int:
+        """The pre-scheduler data plane: one whole-unit fetch at a time
+        from a single source (window=1, chunking off)."""
         version = assignment.version
         units = manifest.units
         source = assignment.source
@@ -482,6 +565,228 @@ class ShardHandle:
                         self.model, dest_name, self.shard_idx, version, done
                     )
         return done
+
+    def _build_pull_tasks(
+        self,
+        slices: List[SourceSlice],
+        units,
+        done: int,
+        completed: Set[int],
+    ) -> List[_PullTask]:
+        """Expand the plan's unit ranges into an ordered task list; units
+        above the chunk threshold become byte-range tasks, owner-hinted
+        round-robin across all sources (identical bytes everywhere, so a
+        giant tensor can aggregate every source's bandwidth)."""
+        chunk = self.chunk_bytes
+        owners: Dict[int, int] = {}
+        for k, sl in enumerate(slices):
+            for ui in range(max(sl.start_unit, done), min(sl.stop_unit, len(units))):
+                owners.setdefault(ui, k)
+        tasks: List[_PullTask] = []
+        rr = 0
+        for ui in range(done, len(units)):
+            if ui in completed:
+                continue
+            k = owners.get(ui, 0)
+            nbytes = units[ui].nbytes
+            if chunk is not None and nbytes > chunk:
+                n_parts = -(-nbytes // chunk)
+                per = -(-nbytes // n_parts)
+                off = 0
+                for j in range(n_parts):
+                    step = min(per, nbytes - off)
+                    tgt = (rr + j) % len(slices) if len(slices) > 1 else k
+                    tasks.append(_PullTask(ui, off, step, tgt))
+                    off += step
+                rr += n_parts
+            else:
+                tasks.append(_PullTask(ui, 0, nbytes, k))
+        return tasks
+
+    def _pull_units_windowed(
+        self,
+        assignment: Assignment,
+        slices: List[SourceSlice],
+        dest_name: str,
+        dest_store: WorkerStore,
+        done: int,
+        manifest,
+        completed: Set[int],
+    ):
+        """Windowed multi-source executor: one worker thread per source
+        slice, a shared semaphore capping in-flight fetches at ``window``,
+        global in-order task claiming (a worker takes the lowest-indexed
+        task its source's progress covers — keeps the prefix counter that
+        gates downstream readers advancing at full rate), and whole-unit
+        checksum verification after chunk reassembly."""
+        version = assignment.version
+        units = manifest.units
+        tasks = self._build_pull_tasks(slices, units, done, completed)
+        if not tasks:
+            return "done", done
+        remaining: Dict[int, int] = {}
+        for t in tasks:
+            remaining[t.unit] = remaining.get(t.unit, 0) + 1
+        shared = {
+            "lock": threading.Lock(),
+            "sem": threading.Semaphore(self.window),
+            "tasks": tasks,
+            "claimed": [False] * len(tasks),
+            "unclaimed": len(tasks),
+            "scan": 0,
+            "remaining": remaining,
+            "staging": {},  # unit -> np.uint8 reassembly buffer
+            "completed": completed,  # shared with caller: survives re-plans
+            "done": done,
+            "stop": None,  # None | "replan" | BaseException
+            "epoch": assignment.epoch,
+        }
+        workers = [
+            threading.Thread(
+                target=self._span_worker,
+                args=(sl, shared, dest_name, dest_store, manifest, version),
+                daemon=True,
+                name=f"{self.worker.worker_id}-pull-{sl.source}",
+            )
+            for sl in slices
+        ]
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        stop = shared["stop"]
+        if isinstance(stop, BaseException):
+            raise stop
+        if stop == "replan":
+            return "replan", shared["done"]
+        return "done", shared["done"]
+
+    def _span_stop(self, shared: dict, stop) -> None:
+        with shared["lock"]:
+            if shared["stop"] is None or (
+                isinstance(stop, BaseException)
+                and not isinstance(shared["stop"], BaseException)
+            ):
+                shared["stop"] = stop
+
+    def _span_worker(
+        self,
+        sl: SourceSlice,
+        shared: dict,
+        dest_name: str,
+        dest_store: WorkerStore,
+        manifest,
+        version: int,
+    ) -> None:
+        tasks: List[_PullTask] = shared["tasks"]
+        claimed: List[bool] = shared["claimed"]
+        try:
+            while True:
+                with shared["lock"]:
+                    if shared["stop"] is not None or shared["unclaimed"] == 0:
+                        return
+                with self._cv:
+                    try:
+                        ep = self._server.assignment_epoch(
+                            self.model, dest_name, version
+                        )
+                    except (StaleHandleError, TensorHubError) as e:
+                        self._span_stop(shared, e)  # dest evicted mid-pull
+                        return
+                    try:
+                        avail = self._server.shard_progress(
+                            self.model, sl.source, version, self.shard_idx
+                        )
+                    except (StaleHandleError, TensorHubError):
+                        raise _SourceLost(sl.source)
+                if ep != shared["epoch"]:
+                    self._span_stop(shared, "replan")
+                    return
+                pick = None
+                with shared["lock"]:
+                    while shared["scan"] < len(tasks) and claimed[shared["scan"]]:
+                        shared["scan"] += 1
+                    for i in range(shared["scan"], len(tasks)):
+                        if not claimed[i] and tasks[i].unit < avail:
+                            pick = i
+                            claimed[i] = True
+                            shared["unclaimed"] -= 1
+                            break
+                if pick is None:
+                    # nothing this source can serve yet: wait for progress
+                    with self._cv:
+                        self._cv.wait(_POLL)
+                    continue
+                shared["sem"].acquire()
+                try:
+                    if shared["stop"] is not None:
+                        return  # abandoned claim; the re-plan re-lists it
+                    self._fetch_task(
+                        tasks[pick], sl, shared, dest_name, dest_store, manifest, version
+                    )
+                finally:
+                    shared["sem"].release()
+        except TransportError:
+            self._span_stop(shared, _SourceLost(sl.source))
+        except BaseException as e:  # noqa: BLE001 — relayed to the caller
+            self._span_stop(shared, e)
+
+    def _fetch_task(
+        self,
+        t: _PullTask,
+        sl: SourceSlice,
+        shared: dict,
+        dest_name: str,
+        dest_store: WorkerStore,
+        manifest,
+        version: int,
+    ) -> None:
+        unit = manifest.units[t.unit]
+        whole = t.offset == 0 and t.nbytes == unit.nbytes
+        if whole:
+            self.client.transport.pull_unit(
+                sl.source, self.shard_idx, unit, manifest.checksums[t.unit], dest_store
+            )
+        else:
+            payload = self.client.transport.read_unit_range(
+                sl.source, self.shard_idx, unit, t.offset, t.nbytes
+            )
+            with shared["lock"]:
+                buf = shared["staging"].get(t.unit)
+                if buf is None:
+                    buf = shared["staging"][t.unit] = np.empty(
+                        unit.nbytes, dtype=np.uint8
+                    )
+            buf[t.offset : t.offset + t.nbytes] = payload
+        with shared["lock"]:
+            shared["remaining"][t.unit] -= 1
+            finished = shared["remaining"][t.unit] == 0
+            buf = shared["staging"].pop(t.unit, None) if finished else None
+        if not finished:
+            return
+        if buf is not None:  # chunked unit: verify end-to-end, then absorb
+            expected = manifest.checksums[t.unit]
+            if self.client.transport.verify_checksums and expected:
+                got = checksum_lib.checksum(buf)
+                if got != expected:
+                    n_chunks = -(-unit.nbytes // (self.chunk_bytes or unit.nbytes))
+                    raise ChecksumError(
+                        f"unit {unit.name} reassembled from {n_chunks} "
+                        f"chunks: checksum {got:#x} != expected {expected:#x}"
+                    )
+            dest_store.write_unit(unit, buf)
+        advanced = False
+        with shared["lock"]:
+            shared["completed"].add(t.unit)
+            while shared["done"] in shared["completed"]:
+                shared["done"] += 1
+                advanced = True
+            new_done = shared["done"]
+        if advanced:
+            with self._cv:
+                self._server.update_progress(
+                    self.model, dest_name, self.shard_idx, version, new_done
+                )
 
     def _pull_resharded_span(
         self,

@@ -14,6 +14,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 #: registration/transfer (4.3.2 "Tiny-Tensor Optimization").
 TINY_TENSOR_BYTES = 2 * 1024 * 1024
 
+#: Data-plane defaults shared by the threaded client, the simulator and
+#: the server's scheduler: up to ``DEFAULT_WINDOW`` unit flows in flight
+#: per destination shard (windowed pipelining), and units larger than
+#: ``DEFAULT_CHUNK_BYTES`` split into byte-range reads. The chunk
+#: threshold doubles as the scheduler's "giant unit" hint: workloads
+#: whose units exceed it replicate badly over store-and-forward pipeline
+#: chains (a relay can only serve *completed* units), so the scheduler
+#: prefers partitioning them across fully-published replicas.
+DEFAULT_WINDOW = 4
+DEFAULT_CHUNK_BYTES = 1024 * 1024 * 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class TensorMeta:

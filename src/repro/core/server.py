@@ -28,6 +28,7 @@ import dataclasses
 import logging
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+from repro.core import meta as meta_defaults
 from repro.core import versions as version_lib
 from repro.core.errors import (
     ConsistencyError,
@@ -80,6 +81,18 @@ class ReplicaVersionState:
     seed_cache: bool = False
     #: shards that called complete_replicate
     completed_shards: Set[int] = dataclasses.field(default_factory=set)
+    #: for in-progress replicas: the multi-source read plan as ordered
+    #: (source replica, start_unit, stop_unit) ranges; ``source`` above is
+    #: always the plan's primary (first) entry
+    plan: List[Tuple[str, int, int]] = dataclasses.field(default_factory=list)
+    #: bumped whenever the plan is (re)partitioned; readers poll it
+    assign_epoch: int = 0
+    #: this replica *as a source*: per-shard count of active readers
+    shard_readers: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: snapshot of the version's source generation when the plan was built
+    #: (work stealing: a reader's progress report re-partitions only when a
+    #: source arrived since — an O(1) check on the hot path)
+    plan_gen: int = 0
 
     def is_source_candidate(self) -> bool:
         return self.status in (PUBLISHED, IN_PROGRESS)
@@ -156,11 +169,33 @@ class ModelState:
     )
     txns: Dict[Tuple[str, int], _Txn] = dataclasses.field(default_factory=dict)
     pending: List[_PendingReplicate] = dataclasses.field(default_factory=list)
+    #: per-version source generation: bumped whenever a replica finishes
+    #: holding the version (publish of the last shard / completed
+    #: replication) — i.e. whenever the multi-source candidate pool grew
+    source_gen: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
 # Results returned to clients
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceSlice:
+    """One source replica's share of a destination's transfer-unit list.
+
+    The multi-source scheduler partitions the destination's units
+    ``[start_unit, stop_unit)`` across all eligible replicas holding the
+    version; a ``stop_unit`` of ``-1`` means "through the last unit"
+    (emitted when the server does not know the destination's unit count)."""
+
+    source: str
+    source_kind: str
+    transport: str  # "rdma" | "tcp"
+    start_unit: int
+    stop_unit: int
+    seeding: bool = False
+    source_shards: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +208,15 @@ class Assignment:
     stripes byte-interval reads across *all* source shards instead of the
     shard-to-shard unit pipe. Zero means "unknown" (legacy constructors)
     and is treated as same-layout.
+
+    ``sources`` is the multi-source read plan: per-source unit ranges
+    partitioned over every eligible replica holding the version. The
+    legacy single-source fields (``source``/``transport``/...) always
+    describe the *primary* source — ``sources[0]`` when a plan exists.
+    ``epoch`` identifies the plan revision; the server bumps it on
+    re-partitioning (source failure, work stealing) and readers compare
+    it against :meth:`ReferenceServer.assignment_epoch` to pick up the
+    new plan mid-transfer.
     """
 
     version: int
@@ -182,6 +226,8 @@ class Assignment:
     seeding: bool = False  # dest becomes its DC's seeding replica
     source_shards: int = 0
     dest_shards: int = 0
+    sources: Tuple[SourceSlice, ...] = ()
+    epoch: int = 0
 
     @property
     def resharded(self) -> bool:
@@ -190,6 +236,34 @@ class Assignment:
             and self.dest_shards > 0
             and self.source_shards != self.dest_shards
         )
+
+    @property
+    def multi_source(self) -> bool:
+        return len(self.sources) > 1
+
+    def slices(self, num_units: int) -> List[SourceSlice]:
+        """Normalized per-source unit ranges: legacy single-source
+        assignments expand to one slice spanning every unit, and
+        open-ended ranges are clamped to ``num_units``."""
+        if self.sources:
+            return [
+                dataclasses.replace(
+                    s,
+                    stop_unit=num_units if s.stop_unit < 0 else min(s.stop_unit, num_units),
+                )
+                for s in self.sources
+            ]
+        return [
+            SourceSlice(
+                source=self.source,
+                source_kind=self.source_kind,
+                transport=self.transport,
+                start_unit=0,
+                stop_unit=num_units,
+                seeding=self.seeding,
+                source_shards=self.source_shards,
+            )
+        ]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,12 +315,27 @@ class ReferenceServer:
         pipeline_replication: bool = True,
         smart_skipping: bool = True,
         scheduler: str = "least_loaded",  # paper 4.3.1 | "depth_aware" (beyond-paper)
+        # "pinned" pins every reader to the first candidate by name — the
+        # naive-broadcast baseline benchmarks compare against
+        max_sources: int = 4,
+        work_stealing: bool = True,
+        chunk_hint: Optional[float] = None,
     ) -> None:
         self._models: Dict[str, ModelState] = {}
         self._heartbeat_timeout = heartbeat_timeout
         self._pipeline = pipeline_replication
         self._smart_skipping = smart_skipping
         self._scheduler = scheduler
+        #: max replicas a multi-source assignment partitions units across;
+        #: 1 disables multi-source planning entirely (legacy single source)
+        self._max_sources = max(1, max_sources)
+        self._work_stealing = work_stealing
+        #: the data plane's sub-unit chunk threshold, used as the "giant
+        #: unit" hint when choosing between pipeline chaining and
+        #: published-pool partitioning (see _plan_assignment)
+        self._chunk_hint = (
+            meta_defaults.DEFAULT_CHUNK_BYTES if chunk_hint is None else chunk_hint
+        )
         self._events: Dict[str, List[Event]] = {}
         self._watchers: List[Callable[[], None]] = []
         self._seq = 0
@@ -259,6 +348,8 @@ class ReferenceServer:
             "reassignments": 0,
             "evictions": 0,
             "smart_skips": 0,
+            "multi_source_assignments": 0,
+            "work_steals": 0,
         }
 
     # -- notification plumbing ------------------------------------------------
@@ -418,8 +509,22 @@ class ReferenceServer:
             src_state = vmap.get(rv.source)
             if src_state is None:
                 return None  # source died; awaiting _reassign
-            return self._make_assignment(st, rv.version, src_state, dest=info)
+            return self._make_assignment(
+                st, rv.version, src_state, dest=info,
+                plan=rv.plan or None, epoch=rv.assign_epoch,
+            )
         return None
+
+    def assignment_epoch(self, model: str, replica: str, version: int) -> int:
+        """Current plan revision of an in-progress replica. Readers compare
+        this against their Assignment's epoch between unit flows: a bump
+        means the plan was re-partitioned (source death, work stealing) and
+        the reader should re-fetch its assignment."""
+        st = self._model(model)
+        rv = st.versions.get(version, {}).get(replica)
+        if rv is None:
+            raise StaleHandleError(f"{replica} no longer replicating v{version}")
+        return rv.assign_epoch
 
     # -- write path -----------------------------------------------------------
 
@@ -460,6 +565,9 @@ class ReferenceServer:
         self._set_manifest(st, version, replica, info.num_shards, shard_idx, manifest)
         rv = st.versions[version][replica]
         rv.progress[shard_idx] = manifest.num_units
+        if len(rv.progress) >= info.num_shards:
+            # fully published: the multi-source candidate pool grew
+            st.source_gen[version] = st.source_gen.get(version, 0) + 1
         self._service_pending(st)
         self._bump()
         return res
@@ -600,7 +708,10 @@ class ReferenceServer:
         if cur is not None and cur.status == IN_PROGRESS and cur.source:
             src = st.versions[cur.version].get(cur.source)
             if src is not None:
-                return self._make_assignment(st, cur.version, src, dest=info)
+                return self._make_assignment(
+                    st, cur.version, src, dest=info,
+                    plan=cur.plan or None, epoch=cur.assign_epoch,
+                )
         return None
 
     def begin_update(
@@ -700,6 +811,16 @@ class ReferenceServer:
         if rv is None:
             raise StaleHandleError(f"{replica} no longer replicating v{version}")
         rv.progress[shard_idx] = max(rv.progress.get(shard_idx, 0), progress)
+        # work stealing (driven by reader progress reports): a source that
+        # arrived after this plan was built gets a share of the remaining
+        # units. The generation check keeps the hot path O(1).
+        if (
+            self._work_stealing
+            and rv.status == IN_PROGRESS
+            and rv.plan
+            and rv.plan_gen != st.source_gen.get(version, 0)
+        ):
+            self._steal_work(st, version, rv)
         self._bump()
 
     def complete_replicate(
@@ -718,12 +839,10 @@ class ReferenceServer:
         def on_last() -> None:
             rv.status = PUBLISHED
             rv.seeding = False
-            if rv.source is not None:
-                src = st.versions.get(version, {}).get(rv.source)
-                if src is not None and src.refcount > 0:
-                    src.refcount -= 1
-                rv.source = None
+            self._release_sources(st.versions.get(version, {}), rv)
             self.stats["replications_completed"] += 1
+            # this replica is now a fully-held copy: late readers steal from it
+            st.source_gen[version] = st.source_gen.get(version, 0) + 1
             self._maybe_release_offloads(st, version)
             self._service_pending(st)
 
@@ -964,10 +1083,8 @@ class ReferenceServer:
         if not vmap:
             return
         rv = vmap.pop(replica, None)
-        if rv is not None and rv.source is not None:
-            src = vmap.get(rv.source)
-            if src is not None and src.refcount > 0:
-                src.refcount -= 1
+        if rv is not None:
+            self._release_sources(vmap, rv)
         rep_map = st.replica_manifests.get(version)
         if rep_map:
             for key in [k for k in rep_map if k[0] == replica]:
@@ -976,6 +1093,7 @@ class ReferenceServer:
             del st.versions[version]
             st.manifests.pop(version, None)
             st.replica_manifests.pop(version, None)
+            st.source_gen.pop(version, None)
         self._gc_versions(st)
 
     def _gc_versions(self, st: ModelState) -> None:
@@ -984,6 +1102,7 @@ class ReferenceServer:
                 del st.versions[v]
                 st.manifests.pop(v, None)
                 st.replica_manifests.pop(v, None)
+                st.source_gen.pop(v, None)
 
     def _maybe_release_offloads(self, st: ModelState, version: int) -> None:
         """Release offload replicas that outlived their purpose (3.3, 4.3.4):
@@ -1108,6 +1227,11 @@ class ReferenceServer:
             # prefer shallow sources, then least-loaded: builds a balanced
             # replication tree instead of a chain (EXPERIMENTS.md Perf)
             return min(pool, key=lambda c: (layout_penalty(c), c.refcount, c.depth, c.replica))
+        if self._scheduler == "pinned":
+            # naive-broadcast baseline: every reader hits the same (first
+            # by name) source regardless of load — the behavior the
+            # fan-out benchmark quantifies multi-source gains against
+            return min(pool, key=lambda c: (layout_penalty(c), c.replica))
         # paper 4.3.1: least-loaded, deterministic tie-break
         return min(pool, key=lambda c: (layout_penalty(c), c.refcount, c.replica))
 
@@ -1130,8 +1254,28 @@ class ReferenceServer:
         src: ReplicaVersionState,
         *,
         dest: ReplicaInfo,
+        plan: Optional[List[Tuple[str, int, int]]] = None,
+        epoch: int = 0,
     ) -> Assignment:
         cross = self._cross_dc(st, src, dest)
+        vmap = st.versions.get(version, {})
+        slices = []
+        for name, a, b in plan or []:
+            s_rv = vmap.get(name)
+            if s_rv is None:
+                continue
+            s_cross = self._cross_dc(st, s_rv, dest)
+            slices.append(
+                SourceSlice(
+                    source=name,
+                    source_kind=s_rv.kind,
+                    transport="tcp" if s_cross else "rdma",
+                    start_unit=a,
+                    stop_unit=b,
+                    seeding=s_cross,
+                    source_shards=st.replicas[name].num_shards,
+                )
+            )
         return Assignment(
             version=version,
             source=src.replica,
@@ -1140,30 +1284,283 @@ class ReferenceServer:
             seeding=cross,
             source_shards=st.replicas[src.replica].num_shards,
             dest_shards=dest.num_shards,
+            sources=tuple(slices),
+            epoch=epoch,
         )
 
-    def _assign(self, st: ModelState, dest: ReplicaInfo, version: int) -> Assignment:
+    # -- multi-source planning (windowed data plane) ----------------------------
+
+    def _acquire_source(
+        self, st: ModelState, src: ReplicaVersionState, dest: ReplicaInfo
+    ) -> None:
+        src.refcount += 1
+        info = st.replicas.get(src.replica)
+        n = info.num_shards if info is not None else dest.num_shards
+        for s in range(n):
+            src.shard_readers[s] = src.shard_readers.get(s, 0) + 1
+
+    def _release_sources(
+        self, vmap: Dict[str, ReplicaVersionState], rv: ReplicaVersionState
+    ) -> None:
+        """Drop every source reference a reader holds (its whole plan)."""
+        names = {s for s, _, _ in rv.plan}
+        if rv.source is not None:
+            names.add(rv.source)
+        for name in names:
+            src = vmap.get(name)
+            if src is None:
+                continue
+            if src.refcount > 0:
+                src.refcount -= 1
+            for k in src.shard_readers:
+                if src.shard_readers[k] > 0:
+                    src.shard_readers[k] -= 1
+        rv.plan = []
+        rv.source = None
+
+    def _dest_num_units(
+        self, st: ModelState, version: int, dest: ReplicaInfo
+    ) -> Optional[int]:
+        m = st.manifests.get(version, {}).get((dest.num_shards, 0))
+        return None if m is None else m.num_units
+
+    def _pref_key(self, st: ModelState, rv: ReplicaVersionState, dest: ReplicaInfo):
+        """Topology preference: same-node > same-DC > cross-DC, then
+        least-loaded, with deterministic tie-breaks."""
+        info = st.replicas[rv.replica]
+        dest_nodes = {w.node for w in dest.workers.values()}
+        if dest_nodes & {w.node for w in info.workers.values()}:
+            topo = 0
+        elif info.datacenter == dest.datacenter:
+            topo = 1
+        else:
+            topo = 2
+        return (topo, rv.refcount, rv.depth, rv.replica)
+
+    def _multi_pool(
+        self, st: ModelState, version: int, dest: ReplicaInfo
+    ) -> List[ReplicaVersionState]:
+        """Replicas a multi-source plan may partition units across: fully
+        published same-shard-count GPU replicas in the destination's
+        datacenter whose manifests are byte-identical slicings (unit pulls
+        are only interchangeable between identical layouts). Fewer than
+        two means no multi-source plan (callers fall back to the legacy
+        single-source scheduler, which also handles cross-DC seeding,
+        offload copies and pipeline chaining off in-progress replicas)."""
+        n_units = self._dest_num_units(st, version, dest)
+        if n_units is None:
+            return []
+        out = []
+        for rv in st.versions.get(version, {}).values():
+            if rv.replica == dest.name or rv.status != PUBLISHED:
+                continue
+            if rv.kind != KIND_GPU:
+                continue
+            info = st.replicas.get(rv.replica)
+            if info is None or info.failed:
+                continue
+            if info.num_shards != dest.num_shards:
+                continue
+            if info.datacenter != dest.datacenter:
+                continue
+            # fully held: every shard's progress covers every unit
+            if len(rv.progress) < info.num_shards or (
+                rv.progress and min(rv.progress.values()) < n_units
+            ):
+                continue
+            out.append(rv)
+        if len(out) < 2:
+            return out
+        out.sort(key=lambda rv: self._pref_key(st, rv, dest))
+        # layout-identity filter against the destination's own manifest
+        # when it registered one (reshard readers do), else the shard-count
+        # family. Same-count replicas sliced along other axes must not be
+        # mixed into a unit-partitioned plan.
+        ref = st.replica_manifests.get(version, {}).get(
+            (dest.name, 0)
+        ) or st.manifests.get(version, {}).get((dest.num_shards, 0))
+        if ref is None:
+            return out[:1]
+        kept = []
+        for rv in out:
+            m = self.replica_manifest(st.name, version, rv.replica, 0)
+            if m is not None and m.same_layout(ref):
+                kept.append(rv)
+        return kept
+
+    def _partition_units(
+        self,
+        pool: List[ReplicaVersionState],
+        start: int,
+        num_units: int,
+    ) -> List[Tuple[str, int, int]]:
+        """Partition units ``[start, num_units)`` into contiguous ranges
+        across the pool (preference order), sized inversely to each
+        source's current reader load. The most-preferred source serves the
+        head of the range — the units gating downstream pipeline chains.
+        With fewer units than sources, the extra sources get empty ranges:
+        they still join the plan so the data plane can spread the chunks
+        of a giant unit across their uplinks."""
+        remaining = num_units - start
+        srcs = pool[: self._max_sources]
+        if remaining < len(srcs):
+            plan = []
+            pos = start
+            for i, rv in enumerate(srcs):
+                n = 1 if i < remaining else 0
+                plan.append((rv.replica, pos, pos + n))
+                pos += n
+            return plan
+        weights = [1.0 / (1.0 + rv.refcount) for rv in srcs]
+        total = sum(weights)
+        shares = [max(1, int(remaining * w / total)) for w in weights]
+        while sum(shares) > remaining:
+            i = max(range(len(shares)), key=lambda j: (shares[j], j))
+            shares[i] -= 1
+        i = 0
+        while sum(shares) < remaining:
+            shares[i % len(shares)] += 1
+            i += 1
+        plan: List[Tuple[str, int, int]] = []
+        pos = start
+        for rv, n in zip(srcs, shares):
+            plan.append((rv.replica, pos, pos + n))
+            pos += n
+        return plan
+
+    def _has_giant_units(
+        self, st: ModelState, version: int, dest: ReplicaInfo
+    ) -> bool:
+        """True when the destination's units exceed the chunk threshold —
+        such workloads replicate badly over store-and-forward pipeline
+        chains (a relay serves only completed units), so the scheduler
+        prefers chunk-spreading them across fully-published replicas."""
+        m = st.manifests.get(version, {}).get((dest.num_shards, 0))
+        if m is None or not m.units:
+            return False
+        return max(u.nbytes for u in m.units) > self._chunk_hint
+
+    def _plan_assignment(
+        self, st: ModelState, dest: ReplicaInfo, version: int, *, start: int = 0
+    ) -> Optional[List[Tuple[str, int, int]]]:
+        """Multi-source plan when >=2 eligible published replicas exist
+        (and the feature is on); else a single-slice plan from the legacy
+        scheduler. None when no live source exists at all.
+
+        An idle in-progress replica (the least-loaded candidate) beats a
+        multi-source plan for fine-grained workloads: a dedicated pipeline
+        relay moves bytes link-disjointly at full rate, while fanning the
+        tail onto already-shared publisher uplinks would contend. Chains
+        lose only when units are giant (store-and-forward granularity) —
+        then the published pool with sub-unit chunking wins."""
         src = self._find_source(st, version, dest)
+        if self._max_sources > 1:
+            num_units = self._dest_num_units(st, version, dest)
+            if num_units is not None and num_units - start >= 1:
+                pool = self._multi_pool(st, version, dest)
+                if len(pool) >= 2 and (
+                    src is None
+                    or src.status == PUBLISHED
+                    or self._has_giant_units(st, version, dest)
+                ):
+                    return self._partition_units(pool, start, num_units)
         if src is None:
+            return None
+        num_units = self._dest_num_units(st, version, dest)
+        return [(src.replica, start, -1 if num_units is None else num_units)]
+
+    def _install_plan(
+        self,
+        st: ModelState,
+        version: int,
+        rv: ReplicaVersionState,
+        dest_info: ReplicaInfo,
+        plan: List[Tuple[str, int, int]],
+    ) -> None:
+        """Swap an in-progress reader onto a new plan (re-route/steal)."""
+        vmap = st.versions[version]
+        self._release_sources(vmap, rv)
+        for name, _, _ in plan:
+            self._acquire_source(st, vmap[name], dest_info)
+        rv.plan = list(plan)
+        rv.source = plan[0][0]
+        rv.seeding = self._cross_dc(st, vmap[plan[0][0]], dest_info)
+        rv.assign_epoch += 1
+        rv.plan_gen = st.source_gen.get(version, 0)
+
+    def _steal_work(
+        self, st: ModelState, version: int, rv: ReplicaVersionState
+    ) -> None:
+        """Re-partition an in-progress reader's remaining units when the
+        candidate pool gained a source its plan does not use."""
+        if self._max_sources <= 1:
+            return  # single-source mode: no mid-transfer re-partitioning
+        info = st.replicas.get(rv.replica)
+        if info is None or info.failed:
+            return
+        rv.plan_gen = st.source_gen.get(version, 0)  # scanned at this gen
+        num_units = self._dest_num_units(st, version, info)
+        if num_units is None:
+            return
+        start = min(rv.progress.values()) if rv.progress else 0
+        if num_units - start < 2:
+            return
+        # Steal only where a re-partition can actually win: giant-unit
+        # workloads (chunk spread rebalances as full copies appear), or a
+        # single-source plan on a *contended* published source. Healthy
+        # fine-grained pipeline chains and dedicated sources are left
+        # alone — a dedicated relay moves bytes link-disjointly at full
+        # rate, and re-planning it would only add churn.
+        vmap = st.versions.get(version, {})
+        primary = vmap.get(rv.source) if rv.source else None
+        if not self._has_giant_units(st, version, info):
+            if len(rv.plan) > 1:
+                return
+            if primary is not None and (
+                primary.status == IN_PROGRESS or primary.refcount <= 1
+            ):
+                return
+        pool = self._multi_pool(st, version, info)
+        if len(pool) < 2:
+            return
+        current = {s for s, _, _ in rv.plan}
+        if {p.replica for p in pool[: self._max_sources]} <= current:
+            return
+        plan = self._partition_units(pool, start, num_units)
+        self._install_plan(st, version, rv, info, plan)
+        self.stats["work_steals"] += 1
+
+    def _assign(self, st: ModelState, dest: ReplicaInfo, version: int) -> Assignment:
+        plan = self._plan_assignment(st, dest, version)
+        if plan is None:
             raise VersionUnavailableError(
                 f"model {st.name} v{version}: no live replica to serve the read"
             )
-        src.refcount += 1
-        assignment = self._make_assignment(st, version, src, dest=dest)
+        vmap = st.versions[version]
+        for name, _, _ in plan:
+            self._acquire_source(st, vmap[name], dest)
+        primary = vmap[plan[0][0]]
+        assignment = self._make_assignment(
+            st, version, primary, dest=dest, plan=plan
+        )
         self._install_replica_version(
             st,
             dest,
             version,
             status=IN_PROGRESS,
             kind=dest.kind,
-            source=src.replica,
+            source=primary.replica,
             seeding=assignment.seeding,
         )
         rv = st.versions[version][dest.name]
-        rv.depth = src.depth + 1
+        rv.plan = list(plan)
+        rv.plan_gen = st.source_gen.get(version, 0)
+        rv.depth = primary.depth + 1
         for s in range(dest.num_shards):
             rv.progress[s] = 0
         self.stats["replications_started"] += 1
+        if len(plan) > 1:
+            self.stats["multi_source_assignments"] += 1
         return assignment
 
     def _ensure_offload_seed(
@@ -1198,7 +1595,7 @@ class ReferenceServer:
         src = self._find_source(st, version, offinfo)
         if src is None:
             return False
-        src.refcount += 1
+        self._acquire_source(st, src, offinfo)
         self._install_replica_version(
             st,
             offinfo,
@@ -1210,6 +1607,8 @@ class ReferenceServer:
         )
         rv = st.versions[version][off]
         rv.seed_cache = True
+        rv.plan = [(src.replica, 0, -1)]
+        rv.plan_gen = st.source_gen.get(version, 0)
         for s in range(offinfo.num_shards):
             rv.progress[s] = 0
         self.stats["replications_started"] += 1
@@ -1281,18 +1680,21 @@ class ReferenceServer:
             rinfo = st.replicas.get(name)
             if rinfo is None:
                 continue
-            for vmap in st.versions.values():
+            for version, vmap in st.versions.items():
                 rv = vmap.get(name)
                 if rv is None or rv.status != IN_PROGRESS:
                     continue
-                if rv.source is not None and rv.source in vmap:
-                    continue  # source still alive; nothing to do
-                src = self._find_source(st, rv.version, rinfo)
-                if src is None:
+                planned = {s for s, _, _ in rv.plan}
+                if rv.source is not None:
+                    planned.add(rv.source)
+                if planned and all(s in vmap for s in planned):
+                    continue  # every plan source still alive; nothing to do
+                # re-partition the uncompleted tail across the survivors
+                start = min(rv.progress.values()) if rv.progress else 0
+                plan = self._plan_assignment(st, rinfo, version, start=start)
+                if plan is None:
                     continue  # graceful: reader keeps polling, may error out
-                src.refcount += 1
-                rv.source = src.replica
-                rv.seeding = self._cross_dc(st, src, rinfo)
+                self._install_plan(st, version, rv, rinfo, plan)
                 self.stats["reassignments"] += 1
 
 

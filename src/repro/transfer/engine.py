@@ -25,12 +25,20 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.errors import ChecksumError, NotRegisteredError, TensorHubError
-from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, build_units
+from repro.core.meta import (  # noqa: F401  (DEFAULT_* re-exported)
+    DEFAULT_CHUNK_BYTES,
+    DEFAULT_WINDOW,
+    ShardManifest,
+    TensorMeta,
+    TransferUnit,
+    build_units,
+)
 from repro.transfer import checksum as checksum_lib
 
 #: per-tensor layout descriptor: (global_shape, offset) — see
 #: ``repro.resharding`` for the format
 LayoutEntry = Tuple[Tuple[int, ...], Tuple[int, ...]]
+
 
 
 class TransportError(TensorHubError):
@@ -284,6 +292,42 @@ class LocalTransport:
                 )
         dst_store.write_unit(unit, payload)
         self.bytes_moved += unit.nbytes
+
+    def read_unit_range(
+        self,
+        src_replica: str,
+        shard_idx: int,
+        unit: TransferUnit,
+        offset: int,
+        nbytes: int,
+    ) -> np.ndarray:
+        """Pull one byte sub-range of a transfer unit (sub-unit chunking).
+
+        Like :meth:`read_interval` there is no manifest checksum at chunk
+        granularity: the source checksums the range at read time and the
+        reader re-verifies after the wire copy; the caller additionally
+        verifies the *assembled* unit against the manifest checksum, so
+        end-to-end protection is preserved under chunking."""
+        src = self.registry.get(src_replica, shard_idx)
+        full = src.read_unit(unit)
+        if offset < 0 or offset + nbytes > full.nbytes:
+            raise TensorHubError(
+                f"unit {unit.name}: chunk [{offset}, {offset + nbytes}) "
+                f"exceeds unit of {full.nbytes}B"
+            )
+        view = full[offset : offset + nbytes]
+        expected = checksum_lib.checksum(view) if self.verify_checksums else 0
+        payload = view.copy()  # the wire copy
+        if self.verify_checksums:
+            got = checksum_lib.checksum(payload)
+            if got != expected:
+                raise ChecksumError(
+                    f"chunk {unit.name}[{offset}:{offset + nbytes}] from "
+                    f"{src_replica}/shard{shard_idx}: checksum {got:#x} != "
+                    f"expected {expected:#x}"
+                )
+        self.bytes_moved += nbytes
+        return payload
 
     def read_interval(
         self,

@@ -13,6 +13,7 @@ UCX / object-store models, 2.3 + 5).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import math
@@ -20,7 +21,8 @@ from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
 from repro.core.errors import StaleHandleError, TensorHubError
 from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
-from repro.core.server import Assignment, ReferenceServer, offload_name
+from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
+from repro.transfer.engine import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW
 from repro.transfer.hardware import CLUSTER, ClusterHW
 from repro.transfer.simnet import FlowKilled, Link, SimEnv, SimEvent, SimNetwork
 
@@ -37,6 +39,41 @@ class _SimSourceLost(Exception):
     def __init__(self, source: str) -> None:
         super().__init__(source)
         self.source = source
+
+
+class _SimReplan(Exception):
+    """Internal: the server re-partitioned our plan (work stealing or
+    re-routing); re-fetch the assignment and resume from the prefix."""
+
+
+#: one data-plane fetch: a whole transfer unit, or a byte sub-range of
+#: one; ``owner`` is the index of the plan slice the server's partition
+#: assigned it to (a load hint — any same-layout source may execute it)
+_Task = collections.namedtuple("_Task", "unit offset nbytes owner")
+
+
+class _SimSlots:
+    """Counting semaphore over SimEvents: caps in-flight flows per shard."""
+
+    def __init__(self, env: SimEnv, slots: int) -> None:
+        self.env = env
+        self.free = slots
+        self._waiters: collections.deque = collections.deque()
+
+    def acquire(self) -> SimEvent:
+        ev = SimEvent(self.env)
+        if self.free > 0:
+            self.free -= 1
+            ev.succeed()
+        else:
+            self._waiters.append(ev)
+        return ev
+
+    def release(self) -> None:
+        if self._waiters:
+            self._waiters.popleft().succeed()
+        else:
+            self.free += 1
 
 
 def make_manifest(unit_bytes: Sequence[int]) -> ShardManifest:
@@ -129,11 +166,27 @@ class SimCluster:
         smart_skipping: bool = True,
         control_latency: Optional[float] = None,
         tcp_compression: float = 1.0,
+        window: int = DEFAULT_WINDOW,
+        chunk_bytes: Optional[float] = DEFAULT_CHUNK_BYTES,
+        tcp_streams: int = 1,
+        max_sources: int = 4,
+        scheduler: str = "least_loaded",
+        work_stealing: bool = True,
     ) -> None:
         #: cross-DC wire-byte multiplier: int8 quantization (kernels/quant)
         #: moves q(int8) + per-1024 f32 scales = x0.2539 of bf16 bytes at
         #: <1% relative error (beyond-paper; EXPERIMENTS.md Perf)
         self.tcp_compression = tcp_compression
+        #: windowed data plane: concurrent unit flows per destination shard
+        #: (RDMA/PCIe paths); units above ``chunk_bytes`` are split into
+        #: sub-unit byte-range flows. ``window=1`` + ``chunk_bytes=None``
+        #: reproduces the pre-scheduler one-flow-at-a-time loop exactly.
+        self.window = max(1, window)
+        self.chunk_bytes = chunk_bytes if chunk_bytes and chunk_bytes > 0 else None
+        #: cross-DC TCP concurrency: streams per shard for WAN fetches.
+        #: Kept at 1 by default to preserve the paper-calibrated 2.5 s
+        #: seeding transfer (5.4); raising it multi-streams the VPC link.
+        self.tcp_streams = max(1, tcp_streams)
         self.env = SimEnv()
         self.net = SimNetwork(self.env)
         self.hw = hw
@@ -144,6 +197,15 @@ class SimCluster:
             heartbeat_timeout=hw.heartbeat_timeout,
             pipeline_replication=pipeline_replication,
             smart_skipping=smart_skipping,
+            scheduler=scheduler,
+            max_sources=max_sources,
+            work_stealing=work_stealing,
+            # chunking disabled means no unit is "giant" to the scheduler:
+            # it must not plan around chunk-spreading the data plane will
+            # never perform (None would select the server's default hint)
+            chunk_hint=(
+                self.chunk_bytes if self.chunk_bytes is not None else math.inf
+            ),
         )
         self.server.add_watcher(self.env.state_notify)
         self._workers: Dict[Tuple[str, int], SimWorker] = {}
@@ -245,11 +307,27 @@ class SimCluster:
         self._notify_progress_keys(name)
 
     def _notify_progress_keys(self, name: str) -> None:
+        """Wake every waiter keyed on a dying replica. The shard count is
+        derived from the cluster (or, for server-only replicas, from the
+        server's registration) rather than a fixed fallback, and a
+        predicate sweep catches any remaining keys (control keys, stale
+        layouts) so >64-shard replicas cannot miss wakeups."""
         rep = self.replicas.get(name)
-        n = rep.num_shards if rep is not None else 64
-        for i in range(n):
-            self.env.key_notify(("progress", name, i))
-            self.env.key_notify(("progress", offload_name(name), i))
+        n = rep.num_shards if rep is not None else None
+        if n is None:
+            for st in self.server._models.values():  # noqa: SLF001 — harness hook
+                info = st.replicas.get(name)
+                if info is not None:
+                    n = info.num_shards
+                    break
+        names = (name, offload_name(name))
+        if n is not None:
+            for i in range(n):
+                for nm in names:
+                    self.env.key_notify(("progress", nm, i))
+        self.env.key_notify_where(
+            lambda k: isinstance(k, tuple) and len(k) >= 2 and k[1] in names
+        )
 
     # -- metrics -------------------------------------------------------------------------
 
@@ -437,19 +515,24 @@ class SimShard:
         """The pipeline-replication read loop (4.3.3) in virtual time.
 
         Dispatches per assignment: same-layout sources stream whole units
-        shard-to-shard; a source with a different shard count runs the
-        resharding plan (striped interval flows from *all* source shards).
-        Progress counts completed destination units either way, so a
-        re-route mid-transfer may switch modes and resume (4.5).
+        (multi-source plans partition the unit list across replicas and
+        pull them through a windowed, chunked flow pool); a source with a
+        different shard count runs the resharding plan (striped interval
+        flows from *all* source shards). Progress counts completed
+        destination units either way, so a re-route or re-partition
+        mid-transfer may switch modes and resume (4.5).
         """
         version = assignment.version
+        completed: set = set()  # out-of-order completions, kept across re-plans
         while True:
             try:
                 if assignment.resharded:
                     yield from self._g_pull_resharded(assignment, dest)
                 else:
-                    yield from self._g_pull_units(assignment, dest)
+                    yield from self._g_pull_units(assignment, dest, completed)
                 break
+            except _SimReplan:
+                assignment = yield from self._g_refetch(dest)
             except _SimSourceLost as e:
                 assignment = yield from self._g_reroute(dest, e.source)
         yield self._ctrl()
@@ -465,7 +548,10 @@ class SimShard:
         self, source: str, version: int, src_shard: int, needed: int
     ) -> Generator:
         """Wait until the source shard's progress counter exceeds
-        ``needed``; keyed wakeups with a periodic re-check safety net."""
+        ``needed``. Purely keyed wakeups backed by the event loop's long
+        safety tick (SimEnv.safety_tick) instead of the old 0.5 s polling
+        timeout (measurable wakeup overhead at large fan-out — and the
+        stale poll timers inflated ``env.now`` after runs finished)."""
         env = self.env
         while True:
             if self.dead:
@@ -478,11 +564,51 @@ class SimShard:
                 raise _SimSourceLost(source)
             if avail > needed:
                 return avail
-            yield env.any_of(
-                env.key_wait(("progress", source, src_shard)), env.timeout(0.5)
+            yield env.key_wait(("progress", source, src_shard))
+
+    # -- same-layout unit pulls: windowed, chunked, multi-source ----------------
+
+    def _plane_knobs(self, slices: List[SourceSlice]) -> Tuple[int, Optional[float]]:
+        """Window depth and chunk threshold for this pull. WAN TCP pulls
+        follow ``tcp_streams`` (default 1: preserves the paper-calibrated
+        single-stream seeding transfer); RDMA/PCIe pulls use the cluster's
+        window/chunk knobs."""
+        cl = self.rep.cluster
+        if any(sl.transport == "tcp" for sl in slices):
+            window = cl.tcp_streams
+            chunk = cl.chunk_bytes if cl.tcp_streams > 1 else None
+        else:
+            window = cl.window
+            chunk = cl.chunk_bytes
+        return window, chunk
+
+    def _g_pull_units(
+        self, assignment: Assignment, dest: str, completed: Optional[set] = None
+    ) -> Generator:
+        version = assignment.version
+        units = self.rep.manifest_for(self.idx).units
+        if completed is None:
+            completed = set()
+        while True:
+            done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
+            if done >= len(units):
+                return
+            # units completed out of order survive re-plans (their bytes
+            # are final); only the uncompleted ones are re-fetched
+            completed -= set(range(done))
+            slices = assignment.slices(len(units))
+            window, chunk = self._plane_knobs(slices)
+            if window <= 1 and chunk is None and len(slices) == 1:
+                yield from self._g_pull_units_seq(assignment, dest)
+                return
+            yield from self._g_pull_units_windowed(
+                assignment, dest, slices, done, window, chunk, completed
             )
 
-    def _g_pull_units(self, assignment: Assignment, dest: str) -> Generator:
+    def _g_pull_units_seq(self, assignment: Assignment, dest: str) -> Generator:
+        """The pre-scheduler data plane: one whole-unit flow at a time from
+        a single source. Kept verbatim as the window=1/chunking-off
+        reference path (benchmarks compare against it bit-for-bit)."""
         env = self.env
         version = assignment.version
         manifest = self.rep.manifest_for(self.idx)
@@ -510,6 +636,224 @@ class SimShard:
                     self.rep.model, dest, self.idx, version, done
                 )
                 env.key_notify(("progress", dest, self.idx))
+
+    def _build_tasks(
+        self,
+        slices: List[SourceSlice],
+        units: Sequence[TransferUnit],
+        done: int,
+        chunk: Optional[float],
+        completed: set,
+    ) -> List[_Task]:
+        """Expand the plan's unit ranges into an ordered task list. Units
+        above the chunk threshold become byte-range tasks; with several
+        sources the chunks of one unit are owner-hinted round-robin across
+        *all* of them — same-layout replicas hold identical bytes, so a
+        single giant tensor can aggregate every source uplink instead of
+        binding to its range owner. Units in ``completed`` (finished out
+        of order before a re-plan) are skipped."""
+        owners: Dict[int, int] = {}
+        for k, sl in enumerate(slices):
+            for ui in range(max(sl.start_unit, done), min(sl.stop_unit, len(units))):
+                owners.setdefault(ui, k)
+        tasks: List[_Task] = []
+        rr = 0
+        for ui in range(done, len(units)):
+            if ui in completed:
+                continue
+            k = owners.get(ui, 0)
+            nbytes = units[ui].nbytes
+            if chunk is not None and nbytes > chunk:
+                n_parts = int(math.ceil(nbytes / chunk))
+                per = nbytes / n_parts  # fluid bytes: equal fractional chunks
+                for j in range(n_parts):
+                    tgt = (rr + j) % len(slices) if len(slices) > 1 else k
+                    tasks.append(_Task(ui, j * per, per, tgt))
+                rr += n_parts
+            else:
+                tasks.append(_Task(ui, 0, nbytes, k))
+        return tasks
+
+    def _g_pull_units_windowed(
+        self,
+        assignment: Assignment,
+        dest: str,
+        slices: List[SourceSlice],
+        done: int,
+        window: int,
+        chunk: Optional[float],
+        completed: set,
+    ) -> Generator:
+        """Windowed multi-source pull: one worker process per source slice,
+        a shared slot pool capping in-flight flows at ``window`` per shard,
+        and in-order prefix advancement of the progress counter (units may
+        *complete* out of order across sources; the counter — which gates
+        downstream pipeline chains and mid-transfer re-routing — only ever
+        advances over a contiguous prefix).
+
+        Execution is availability-aware: the server's unit ranges are load
+        hints, not bindings. A worker claims tasks from its own range
+        first, then steals unclaimed tasks from the global tail — but only
+        tasks its source can already serve (progress gating). Pipeline
+        chaining off partial replicas and bandwidth aggregation across
+        published ones fall out of the same loop."""
+        env = self.env
+        version = assignment.version
+        units = self.rep.manifest_for(self.idx).units
+        tasks = self._build_tasks(slices, units, done, chunk, completed)
+        if not tasks:
+            return
+        remaining: Dict[int, int] = {}
+        for t in tasks:
+            remaining[t.unit] = remaining.get(t.unit, 0) + 1
+        state = {
+            "done": done,
+            "completed": completed,  # shared with the caller: survives re-plans
+            "remaining": remaining,
+            "tasks": tasks,
+            "claimed": [False] * len(tasks),
+            "unclaimed": len(tasks),
+            "scan": 0,  # first possibly-unclaimed task index
+            "stop": None,  # None | "replan" | BaseException
+            "epoch": assignment.epoch,
+        }
+        ctl = ("ctl", dest, self.idx)
+        slots = _SimSlots(env, window)
+        children = [
+            env.process(
+                self._g_source_worker(k, sl, state, slots, dest, version, ctl)
+            )
+            for k, sl in enumerate(slices)
+        ]
+        done_ev = SimEvent(env)
+        pending = len(children)
+
+        def on_child(ev: SimEvent) -> None:
+            nonlocal pending
+            if ev.error is not None and not isinstance(state["stop"], BaseException):
+                state["stop"] = ev.error
+                env.key_notify(ctl)
+            pending -= 1
+            if pending == 0:
+                done_ev.succeed()
+
+        for c in children:
+            c.add_callback(on_child)
+        yield done_ev
+        if self.dead:
+            raise PreemptedError(self.worker.worker_id)
+        stop = state["stop"]
+        if isinstance(stop, BaseException):
+            raise stop
+        if stop == "replan":
+            raise _SimReplan()
+
+    def _g_source_worker(
+        self,
+        k: int,
+        sl: SourceSlice,
+        state: dict,
+        slots: _SimSlots,
+        dest: str,
+        version: int,
+        ctl: tuple,
+    ) -> Generator:
+        env = self.env
+        tasks: List[_Task] = state["tasks"]
+        claimed: List[bool] = state["claimed"]
+        while True:
+            if state["stop"] is not None:
+                return
+            if self.dead:
+                raise PreemptedError(self.worker.worker_id)
+            # pick up server-side re-partitions (work stealing, re-routes)
+            try:
+                ep = self.server.assignment_epoch(self.rep.model, dest, version)
+            except (StaleHandleError, TensorHubError):
+                return  # dest state gone; the parent unwinds
+            if ep != state["epoch"]:
+                if state["stop"] is None:
+                    state["stop"] = "replan"
+                    env.key_notify(ctl)
+                return
+            if state["unclaimed"] == 0:
+                return
+            try:
+                avail = self.server.shard_progress(
+                    self.rep.model, sl.source, version, self.idx
+                )
+            except (StaleHandleError, TensorHubError):
+                raise _SimSourceLost(sl.source)
+            # Global in-order claiming: take the LOWEST-indexed unclaimed
+            # task this source can serve. Keeping the in-flight window on
+            # the head of the unit list makes the progress *prefix* (which
+            # gates downstream pipeline chains) advance at full aggregate
+            # rate; claiming ranges out of order would starve relays to
+            # 1/window of the bandwidth. Faster/idler sources win more
+            # claims, so load balances itself around the server's ranges.
+            while state["scan"] < len(tasks) and claimed[state["scan"]]:
+                state["scan"] += 1
+            pick = None
+            for i in range(state["scan"], len(tasks)):
+                if not claimed[i] and tasks[i].unit < avail:
+                    pick = i
+                    break
+            if pick is None:
+                # nothing this source can serve yet: wait for its progress
+                yield env.any_of(
+                    env.key_wait(("progress", sl.source, self.idx)),
+                    env.key_wait(ctl),
+                )
+                continue
+            claimed[pick] = True
+            state["unclaimed"] -= 1
+            if state["unclaimed"] == 0:
+                env.key_notify(ctl)  # wake gated siblings so they can exit
+            t = tasks[pick]
+            yield slots.acquire()
+            if state["stop"] is not None:
+                slots.release()
+                return
+            try:
+                yield self._flow_for_bytes(
+                    sl.source, self.idx, t.nbytes, sl.transport, dest
+                )
+            except FlowKilled:
+                slots.release()
+                if self.dead:
+                    raise PreemptedError(self.worker.worker_id)
+                raise _SimSourceLost(sl.source)
+            slots.release()
+            rem = state["remaining"][t.unit] - 1
+            state["remaining"][t.unit] = rem
+            if rem == 0:
+                state["completed"].add(t.unit)
+                advanced = False
+                while state["done"] in state["completed"]:
+                    state["done"] += 1
+                    advanced = True
+                if advanced:
+                    self.server.update_progress(
+                        self.rep.model, dest, self.idx, version, state["done"]
+                    )
+                    env.key_notify(("progress", dest, self.idx))
+
+    def _g_refetch(self, dest: str) -> Generator:
+        """Re-fetch the (re-partitioned) assignment after a plan epoch
+        bump; no failure to report."""
+        yield self._ctrl()
+        while True:
+            if self.dead:
+                raise PreemptedError(self.worker.worker_id)
+            try:
+                new = self.server.get_assignment(self.rep.model, dest)
+            except StaleHandleError:
+                if self.dead:
+                    raise PreemptedError(self.worker.worker_id)
+                raise
+            if new is not None:
+                return new
+            yield self.env.state_wait()
 
     def _g_pull_resharded(self, assignment: Assignment, dest: str) -> Generator:
         """Striped cross-layout pull in virtual time: real planner, fluid

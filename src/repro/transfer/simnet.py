@@ -95,6 +95,13 @@ class SimEvent:
 class SimEnv:
     """Minimal deterministic event loop (SimPy-flavoured)."""
 
+    #: safety-net period for keyed waiters (seconds of virtual time). A
+    #: keyed wait is woken spuriously after this long *only once the hard
+    #: event heap has quiesced* — i.e. a missed wakeup can delay a waiter,
+    #: never deadlock it, and the tick costs nothing on healthy runs
+    #: (it fires after all real work, when no waiter is left pending).
+    safety_tick: float = 30.0
+
     def __init__(self) -> None:
         self.now = 0.0
         self._heap: List[Tuple[float, int, Callable[[], None]]] = []
@@ -105,6 +112,9 @@ class SimEnv:
         #: keyed one-shot events for targeted wakeups (e.g. per-source
         #: progress-counter advances) — avoids thundering-herd wake storms
         self._keyed: Dict[object, SimEvent] = {}
+        #: next armed safety tick (None = nothing armed). Kept *out* of the
+        #: hard heap so an armed-but-unneeded tick never advances ``now``.
+        self._safety_at: Optional[float] = None
 
     # -- scheduling --------------------------------------------------------------
 
@@ -126,16 +136,36 @@ class SimEnv:
         ev.succeed()
 
     def key_wait(self, key: object) -> SimEvent:
-        """Wait until the next key_notify(key)."""
+        """Wait until the next key_notify(key) (or a safety tick)."""
         ev = self._keyed.get(key)
         if ev is None:
             ev = SimEvent(self)
             self._keyed[key] = ev
+        if self._safety_at is None:
+            self._safety_at = self.now + self.safety_tick
         return ev
 
     def key_notify(self, key: object) -> None:
         ev = self._keyed.pop(key, None)
         if ev is not None:
+            ev.succeed()
+
+    def key_notify_where(self, pred: Callable[[object], bool]) -> int:
+        """Fire every pending keyed event whose key matches ``pred`` —
+        used by failure paths that cannot enumerate exact keys (e.g. all
+        progress keys of a dying replica, whatever its shard count)."""
+        hits = [k for k in self._keyed if pred(k)]
+        for k in hits:
+            self._keyed.pop(k).succeed()
+        return len(hits)
+
+    def _fire_safety(self) -> None:
+        """Spurious-wakeup sweep: fire and drop every keyed event. Waiters
+        re-check their condition and re-wait (re-arming the tick); stale
+        entries nobody listens to are garbage-collected here."""
+        stale = self._keyed
+        self._keyed = {}
+        for ev in stale.values():
             ev.succeed()
 
     def any_of(self, *events: SimEvent) -> SimEvent:
@@ -186,10 +216,33 @@ class SimEnv:
     # -- run ----------------------------------------------------------------------
 
     def run(self, until: float = math.inf) -> float:
-        while self._heap and self._heap[0][0] <= until:
-            t, _, cb = heapq.heappop(self._heap)
-            self.now = max(self.now, t)
-            cb()
+        while True:
+            while self._heap and self._heap[0][0] <= until:
+                t, _, cb = heapq.heappop(self._heap)
+                self.now = max(self.now, t)
+                cb()
+            # Hard heap quiesced: if keyed waiters are still pending, fire
+            # the safety net and keep going; otherwise we are done. The
+            # tick advances virtual time only in this (otherwise-deadlocked)
+            # case, so healthy runs see identical timings.
+            if (
+                self._safety_at is not None
+                and self._safety_at <= until
+                and any(
+                    ev._waiters or ev._callbacks for ev in self._keyed.values()
+                )
+            ):
+                self.now = max(self.now, self._safety_at)
+                self._safety_at = None
+                self._fire_safety()
+                continue
+            break
+        # disarm only when nobody is left waiting: a keyed waiter pending
+        # across a finite-`until` boundary keeps its safety net for the
+        # next run() call (clearing it unconditionally would deadlock a
+        # missed wakeup, which the safety tick exists to prevent)
+        if not any(ev._waiters or ev._callbacks for ev in self._keyed.values()):
+            self._safety_at = None
         if math.isfinite(until):
             self.now = max(self.now, until)
         return self.now
@@ -245,6 +298,10 @@ class SimNetwork:
         self._links: Dict[str, Link] = {}
         self._flows: Set[Flow] = set()
         self._last_advance = 0.0
+        #: earliest pending completion tick (de-dup: re-scheduling on every
+        #: reallocation without it turns interacting windowed flows into a
+        #: stale-tick storm, each tick a global O(flows) reallocation)
+        self._next_tick = math.inf
         self.bytes_delivered = 0.0
         #: per-link cumulative bytes (for traffic accounting, Fig 12c)
         self.link_bytes: Dict[str, float] = {}
@@ -316,12 +373,14 @@ class SimNetwork:
         for lk in fl.links:
             lk.flows.discard(fl)
 
-    def _advance_to_now(self) -> None:
-        """Credit every active flow with rate * elapsed."""
+    def _advance_to_now(self) -> bool:
+        """Credit every active flow with rate * elapsed. Returns True when
+        any flow finished (the flow set — and hence the rate allocation —
+        changed)."""
         dt = self.env.now - self._last_advance
         self._last_advance = self.env.now
         if dt <= 0:
-            return
+            return False
         finished: List[Flow] = []
         for fl in self._flows:
             moved = min(fl.remaining, fl.rate * dt)
@@ -337,6 +396,7 @@ class SimNetwork:
         for fl in finished:
             self._detach(fl)
             fl.event.succeed()
+        return bool(finished)
 
     def _reallocate(self) -> None:
         """Max-min fair (progressive filling) over all active flows."""
@@ -380,19 +440,29 @@ class SimNetwork:
         self._schedule_next_completion()
 
     def _schedule_next_completion(self) -> None:
-        # Schedule a tick at the earliest completion under *current* rates.
-        # Rates may change before it fires (stale ticks advance the fluid
-        # model and recompute — harmless); every reallocation re-schedules,
-        # so the true earliest completion is always covered.
+        # Schedule a tick at the earliest completion under *current* rates,
+        # but only when it beats the earliest tick already pending: a
+        # pending earlier tick re-evaluates anyway, so the true earliest
+        # completion stays covered without flooding the heap. Stale ticks
+        # (rates changed since) advance the fluid model; they trigger the
+        # global reallocation only when a flow actually finished.
         nxt = math.inf
         for fl in self._flows:
             if fl.rate > 0:
                 nxt = min(nxt, fl.remaining / fl.rate)
         if not math.isfinite(nxt):
             return
+        at = self.env.now + nxt
+        if at >= self._next_tick - 1e-15:
+            return
+        self._next_tick = at
 
         def tick() -> None:
-            self._advance_to_now()
-            self._reallocate()
+            if self._next_tick <= self.env.now:
+                self._next_tick = math.inf
+            if self._advance_to_now():
+                self._reallocate()
+            else:
+                self._schedule_next_completion()
 
         self.env.schedule(nxt, tick)

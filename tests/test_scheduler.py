@@ -1,0 +1,375 @@
+"""Multi-source transfer scheduler tests: unit-list partitioning,
+topology preference, re-partitioning on source death, work stealing,
+per-source-shard reader accounting — server-level (no threads, no sim),
+plus threaded-client end-to-end pulls with windows and chunking."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ReferenceServer, TensorHubClient
+from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.server import PUBLISHED, Assignment, SourceSlice
+
+GB = 10**9
+
+
+def manifest(n_units=8, unit_bytes=100):
+    tensors = tuple(
+        TensorMeta(f"t{i}", (unit_bytes,), "uint8", unit_bytes) for i in range(n_units)
+    )
+    units = tuple(
+        TransferUnit(index=i, name=f"t{i}", nbytes=unit_bytes) for i in range(n_units)
+    )
+    return ShardManifest(tensors=tensors, units=units, checksums=(0,) * n_units)
+
+
+def worker(replica, shard, dc="dc0", node=None):
+    return WorkerInfo(
+        f"{replica}/s{shard}", node or f"{dc}/{replica}", dc, False
+    )
+
+
+def open_replica(s, name, shards=2, dc="dc0", node=None):
+    for i in range(shards):
+        s.open("m", name, shards, i, worker=worker(name, i, dc, node))
+        s.register("m", name, i)
+
+
+def publish(s, name, version, shards=2, op=0, n_units=8, unit_bytes=100):
+    for i in range(shards):
+        s.publish(
+            "m", name, i, version, manifest(n_units, unit_bytes), op_id=op
+        )
+
+
+def assign(s, name, spec=0, op=0, shards=2):
+    a = None
+    for i in range(shards):
+        a = s.begin_replicate("m", name, i, spec, op_id=op)
+    return a
+
+
+def ranges_of(a: Assignment):
+    return [(sl.source, sl.start_unit, sl.stop_unit) for sl in a.sources]
+
+
+class TestPartitioning:
+    def test_tiles_unit_list_exactly(self):
+        s = ReferenceServer()
+        for name in ("a", "b", "c"):
+            open_replica(s, name)
+            publish(s, name, 0)
+        open_replica(s, "r")
+        a = assign(s, "r")
+        assert len(a.sources) == 3
+        pos = 0
+        for sl in a.sources:
+            assert sl.start_unit == pos
+            assert sl.stop_unit >= sl.start_unit
+            pos = sl.stop_unit
+        assert pos == 8  # tiles [0, 8) with no gaps or overlaps
+
+    def test_fairness_unequal_loads(self):
+        """A source already serving readers gets a smaller unit range."""
+        s = ReferenceServer()
+        for name in ("a", "b"):
+            open_replica(s, name)
+            publish(s, name, 0)
+        # load source "a" with two extra reader sessions (harness hook)
+        s._models["m"].versions[0]["a"].refcount += 2  # noqa: SLF001
+        open_replica(s, "r")
+        a = assign(s, "r")
+        share = {sl.source: sl.stop_unit - sl.start_unit for sl in a.sources}
+        assert share["b"] > share["a"]  # least-loaded gets the bigger range
+        assert a.sources[0].source == "b"  # ...and the head of the list
+        assert sum(share.values()) == 8
+
+    def test_single_source_mode_disables_partitioning(self):
+        s = ReferenceServer(max_sources=1)
+        for name in ("a", "b"):
+            open_replica(s, name)
+            publish(s, name, 0)
+        open_replica(s, "r")
+        a = assign(s, "r")
+        assert len(a.sources) <= 1
+
+    def test_more_sources_than_units_adds_empty_ranges(self):
+        """With fewer units than sources the extras join with empty
+        ranges so chunking can still spread a giant unit across them."""
+        s = ReferenceServer()
+        for name in ("a", "b", "c"):
+            open_replica(s, name)
+            publish(s, name, 0, n_units=2)
+        open_replica(s, "r")
+        a = assign(s, "r")
+        assert len(a.sources) == 3
+        assert sum(sl.stop_unit - sl.start_unit for sl in a.sources) == 2
+
+    def test_slices_normalize_legacy_assignment(self):
+        a = Assignment(
+            version=0, source="x", source_kind="gpu", transport="rdma"
+        )
+        (sl,) = a.slices(5)
+        assert (sl.source, sl.start_unit, sl.stop_unit) == ("x", 0, 5)
+        open_ended = Assignment(
+            version=0, source="x", source_kind="gpu", transport="rdma",
+            sources=(SourceSlice("x", "gpu", "rdma", 2, -1),),
+        )
+        (sl,) = open_ended.slices(7)
+        assert (sl.start_unit, sl.stop_unit) == (2, 7)
+
+
+class TestTopology:
+    def test_same_node_preferred_over_same_dc(self):
+        s = ReferenceServer()
+        open_replica(s, "near", node="dc0/shared-node")
+        open_replica(s, "far", node="dc0/other-node")
+        publish(s, "near", 0)
+        publish(s, "far", 0)
+        open_replica(s, "r", node="dc0/shared-node")
+        a = assign(s, "r")
+        assert a.sources[0].source == "near"  # same-node serves the head
+        assert {sl.source for sl in a.sources} == {"near", "far"}
+
+    def test_cross_dc_replicas_never_in_partition(self):
+        s = ReferenceServer()
+        open_replica(s, "local", dc="dc1")
+        open_replica(s, "remote", dc="dc0")
+        publish(s, "local", 0)
+        publish(s, "remote", 0)
+        open_replica(s, "r", dc="dc1")
+        a = assign(s, "r")
+        assert all(sl.source == "local" for sl in a.slices(8))
+
+    def test_only_cross_dc_falls_back_to_seeding(self):
+        s = ReferenceServer()
+        for name in ("far1", "far2"):
+            open_replica(s, name, dc="dc0")
+            publish(s, name, 0)
+        open_replica(s, "r", dc="dc1")
+        a = assign(s, "r")
+        assert len(a.sources) == 1 and a.seeding and a.transport == "tcp"
+
+
+class TestRepartition:
+    def test_source_death_repartitions_remaining_units(self):
+        s = ReferenceServer()
+        for name in ("a", "b", "c"):
+            open_replica(s, name)
+            publish(s, name, 0)
+        open_replica(s, "r")
+        a = assign(s, "r")
+        assert len(a.sources) == 3 and a.epoch == 0
+        for i in range(2):
+            s.update_progress("m", "r", i, 0, 3)  # completed prefix [0, 3)
+        dead = a.sources[0].source
+        s.report_transfer_failure("m", "r", dead)
+        b = s.get_assignment("m", "r")
+        assert b.epoch > a.epoch
+        assert dead not in {sl.source for sl in b.sources}
+        assert min(sl.start_unit for sl in b.sources) == 3  # resumes at prefix
+        assert max(sl.stop_unit for sl in b.sources) == 8
+
+    def test_refcounts_released_on_complete(self):
+        s = ReferenceServer()
+        for name in ("a", "b"):
+            open_replica(s, name)
+            publish(s, name, 0)
+        open_replica(s, "r")
+        assign(s, "r")
+        vmap = s._models["m"].versions[0]  # noqa: SLF001
+        assert vmap["a"].refcount == 1 and vmap["b"].refcount == 1
+        assert vmap["a"].shard_readers == {0: 1, 1: 1}
+        for i in range(2):
+            s.complete_replicate("m", "r", i, 0, op_id=1)
+        assert vmap["a"].refcount == 0 and vmap["b"].refcount == 0
+        assert vmap["a"].shard_readers == {0: 0, 1: 0}
+
+    def test_epoch_stable_without_repartition(self):
+        s = ReferenceServer()
+        for name in ("a", "b"):
+            open_replica(s, name)
+            publish(s, name, 0)
+        open_replica(s, "r")
+        assign(s, "r")
+        for p in range(1, 5):
+            for i in range(2):
+                s.update_progress("m", "r", i, 0, p)
+        assert s.assignment_epoch("m", "r", 0) == 0
+
+
+class TestWorkStealing:
+    def _contended_reader(self, s):
+        """One publisher, two readers pinned to it (no pipeline chains):
+        the published source is contended (refcount 2)."""
+        open_replica(s, "a")
+        publish(s, "a", 0)
+        for r in ("r1", "r2"):
+            open_replica(s, r)
+            assign(s, r)
+
+    def test_late_source_gets_remaining_units(self):
+        s = ReferenceServer(pipeline_replication=False)
+        self._contended_reader(s)
+        open_replica(s, "late")
+        publish(s, "late", 0, op=7)
+        # the steal fires on the reader's next progress report
+        for i in range(2):
+            s.update_progress("m", "r1", i, 0, 2)
+        a = s.get_assignment("m", "r1")
+        assert {sl.source for sl in a.sources} == {"a", "late"}
+        # the steal fired on the first shard's report, when the group's
+        # min progress was still 0: the new plan re-covers [0, 8) and the
+        # reader resumes from its own completed prefix
+        assert min(sl.start_unit for sl in a.sources) == 0
+        assert max(sl.stop_unit for sl in a.sources) == 8
+        assert a.epoch == 1
+        assert s.stats["work_steals"] >= 1
+
+    def test_no_steal_when_disabled(self):
+        s = ReferenceServer(pipeline_replication=False, work_stealing=False)
+        self._contended_reader(s)
+        open_replica(s, "late")
+        publish(s, "late", 0, op=7)
+        for i in range(2):
+            s.update_progress("m", "r1", i, 0, 2)
+        assert s.assignment_epoch("m", "r1", 0) == 0
+        assert s.stats["work_steals"] == 0
+
+    def test_dedicated_chain_not_broken(self):
+        """A reader relaying off a dedicated (refcount-1) source keeps it:
+        re-planning a healthy fine-grained chain would only add churn."""
+        s = ReferenceServer(pipeline_replication=False)
+        open_replica(s, "a")
+        publish(s, "a", 0)
+        open_replica(s, "r1")
+        assign(s, "r1")  # sole reader of "a"
+        open_replica(s, "late")
+        publish(s, "late", 0, op=7)
+        for i in range(2):
+            s.update_progress("m", "r1", i, 0, 2)
+        assert s.assignment_epoch("m", "r1", 0) == 0
+
+
+class TestPinnedScheduler:
+    def test_every_reader_hits_first_candidate(self):
+        s = ReferenceServer(scheduler="pinned", max_sources=1)
+        for name in ("a", "b"):
+            open_replica(s, name)
+            publish(s, name, 0)
+        srcs = set()
+        for r in ("r1", "r2", "r3"):
+            open_replica(s, r)
+            srcs.add(assign(s, r).source)
+        assert srcs == {"a"}  # no load balancing: the naive baseline
+
+
+# ---------------------------------------------------------------------------
+# threaded client end-to-end: windows + chunks move real, verified bytes
+# ---------------------------------------------------------------------------
+
+
+def tensors(seed: float):
+    rng = np.random.default_rng(int(seed))
+    return {
+        # one tensor above the (tiny) chunk threshold, several below
+        "big": rng.integers(0, 255, size=(64, 1024), dtype=np.uint8),
+        "w0": np.full((32, 16), seed, dtype=np.float32),
+        "w1": np.full((32, 16), seed + 1, dtype=np.float32),
+    }
+
+
+def group(hub, name, shards, make, **kw):
+    handles = [hub.open("m", name, shards, i, **kw) for i in range(shards)]
+    for h in handles:
+        h.register(make())
+    return handles
+
+
+def run_group(handles, fn):
+    errs = []
+
+    def wrap(h):
+        try:
+            fn(h)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=wrap, args=(h,)) for h in handles]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    if errs:
+        raise errs[0]
+
+
+class TestThreadedWindowedPull:
+    def test_multi_source_window_bit_identical(self):
+        """window>1 + chunking + two sources: bytes must be bit-identical
+        with checksums verified end to end."""
+        server = ReferenceServer()
+        hub = TensorHubClient(server, window=3, chunk_bytes=4096)
+        pubs = group(hub, "pub", 2, lambda: tensors(7.0))
+        run_group(pubs, lambda h: h.publish(0))
+        mirror = group(hub, "mirror", 2, lambda: tensors(0.0))
+        run_group(mirror, lambda h: h.replicate(0))  # second published copy
+        subs = group(hub, "sub", 2, lambda: tensors(1.0))
+        run_group(subs, lambda h: h.replicate(0))
+        assert server.stats["multi_source_assignments"] >= 1
+        want = tensors(7.0)
+        for h in subs:
+            for name, arr in want.items():
+                assert np.array_equal(h.store.get(name), arr), name
+
+    def test_window_pull_single_source_identical(self):
+        server = ReferenceServer()
+        hub = TensorHubClient(server, window=4, chunk_bytes=1 << 14)
+        pubs = group(hub, "pub", 1, lambda: tensors(3.0))
+        run_group(pubs, lambda h: h.publish(0))
+        subs = group(hub, "sub", 1, lambda: tensors(0.0))
+        run_group(subs, lambda h: h.replicate("latest"))
+        want = tensors(3.0)
+        for name, arr in want.items():
+            assert np.array_equal(subs[0].store.get(name), arr), name
+
+    def test_windowed_pull_survives_source_death(self):
+        """Kill one of two sources mid-transfer: the reader re-partitions
+        onto the survivor and still produces bit-identical bytes."""
+        server = ReferenceServer()
+        hub = TensorHubClient(server, window=2, chunk_bytes=4096)
+        pubs = group(hub, "pub", 1, lambda: tensors(9.0))
+        run_group(pubs, lambda h: h.publish(0))
+        mirror = group(hub, "mirror", 1, lambda: tensors(0.0))
+        run_group(mirror, lambda h: h.replicate(0))
+        killed = threading.Event()
+
+        def killer():
+            time.sleep(0.05)
+            hub.registry.fail_replica("mirror")
+            with hub._cv:  # noqa: SLF001 — test harness failure injection
+                server.fail_replica("m", "mirror", reason="test kill")
+            killed.set()
+
+        t = threading.Thread(target=killer, daemon=True)
+        t.start()
+        subs = group(hub, "sub", 1, lambda: tensors(0.0))
+        run_group(subs, lambda h: h.replicate(0))
+        t.join(timeout=10)
+        assert killed.is_set()
+        want = tensors(9.0)
+        for name, arr in want.items():
+            assert np.array_equal(subs[0].store.get(name), arr), name
+
+    def test_legacy_window1_path_still_works(self):
+        server = ReferenceServer(max_sources=1)
+        hub = TensorHubClient(server, window=1, chunk_bytes=None)
+        pubs = group(hub, "pub", 2, lambda: tensors(5.0))
+        run_group(pubs, lambda h: h.publish(0))
+        subs = group(hub, "sub", 2, lambda: tensors(0.0))
+        run_group(subs, lambda h: h.replicate("latest"))
+        for h in subs:
+            assert np.array_equal(h.store.get("big"), tensors(5.0)["big"])

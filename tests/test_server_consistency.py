@@ -95,7 +95,8 @@ class TestGroupTransactions:
 
 class TestScheduling:
     def test_least_loaded_source(self):
-        s = ReferenceServer()
+        # legacy single-source mode: readers spread across the replicas
+        s = ReferenceServer(max_sources=1)
         open_replica(s, "a")
         open_replica(s, "b")
         publish(s, "a", 0)
@@ -106,6 +107,21 @@ class TestScheduling:
         src1 = {s.begin_replicate("m", "r1", i, 0, op_id=0).source for i in range(2)}
         src2 = {s.begin_replicate("m", "r2", i, 0, op_id=0).source for i in range(2)}
         assert src1 != src2  # load balanced across the two replicas
+
+    def test_multi_source_partitions_units(self):
+        # default mode: each reader stripes its unit list across BOTH
+        # published replicas instead of pinning to one
+        s = ReferenceServer()
+        open_replica(s, "a")
+        open_replica(s, "b")
+        publish(s, "a", 0)
+        publish(s, "b", 0)
+        open_replica(s, "r1")
+        a = s.begin_replicate("m", "r1", 0, 0, op_id=0)
+        assert {sl.source for sl in a.sources} == {"a", "b"}
+        ranges = sorted((sl.start_unit, sl.stop_unit) for sl in a.sources)
+        assert ranges[0][0] == 0 and ranges[-1][1] == 2  # tiles [0, 2)
+        assert ranges[0][1] == ranges[1][0]  # contiguous, no overlap
 
     def test_same_dc_preferred(self):
         s = ReferenceServer()

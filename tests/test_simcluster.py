@@ -5,6 +5,7 @@ import math
 
 from _hypothesis_compat import given, settings, st
 
+from repro.core.meta import WorkerInfo
 from repro.transfer.simcluster import SimCluster
 from repro.transfer.simnet import SimEnv, SimNetwork
 
@@ -123,3 +124,197 @@ class TestSimTensorHub:
         # exactly one replica's worth of bytes crossed the DC boundary
         vpc_up = sum(b for n, b in cl.net.link_bytes.items() if ":vpc_up" in n)
         assert math.isclose(vpc_up, 10 * GB * 2, rel_tol=1e-6)  # 2 shards x 10 units
+
+
+def _fanout(n_dest, m_src, units, **kw):
+    """M publishers holding v0, N destinations pulling it concurrently.
+    Returns (makespan, cluster)."""
+    cl = SimCluster(**kw)
+    pubs = [cl.add_replica("m", f"pub{i}", 2, unit_bytes=units) for i in range(m_src)]
+    dests = [cl.add_replica("m", f"dst{i}", 2, unit_bytes=units) for i in range(n_dest)]
+    for r in pubs + dests:
+        r.open()
+    cl.run()
+    pubs[0].publish(0)
+    cl.run()
+    for p in pubs[1:]:
+        p.replicate("latest")
+    cl.run()
+    t0 = cl.env.now
+    finish = {}
+    for d in dests:
+        ev = d.replicate("latest")
+        ev.add_callback(
+            lambda e, n=d.name: (
+                finish.setdefault(n, cl.env.now) if e.error is None else None
+            )
+        )
+    cl.run()
+    assert len(finish) == n_dest, f"incomplete fan-out: {sorted(finish)}"
+    return max(finish.values()) - t0, cl
+
+
+class TestWindowedMultiSource:
+    def test_multi_source_partition_used(self):
+        # the first destination (no in-progress relay available) gets a
+        # multi-source partition across the published pool; later ones
+        # prefer chaining off it — both paths must deliver every byte
+        t, cl = _fanout(2, 3, [GB] * 8)
+        assert cl.server.stats["multi_source_assignments"] >= 1
+        # all bytes delivered exactly once per destination shard
+        assert math.isclose(
+            cl.net.bytes_delivered, (3 - 1 + 2) * 8 * GB * 2, rel_tol=1e-6
+        )
+
+    def test_beats_pinned_baseline(self):
+        t_multi, _ = _fanout(8, 4, [GB] * 8)
+        t_pinned, _ = _fanout(
+            8, 4, [GB] * 8,
+            window=1, chunk_bytes=None, max_sources=1,
+            scheduler="pinned", pipeline_replication=False,
+        )
+        assert t_pinned > 3.0 * t_multi
+
+    def test_window1_chunkoff_reproduces_sequential_path(self):
+        """The legacy knobs replay the pre-scheduler data plane exactly
+        (recorded timing from the sequential implementation)."""
+        t, _ = _fanout(
+            1, 1, [GB] * 16, window=1, chunk_bytes=None, max_sources=1
+        )
+        assert math.isclose(t, 0.6984521739, rel_tol=1e-6)
+
+    def test_chunking_splits_giant_unit_across_sources(self):
+        """A single giant tensor per shard: chunking aggregates several
+        source uplinks where the sequential path binds to one flow."""
+        t_seq, _ = _fanout(
+            2, 3, [12 * GB], window=1, chunk_bytes=None, max_sources=1
+        )
+        t_chunk, cl = _fanout(2, 3, [12 * GB], chunk_bytes=GB)
+        assert cl.server.stats["multi_source_assignments"] >= 2
+        assert t_chunk < 0.7 * t_seq
+
+    def test_source_death_mid_windowed_pull(self):
+        """Kill one plan member mid-transfer: the reader re-partitions
+        onto the survivors and completes."""
+        cl = SimCluster()
+        units = [GB] * 12
+        pubs = [cl.add_replica("m", f"pub{i}", 2, unit_bytes=units) for i in range(3)]
+        dst = cl.add_replica("m", "dst", 2, unit_bytes=units)
+        for r in pubs + [dst]:
+            r.open()
+        cl.run()
+        pubs[0].publish(0)
+        cl.run()
+        for p in pubs[1:]:
+            p.replicate("latest")
+        cl.run()
+        ev = dst.replicate("latest")
+        cl.env.schedule(0.15, lambda: cl.kill_replica("pub1"))
+        cl.run()
+        assert ev.triggered and ev.error is None, ev.error
+        assert cl.server.stats["reassignments"] >= 1
+
+    def test_progress_prefix_monotone_under_window(self):
+        """Progress counters advance strictly over a contiguous prefix
+        even though units complete out of order across sources."""
+        cl = SimCluster()
+        seen = []
+        orig = cl.server.update_progress
+
+        def spy(model, replica, shard_idx, version, progress):
+            if replica == "dst":
+                seen.append((shard_idx, progress))
+            return orig(model, replica, shard_idx, version, progress)
+
+        cl.server.update_progress = spy
+        units = [GB] * 10
+        pubs = [cl.add_replica("m", f"pub{i}", 2, unit_bytes=units) for i in range(2)]
+        dst = cl.add_replica("m", "dst", 2, unit_bytes=units)
+        for r in pubs + [dst]:
+            r.open()
+        cl.run()
+        pubs[0].publish(0)
+        cl.run()
+        pubs[1].replicate("latest")
+        cl.run()
+        dst.replicate("latest")
+        cl.run()
+        per_shard = {}
+        for shard, p in seen:
+            assert p > per_shard.get(shard, 0)  # strictly increasing prefix
+            per_shard[shard] = p
+        assert per_shard == {0: 10, 1: 10}
+
+
+class TestKeyedWakeups:
+    def test_notify_keys_derived_from_server_registration(self):
+        """>64-shard replicas known only to the server still wake every
+        waiter (the old code fell back to a hard-coded 64)."""
+        cl = SimCluster()
+        info = WorkerInfo("big/s0", "dc0/big", "dc0", False)
+        for i in range(80):
+            cl.server.open("m", "big", 80, i, worker=info)
+        woken = []
+
+        def waiter(i):
+            yield cl.env.key_wait(("progress", "big", i))
+            woken.append(i)
+
+        for i in (0, 63, 70, 79):
+            cl.env.process(waiter(i))
+        cl.env.run(until=0.001)
+        assert not woken
+        cl._notify_progress_keys("big")
+        cl.env.run(until=0.002)
+        assert sorted(woken) == [0, 63, 70, 79]
+
+    def test_predicate_sweep_covers_unknown_keys(self):
+        cl = SimCluster()
+        hit = []
+
+        def waiter():
+            yield cl.env.key_wait(("ctl", "ghost", 99))
+            hit.append(True)
+
+        cl.env.process(waiter())
+        cl.env.run(until=0.001)
+        cl._notify_progress_keys("ghost")
+        cl.env.run(until=0.002)
+        assert hit
+
+    def test_no_stale_keyed_entries_after_run(self):
+        _, cl = _fanout(2, 2, [GB] * 6)
+        stale = [
+            k
+            for k, ev in cl.env._keyed.items()
+            if ev._waiters or ev._callbacks
+        ]
+        assert stale == []
+
+    def test_safety_tick_recovers_missed_wakeup(self):
+        """A waiter whose notify was lost is woken by the safety net once
+        the hard event heap quiesces — delayed, never deadlocked."""
+        env = SimEnv()
+        woken = []
+
+        def waiter():
+            yield env.key_wait("never-notified")
+            woken.append(env.now)
+
+        env.process(waiter())
+        env.run(until=100.0)
+        assert woken and woken[0] == env.safety_tick
+
+    def test_safety_tick_does_not_inflate_healthy_runs(self):
+        env = SimEnv()
+        net = SimNetwork(env)
+        link = net.link("l", 10e9)
+
+        def proc():
+            yield env.key_wait("k")
+            yield net.flow(10e9, [link])
+
+        env.process(proc())
+        env.schedule(0.5, lambda: env.key_notify("k"))
+        env.run()
+        assert math.isclose(env.now, 1.5, rel_tol=1e-6)  # no trailing ticks
