@@ -17,6 +17,7 @@ number), cross-DC traffic = 1 copy vs n copies.
 
 from __future__ import annotations
 
+import sys
 from typing import Dict, List
 
 from repro.configs.paper_workloads import WORKLOADS
@@ -28,9 +29,13 @@ N_STANDALONE = W.standalone_gpus // W.num_shards  # 4 replicas x 2 shards
 
 
 def tensorhub_cross_dc(
-    *, offload_seeding: bool, poll_period: float = 0.2, tcp_compression: float = 1.0
+    *,
+    offload_seeding: bool,
+    poll_period: float = 0.2,
+    tcp_compression: float = 1.0,
+    swarm: bool = True,
 ) -> Dict[str, object]:
-    cl = SimCluster(tcp_compression=tcp_compression)
+    cl = SimCluster(tcp_compression=tcp_compression, swarm=swarm)
     units = W.unit_bytes(64)
     trainers = [
         cl.add_replica("m", f"tr{i}", W.num_shards, datacenter="dc0", unit_bytes=units)
@@ -99,6 +104,51 @@ def tensorhub_cross_dc(
     }
 
 
+def swarm_cold_fanin(*, swarm: bool) -> Dict[str, object]:
+    """Cold start: every dc1 rollout replicates v0 concurrently while the
+    only copies live in dc0. Exactly one dc1 replica seeds over the WAN;
+    the rest swarm off its completed prefix (and each other) over local
+    RDMA — same-DC in-progress peers outrank cross-DC published sources,
+    so the cross-DC link carries exactly ONE copy regardless of fan-out.
+    ``swarm=False`` runs the PR 2 scheduler (pipeline chains off the
+    seeder) for comparison; the WAN invariant must hold in both."""
+    cl = SimCluster(swarm=swarm)
+    units = W.unit_bytes(64)
+    trainers = [
+        cl.add_replica("m", f"tr{i}", W.num_shards, datacenter="dc0", unit_bytes=units)
+        for i in range(W.num_trainer_replicas)
+    ]
+    rollouts = [
+        cl.add_replica("m", f"ro{i}", W.num_shards, datacenter="dc1", unit_bytes=units)
+        for i in range(N_STANDALONE)
+    ]
+    for r in trainers + rollouts:
+        r.open()
+    cl.run()
+    for t in trainers:
+        t.publish(0)
+    cl.run()
+    t0 = cl.env.now
+    finish: Dict[str, float] = {}
+    events = []
+    for r in rollouts:
+        ev = r.replicate("latest")
+        ev.add_callback(
+            lambda e, name=r.name: (
+                finish.setdefault(name, cl.env.now) if e.error is None else None
+            )
+        )
+        events.append(ev)
+    cl.run(until=120.0)
+    assert all(e.triggered and e.error is None for e in events)
+    wan = sum(b for name, b in cl.net.link_bytes.items() if ":vpc_up" in name)
+    return {
+        "makespan_s": max(finish.values()) - t0,
+        "cross_dc_bytes": wan,
+        "one_copy_bytes": float(W.shard_bytes * W.num_shards),
+    }
+
+
 def ucx_cross_dc() -> Dict[str, object]:
     """Every replica pulls its shards over stream-limited WAN TCP
     (calibrated to the paper's 7.8 s per 10 GB shard)."""
@@ -116,17 +166,32 @@ def ucx_cross_dc() -> Dict[str, object]:
 INT8_RATIO = 0.502
 
 
-def run() -> List[Dict]:
+def run(quick: bool = False) -> List[Dict]:
+    """``quick`` drops the offload-seeding and int8 variants (the two
+    extra warm-transition sims) — the smoke run keeps the headline
+    seeding row, the UCX baseline and both cold fan-in WAN checks."""
     th = tensorhub_cross_dc(offload_seeding=False)
-    th_off = tensorhub_cross_dc(offload_seeding=True)
-    th_q = tensorhub_cross_dc(offload_seeding=False, tcp_compression=INT8_RATIO)
     ucx = ucx_cross_dc()
-    return [
+    rows = [
         {"system": "ucx-tcp", **_fmt(ucx)},
         {"system": "tensorhub", **_fmt(th)},
-        {"system": "tensorhub+offload-seeding", **_fmt(th_off)},
-        {"system": "tensorhub+int8-seeding (beyond-paper)", **_fmt(th_q)},
     ]
+    if not quick:
+        th_off = tensorhub_cross_dc(offload_seeding=True)
+        th_q = tensorhub_cross_dc(offload_seeding=False, tcp_compression=INT8_RATIO)
+        rows.append({"system": "tensorhub+offload-seeding", **_fmt(th_off)})
+        rows.append({"system": "tensorhub+int8-seeding (beyond-paper)", **_fmt(th_q)})
+    for swarm in (False, True):
+        cold = swarm_cold_fanin(swarm=swarm)
+        rows.append(
+            {
+                "system": f"cold-fanin ({'swarm' if swarm else 'pr2-chains'})",
+                "makespan_s": round(cold["makespan_s"], 2),
+                "cross_dc_gb": round(cold["cross_dc_bytes"] / 1e9, 2),
+                "one_copy_gb": round(cold["one_copy_bytes"] / 1e9, 2),
+            }
+        )
+    return rows
 
 
 def _fmt(d: Dict) -> Dict:
@@ -138,13 +203,30 @@ def _fmt(d: Dict) -> Dict:
 
 
 def validate(rows: List[Dict]) -> List[str]:
-    ucx, th, th_off, th_q = rows
+    by_sys = {r["system"]: r for r in rows}
+    ucx = by_sys["ucx-tcp"]
+    th = by_sys["tensorhub"]
+    th_off = by_sys.get("tensorhub+offload-seeding")
+    th_q = by_sys.get("tensorhub+int8-seeding (beyond-paper)")
     checks = []
-    checks.append(
-        f"int8 seeding (beyond-paper): seeder tail {th_q['per_gpu_s'][-1]}s vs "
-        f"{th['per_gpu_s'][-1]}s bf16 -> "
-        f"{'OK' if th_q['per_gpu_s'][-1] < th['per_gpu_s'][-1] * 0.65 else 'MISMATCH'}"
-    )
+    # swarm replication: the cold fan-in moves exactly ONE copy across the
+    # WAN (the seeder's), with the rest of dc1 fed from its prefix over
+    # local RDMA — under both the swarm planner and the PR 2 chains
+    for r in rows:
+        if "cold-fanin" not in r["system"]:
+            continue
+        ok = abs(r["cross_dc_gb"] - r["one_copy_gb"]) < 0.05
+        checks.append(
+            f"{r['system']}: cross-DC traffic {r['cross_dc_gb']} GB == exactly "
+            f"1 copy ({r['one_copy_gb']} GB), makespan {r['makespan_s']}s -> "
+            f"{'OK' if ok else 'MISMATCH'}"
+        )
+    if th_q is not None:
+        checks.append(
+            f"int8 seeding (beyond-paper): seeder tail {th_q['per_gpu_s'][-1]}s vs "
+            f"{th['per_gpu_s'][-1]}s bf16 -> "
+            f"{'OK' if th_q['per_gpu_s'][-1] < th['per_gpu_s'][-1] * 0.65 else 'MISMATCH'}"
+        )
     tail = th["per_gpu_s"]
     body_ok = tail[0] <= 0.7 and tail[-1] >= 2.0
     checks.append(
@@ -156,11 +238,12 @@ def validate(rows: List[Dict]) -> List[str]:
         f"stall reduction vs UCX-TCP (seeding only): {red_plain:.0f}x -> "
         f"{'OK' if red_plain >= 5 else 'MISMATCH'}"
     )
-    red_off = ucx["total_stall_s"] / max(th_off["total_stall_s"], 1e-9)
-    checks.append(
-        f"stall reduction with offload seeding: {red_off:.0f}x (paper: 19x) -> "
-        f"{'OK' if 12 <= red_off <= 30 else 'MISMATCH'}"
-    )
+    if th_off is not None:
+        red_off = ucx["total_stall_s"] / max(th_off["total_stall_s"], 1e-9)
+        checks.append(
+            f"stall reduction with offload seeding: {red_off:.0f}x (paper: 19x) -> "
+            f"{'OK' if 12 <= red_off <= 30 else 'MISMATCH'}"
+        )
     traffic = ucx["cross_dc_gb"] / max(th["cross_dc_gb"], 1e-9)
     checks.append(
         f"cross-DC traffic {th['cross_dc_gb']} GB vs UCX {ucx['cross_dc_gb']} GB "
@@ -170,11 +253,16 @@ def validate(rows: List[Dict]) -> List[str]:
 
 
 def main() -> None:
-    rows = run()
+    quick = "--quick" in sys.argv
+    rows = run(quick=quick)
     for r in rows:
         print(r)
+    bad = 0
     for c in validate(rows):
         print("  " + c)
+        bad += "MISMATCH" in c
+    if quick:
+        raise SystemExit(1 if bad else 0)
 
 
 if __name__ == "__main__":

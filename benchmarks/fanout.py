@@ -58,6 +58,7 @@ def fanout_makespan(
     max_sources: int = 4,
     scheduler: str = "least_loaded",
     pipeline: bool = True,
+    swarm: bool = True,
 ) -> Dict[str, float]:
     """M publishers all hold v0 (one publishes, the rest replicate it up
     front); N destinations then pull concurrently. Returns the makespan
@@ -68,6 +69,7 @@ def fanout_makespan(
         max_sources=max_sources,
         scheduler=scheduler,
         pipeline_replication=pipeline,
+        swarm=swarm,
     )
     pubs = [
         cl.add_replica("m", f"pub{i}", SHARDS, unit_bytes=units) for i in range(m_src)
@@ -126,13 +128,17 @@ def run(quick: bool = False) -> List[Dict]:
             **{k: v for k, v in kw.items() if k in ("window", "max_sources")},
         }
 
-    legacy = dict(window=1, chunk_bytes=None, max_sources=1)
+    # swarm=False everywhere legacy parity is asserted: these rows must
+    # reproduce the recorded pre-scheduler timings bit-for-bit
+    legacy = dict(window=1, chunk_bytes=None, max_sources=1, swarm=False)
 
     # headline: 8 destinations / 4 sources
     rows.append(row("pinned_8x4", UNIFORM_UNITS, 8, 4, scheduler="pinned",
                     pipeline=False, **legacy))
     rows.append(row("legacy_8x4", UNIFORM_UNITS, 8, 4, **legacy))
     rows.append(row("multi_8x4", UNIFORM_UNITS, 8, 4,
+                    window=4, chunk_bytes=GB, max_sources=4, swarm=False))
+    rows.append(row("swarm_8x4", UNIFORM_UNITS, 8, 4,
                     window=4, chunk_bytes=GB, max_sources=4))
 
     # parity scenarios: knobs-off must reproduce the old data plane
@@ -185,6 +191,13 @@ def validate(rows: List[Dict]) -> List[str]:
         f"approaches min(M*src_uplink, N*dst_downlink) = {bound:.0f} GB/s: "
         f"measured {multi['agg_gbps']} GB/s ({frac*100:.0f}%) -> "
         f"{'OK' if frac >= 0.85 else 'MISMATCH'}"
+    )
+    swarm = _get(rows, "swarm_8x4")
+    checks.append(
+        f"swarm replication at 8x4: {swarm['makespan_s']}s vs PR 2 "
+        f"multi-source {multi['makespan_s']}s (in-progress prefixes join "
+        f"the pool) -> "
+        f"{'OK' if swarm['makespan_s'] <= multi['makespan_s'] * 1.02 else 'MISMATCH'}"
     )
     parity_map = {
         "legacy_8x4": "fanout_8x4",

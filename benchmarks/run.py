@@ -21,6 +21,7 @@ from benchmarks import (
     perf_transfer,
     roofline,
     standalone,
+    swarm,
 )
 
 MODULES = [
@@ -28,6 +29,7 @@ MODULES = [
     ("fig7b_burst", micro_burst),
     ("fig7c_failure", micro_failure),
     ("fanout_scheduler", fanout),
+    ("swarm_replication", swarm),
     ("fig9_standalone", standalone),
     ("fig11_elastic", elastic),
     ("fig12_cross_dc", cross_dc),

@@ -235,6 +235,9 @@ class ShardHandle:
     # -- Table 2: publish / unpublish --------------------------------------------
 
     def publish(self, version: int) -> None:
+        # publishing vouches for every registered byte: lift any watermark
+        # a previously aborted pull left on the store
+        self.store.serving_prefix = None
         manifest = self.store.build_manifest(with_checksums=self.with_checksums)
         op = self._next_op()
         with self._cv:
@@ -428,6 +431,11 @@ class ShardHandle:
         version = assignment.version
         done = 0
         used_reshard = False
+        # swarm replication: while this pull is in flight the store serves
+        # other readers exactly its completed prefix; the watermark is
+        # advanced before every server progress report and lifted when the
+        # pull completes (see WorkerStore.serving_prefix).
+        dest_store.serving_prefix = 0
         while True:
             # the server-side counter is authoritative (max-based): a span
             # that advanced it before the source died resumes from there,
@@ -442,6 +450,8 @@ class ShardHandle:
                     )
                 except (StaleHandleError, TensorHubError):
                     pass  # no in-progress state yet (first span)
+            if dest_store.serving_prefix is not None:
+                dest_store.serving_prefix = max(dest_store.serving_prefix, done)
             try:
                 reshard = assignment.resharded
                 src_manifest = None
@@ -466,6 +476,7 @@ class ShardHandle:
                 break
             except _SourceLost as e:
                 assignment = self._handle_source_failure(dest_name, e.source)
+        dest_store.serving_prefix = None  # fully replicated: unrestricted
         if used_reshard and self.with_checksums:
             # our layout family was registered with zero checksums (pre-pull
             # buffers); now that the bytes are final, upgrade it so readers
@@ -560,6 +571,7 @@ class ShardHandle:
                 except TransportError:
                     raise _SourceLost(source)
                 done += 1
+                dest_store.serving_prefix = done  # before the server learns
                 with self._cv:
                     self._server.update_progress(
                         self.model, dest_name, self.shard_idx, version, done
@@ -783,6 +795,7 @@ class ShardHandle:
                 advanced = True
             new_done = shared["done"]
         if advanced:
+            dest_store.serving_prefix = new_done  # before the server learns
             with self._cv:
                 self._server.update_progress(
                     self.model, dest_name, self.shard_idx, version, new_done
@@ -845,6 +858,7 @@ class ShardHandle:
                 self.intervals_pulled += 1
             dest_store.write_unit(unit, executor.repack(unit.index, staging))
             done += 1
+            dest_store.serving_prefix = done  # before the server learns
             with self._cv:
                 self._server.update_progress(
                     self.model, dest_name, self.shard_idx, version, done

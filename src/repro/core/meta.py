@@ -224,3 +224,115 @@ class WorkerInfo:
     node: str
     datacenter: str
     is_spot: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Read-plan metadata (shared by the server's scheduler and both data planes)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceSlice:
+    """One source replica's share of a destination's transfer-unit list.
+
+    The multi-source scheduler partitions the destination's units
+    ``[start_unit, stop_unit)`` across all eligible replicas holding the
+    version; a ``stop_unit`` of ``-1`` means "through the last unit"
+    (emitted when the server does not know the destination's unit count).
+
+    ``ceiling`` is the source's *progress ceiling* at plan time (swarm
+    replication): the number of units of its completed prefix, i.e. the
+    most a reader may pull from it without re-checking progress. ``-1``
+    means the source was fully published when the plan was built. A
+    partial (in-progress) source serves exactly ``[0, ceiling)``; reads
+    beyond it must first await the source's live progress counter — the
+    never-read-past-source-prefix contract both data planes enforce."""
+
+    source: str
+    source_kind: str
+    transport: str  # "rdma" | "tcp"
+    start_unit: int
+    stop_unit: int
+    seeding: bool = False
+    source_shards: int = 0
+    ceiling: int = -1
+
+    def serves_whole_range(self) -> bool:
+        """True when the plan-time prefix already covers the assigned
+        range (no progress gating needed for any unit in it)."""
+        return self.ceiling < 0 or self.stop_unit <= self.ceiling
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """Where a shard should pull its data from.
+
+    ``source_shards``/``dest_shards`` carry the two replicas' shard
+    layouts; when they differ the destination runs the cross-layout
+    resharding path (``repro.resharding``): every destination shard
+    stripes byte-interval reads across *all* source shards instead of the
+    shard-to-shard unit pipe. Zero means "unknown" (legacy constructors)
+    and is treated as same-layout.
+
+    ``sources`` is the multi-source read plan: per-source unit ranges
+    partitioned over every eligible replica holding the version —
+    including, under swarm replication, *in-progress* replicas serving
+    their completed prefix (each slice's ``ceiling``). The legacy
+    single-source fields (``source``/``transport``/...) always describe
+    the *primary* source — ``sources[0]`` when a plan exists. ``epoch``
+    identifies the plan revision; the server bumps it on re-partitioning
+    (source failure, work stealing, swarm growth) and readers compare it
+    against ``ReferenceServer.assignment_epoch`` to pick up the new plan
+    mid-transfer.
+    """
+
+    version: int
+    source: str
+    source_kind: str
+    transport: str  # "rdma" | "tcp"
+    seeding: bool = False  # dest becomes its DC's seeding replica
+    source_shards: int = 0
+    dest_shards: int = 0
+    sources: Tuple[SourceSlice, ...] = ()
+    epoch: int = 0
+
+    @property
+    def resharded(self) -> bool:
+        return (
+            self.source_shards > 0
+            and self.dest_shards > 0
+            and self.source_shards != self.dest_shards
+        )
+
+    @property
+    def multi_source(self) -> bool:
+        return len(self.sources) > 1
+
+    @property
+    def swarm(self) -> bool:
+        """True when any plan member was serving a partial prefix."""
+        return any(s.ceiling >= 0 for s in self.sources)
+
+    def slices(self, num_units: int) -> List[SourceSlice]:
+        """Normalized per-source unit ranges: legacy single-source
+        assignments expand to one slice spanning every unit, and
+        open-ended ranges are clamped to ``num_units``."""
+        if self.sources:
+            return [
+                dataclasses.replace(
+                    s,
+                    stop_unit=num_units if s.stop_unit < 0 else min(s.stop_unit, num_units),
+                )
+                for s in self.sources
+            ]
+        return [
+            SourceSlice(
+                source=self.source,
+                source_kind=self.source_kind,
+                transport=self.transport,
+                start_unit=0,
+                stop_unit=num_units,
+                seeding=self.seeding,
+                source_shards=self.source_shards,
+            )
+        ]

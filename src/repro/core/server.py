@@ -38,7 +38,7 @@ from repro.core.errors import (
     TensorHubError,
     VersionUnavailableError,
 )
-from repro.core.meta import ShardManifest, WorkerInfo
+from repro.core.meta import Assignment, ShardManifest, SourceSlice, WorkerInfo
 
 logger = logging.getLogger(__name__)
 
@@ -93,6 +93,12 @@ class ReplicaVersionState:
     #: (work stealing: a reader's progress report re-partitions only when a
     #: source arrived since — an O(1) check on the hot path)
     plan_gen: int = 0
+    #: swarm replication: set once this in-progress replica's completed
+    #: prefix (min over shards) first becomes non-empty — the moment it
+    #: enters the unit-granular availability map as a servable source.
+    #: The announcement bumps the version's source generation exactly
+    #: once, so readers re-scan the pool without per-report churn.
+    swarm_announced: bool = False
 
     def is_source_candidate(self) -> bool:
         return self.status in (PUBLISHED, IN_PROGRESS)
@@ -180,90 +186,11 @@ class ModelState:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
-class SourceSlice:
-    """One source replica's share of a destination's transfer-unit list.
-
-    The multi-source scheduler partitions the destination's units
-    ``[start_unit, stop_unit)`` across all eligible replicas holding the
-    version; a ``stop_unit`` of ``-1`` means "through the last unit"
-    (emitted when the server does not know the destination's unit count)."""
-
-    source: str
-    source_kind: str
-    transport: str  # "rdma" | "tcp"
-    start_unit: int
-    stop_unit: int
-    seeding: bool = False
-    source_shards: int = 0
-
-
-@dataclasses.dataclass(frozen=True)
-class Assignment:
-    """Where a shard should pull its data from.
-
-    ``source_shards``/``dest_shards`` carry the two replicas' shard
-    layouts; when they differ the destination runs the cross-layout
-    resharding path (``repro.resharding``): every destination shard
-    stripes byte-interval reads across *all* source shards instead of the
-    shard-to-shard unit pipe. Zero means "unknown" (legacy constructors)
-    and is treated as same-layout.
-
-    ``sources`` is the multi-source read plan: per-source unit ranges
-    partitioned over every eligible replica holding the version. The
-    legacy single-source fields (``source``/``transport``/...) always
-    describe the *primary* source — ``sources[0]`` when a plan exists.
-    ``epoch`` identifies the plan revision; the server bumps it on
-    re-partitioning (source failure, work stealing) and readers compare
-    it against :meth:`ReferenceServer.assignment_epoch` to pick up the
-    new plan mid-transfer.
-    """
-
-    version: int
-    source: str
-    source_kind: str
-    transport: str  # "rdma" | "tcp"
-    seeding: bool = False  # dest becomes its DC's seeding replica
-    source_shards: int = 0
-    dest_shards: int = 0
-    sources: Tuple[SourceSlice, ...] = ()
-    epoch: int = 0
-
-    @property
-    def resharded(self) -> bool:
-        return (
-            self.source_shards > 0
-            and self.dest_shards > 0
-            and self.source_shards != self.dest_shards
-        )
-
-    @property
-    def multi_source(self) -> bool:
-        return len(self.sources) > 1
-
-    def slices(self, num_units: int) -> List[SourceSlice]:
-        """Normalized per-source unit ranges: legacy single-source
-        assignments expand to one slice spanning every unit, and
-        open-ended ranges are clamped to ``num_units``."""
-        if self.sources:
-            return [
-                dataclasses.replace(
-                    s,
-                    stop_unit=num_units if s.stop_unit < 0 else min(s.stop_unit, num_units),
-                )
-                for s in self.sources
-            ]
-        return [
-            SourceSlice(
-                source=self.source,
-                source_kind=self.source_kind,
-                transport=self.transport,
-                start_unit=0,
-                stop_unit=num_units,
-                seeding=self.seeding,
-                source_shards=self.source_shards,
-            )
-        ]
+# ``SourceSlice`` and ``Assignment`` live in ``repro.core.meta`` (they are
+# plan *metadata*, shared by both data planes); re-exported here for the
+# historical import path. ``SourceSlice.ceiling`` carries each source's
+# progress ceiling — the swarm-replication contract that lets in-progress
+# replicas serve exactly their completed prefix.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,6 +247,7 @@ class ReferenceServer:
         max_sources: int = 4,
         work_stealing: bool = True,
         chunk_hint: Optional[float] = None,
+        swarm: bool = True,
     ) -> None:
         self._models: Dict[str, ModelState] = {}
         self._heartbeat_timeout = heartbeat_timeout
@@ -336,6 +264,14 @@ class ReferenceServer:
         self._chunk_hint = (
             meta_defaults.DEFAULT_CHUNK_BYTES if chunk_hint is None else chunk_hint
         )
+        #: swarm replication: admit *in-progress* replicas into the
+        #: multi-source pool for the prefix of units they have completed
+        #: (unit-granular availability map). ``swarm=False`` reproduces
+        #: the pre-swarm (PR 2) scheduler bit-for-bit — the knob the
+        #: benchmarks use for before/after parity. Swarm planning also
+        #: requires pipeline replication (a partial replica serving its
+        #: prefix *is* a pipeline relay) and ``max_sources > 1``.
+        self._swarm = swarm
         self._events: Dict[str, List[Event]] = {}
         self._watchers: List[Callable[[], None]] = []
         self._seq = 0
@@ -350,6 +286,8 @@ class ReferenceServer:
             "smart_skips": 0,
             "multi_source_assignments": 0,
             "work_steals": 0,
+            "swarm_assignments": 0,
+            "swarm_grows": 0,
         }
 
     # -- notification plumbing ------------------------------------------------
@@ -811,6 +749,19 @@ class ReferenceServer:
         if rv is None:
             raise StaleHandleError(f"{replica} no longer replicating v{version}")
         rv.progress[shard_idx] = max(rv.progress.get(shard_idx, 0), progress)
+        # swarm announcement: the first time this puller's completed prefix
+        # (min over shards) becomes non-empty it joins the availability map
+        # as a servable source; bump the source generation once so other
+        # readers' progress reports re-scan the pool and grow their plans.
+        if (
+            self._swarm
+            and rv.status == IN_PROGRESS
+            and not rv.swarm_announced
+            and rv.progress
+            and min(rv.progress.values()) >= 1
+        ):
+            rv.swarm_announced = True
+            st.source_gen[version] = st.source_gen.get(version, 0) + 1
         # work stealing (driven by reader progress reports): a source that
         # arrived after this plan was built gets a share of the remaining
         # units. The generation check keeps the hot path O(1).
@@ -1195,8 +1146,9 @@ class ReferenceServer:
     def _source_candidates(
         self, st: ModelState, version: int, dest: ReplicaInfo
     ) -> List[ReplicaVersionState]:
+        vmap = st.versions.get(version, {})
         out = []
-        for rv in st.versions.get(version, {}).values():
+        for rv in vmap.values():
             if rv.replica == dest.name:
                 continue
             if not rv.is_source_candidate():
@@ -1205,6 +1157,16 @@ class ReferenceServer:
                 continue
             info = st.replicas.get(rv.replica)
             if info is None or info.failed:
+                continue
+            if rv.status == IN_PROGRESS and self._chain_reaches(
+                vmap, rv.replica, dest.name
+            ):
+                # an in-progress candidate whose own source chain passes
+                # through the destination would close a read cycle: each
+                # end serves only its completed prefix and both tails gate
+                # on the other forever. Reachable since re-partitioning
+                # re-plans several readers at the same instant (a shared
+                # swarm source dying); never valid, so never a candidate.
                 continue
             out.append(rv)
         return out
@@ -1274,6 +1236,7 @@ class ReferenceServer:
                     stop_unit=b,
                     seeding=s_cross,
                     source_shards=st.replicas[name].num_shards,
+                    ceiling=self._source_ceiling(st, s_rv),
                 )
             )
         return Assignment(
@@ -1388,6 +1351,235 @@ class ReferenceServer:
                 kept.append(rv)
         return kept
 
+    # -- swarm replication: unit-granular availability map + planner ------------
+
+    def _source_ceiling(self, st: ModelState, rv: ReplicaVersionState) -> int:
+        """Progress ceiling of one source: ``-1`` (unbounded) for a fully
+        published replica, else the min-over-shards completed prefix."""
+        info = st.replicas.get(rv.replica)
+        n_shards = info.num_shards if info is not None else len(rv.progress)
+        if (
+            rv.status == PUBLISHED
+            and info is not None
+            and len(rv.progress) >= info.num_shards
+        ):
+            return -1
+        if not rv.progress or len(rv.progress) < n_shards:
+            return 0  # a shard with no counter yet has served nothing
+        return min(rv.progress.values())
+
+    def _chain_reaches(
+        self, vmap: Dict[str, ReplicaVersionState], name: str, target: str
+    ) -> bool:
+        """True when ``name``'s transitive source chain includes ``target``
+        — admitting it as a swarm source for ``target`` would close a
+        read cycle whose tails gate on each other forever."""
+        seen: Set[str] = set()
+        stack = [name]
+        while stack:
+            n = stack.pop()
+            if n == target:
+                return True
+            if n in seen:
+                continue
+            seen.add(n)
+            rv = vmap.get(n)
+            if rv is None or rv.status != IN_PROGRESS:
+                continue
+            for s, _, _ in rv.plan:
+                stack.append(s)
+            if rv.source is not None:
+                stack.append(rv.source)
+        return False
+
+    def availability(self, model: str, version: int) -> Dict[str, int]:
+        """The unit-granular availability map (swarm replication): for
+        every live replica holding ``version``, how many transfer units
+        of its prefix are servable right now (``min`` over shards;
+        published replicas report their full unit count). Diagnostic /
+        test surface for the swarm planner's inputs."""
+        st = self._model(model)
+        out: Dict[str, int] = {}
+        for rv in st.versions.get(version, {}).values():
+            info = st.replicas.get(rv.replica)
+            if info is None or info.failed:
+                continue
+            if rv.status not in (PUBLISHED, IN_PROGRESS):
+                continue
+            m = self.replica_manifest(model, version, rv.replica, 0)
+            full = m.num_units if m is not None else 0
+            c = self._source_ceiling(st, rv)
+            out[rv.replica] = full if c < 0 else min(c, full) if full else c
+        return out
+
+    def _swarm_pool(
+        self, st: ModelState, version: int, dest: ReplicaInfo, start: int
+    ) -> List[Tuple[ReplicaVersionState, int]]:
+        """Sources a swarm plan may tile a destination's units across:
+        same-DC, same-shard-count, layout-identical GPU replicas that are
+        either fully published or in progress with a non-empty completed
+        prefix beyond ``start``. Returns (state, ceiling) pairs in
+        preference order — topology first, then load, then the deeper
+        prefix — where ``ceiling`` is the unit count the source can serve
+        today (``num_units`` for published replicas).
+
+        Keeping the pool same-DC is what makes the WAN invariant hold: a
+        same-DC *in-progress* peer always outranks a cross-DC published
+        source (the latter is never admitted), so one seeding replica's
+        prefix feeds its whole datacenter and the cross-DC link carries
+        exactly one copy."""
+        n_units = self._dest_num_units(st, version, dest)
+        if n_units is None or not self._pipeline:
+            return []
+        vmap = st.versions.get(version, {})
+        out: List[Tuple[ReplicaVersionState, int]] = []
+        for rv in vmap.values():
+            if rv.replica == dest.name or rv.kind != KIND_GPU:
+                continue
+            if rv.status not in (PUBLISHED, IN_PROGRESS):
+                continue
+            info = st.replicas.get(rv.replica)
+            if info is None or info.failed:
+                continue
+            if info.num_shards != dest.num_shards:
+                continue
+            if info.datacenter != dest.datacenter:
+                continue
+            c = self._source_ceiling(st, rv)
+            ceiling = n_units if c < 0 else min(c, n_units)
+            if ceiling <= start:
+                continue  # nothing we still need; rejoins on announce/steal
+            if rv.status == IN_PROGRESS and self._chain_reaches(
+                vmap, rv.replica, dest.name
+            ):
+                continue
+            out.append((rv, ceiling))
+        if not out:
+            return out
+
+        def key(e: Tuple[ReplicaVersionState, int]):
+            rv, ceiling = e
+            topo, refcount, depth, name = self._pref_key(st, rv, dest)
+            # availability breaks load ties: the deeper prefix first. For
+            # an all-published pool every ceiling equals n_units and the
+            # order collapses to the pre-swarm (topo, load, depth, name).
+            return (topo, refcount, -ceiling, depth, name)
+
+        out.sort(key=key)
+        # layout-identity filter, exactly as in _multi_pool: unit pulls
+        # are interchangeable only between byte-identical slicings
+        ref = st.replica_manifests.get(version, {}).get(
+            (dest.name, 0)
+        ) or st.manifests.get(version, {}).get((dest.num_shards, 0))
+        if ref is None:
+            return out[:1]
+        kept = []
+        for rv, ceiling in out:
+            m = self.replica_manifest(st.name, version, rv.replica, 0)
+            if m is not None and m.same_layout(ref):
+                kept.append((rv, ceiling))
+        return kept
+
+    def _swarm_supply(
+        self,
+        chosen: List[Tuple[ReplicaVersionState, int]],
+        start: int,
+        num_units: int,
+    ) -> float:
+        """Aggregate serving capacity of a candidate plan, in units of one
+        dedicated uplink: each member contributes its load share
+        (``1/(1+refcount)``) scaled by how much of the *remaining* range
+        its prefix can actually serve. This is the chain-vs-swarm decision
+        input: a dedicated in-progress relay moves bytes link-disjointly
+        at one full uplink, so fanning out only wins when the pool offers
+        at least that much — otherwise (single contended seed, lockstep
+        prefixes) the swarm would starve itself and a staggered pipeline
+        chain is strictly better."""
+        span = max(1, num_units - start)
+        supply = 0.0
+        for rv, ceiling in chosen:
+            if ceiling >= num_units:
+                frac = 1.0
+            else:
+                frac = max(0.0, min(1.0, (ceiling - start) / span))
+            supply += frac / (1.0 + rv.refcount)
+        return supply
+
+    def _swarm_wins(
+        self,
+        st: ModelState,
+        version: int,
+        dest: ReplicaInfo,
+        pool: List[Tuple[ReplicaVersionState, int]],
+        src: Optional[ReplicaVersionState],
+        start: int,
+        num_units: int,
+    ) -> bool:
+        """Whether to install a swarm plan instead of the legacy scheduler's
+        choice: always when there is no dedicated relay to protect (the
+        best single source is published or gone) or units are giant
+        (store-and-forward granularity kills chains); else only when the
+        pool's aggregate supply matches a dedicated uplink."""
+        if src is None or src.status == PUBLISHED:
+            return True
+        if self._has_giant_units(st, version, dest):
+            return True
+        chosen = self._swarm_chosen(pool)
+        return self._swarm_supply(chosen, start, num_units) >= 1.0
+
+    def _swarm_chosen(
+        self, pool: List[Tuple[ReplicaVersionState, int]]
+    ) -> List[Tuple[ReplicaVersionState, int]]:
+        """The plan members: the ``max_sources`` most-preferred sources,
+        with the deepest-prefix source guaranteed a slot (it serves the
+        tail — without it a plan of shallow prefixes could not tile the
+        whole shard)."""
+        chosen = list(pool[: self._max_sources])
+        best = max(range(len(pool)), key=lambda i: (pool[i][1], -i))
+        if all(pool[best][0] is not rv for rv, _ in chosen):
+            chosen[-1] = pool[best]
+        return chosen
+
+    def _swarm_partition(
+        self,
+        pool: List[Tuple[ReplicaVersionState, int]],
+        start: int,
+        num_units: int,
+    ) -> List[Tuple[str, int, int]]:
+        """Ceiling-aware tiling of units ``[start, num_units)``.
+
+        When every chosen source is fully available this degrades to the
+        pre-swarm ``_partition_units`` (bit-for-bit — the ``swarm=False``
+        parity anchor). Otherwise: partial prefixes serve the head of the
+        range (their ceilings are prefixes, so low units are what they
+        hold), sized by inverse load and *clipped to their ceilings*; the
+        deepest-prefix source serves the tail. The tail slice is the only
+        one allowed to extend past its source's ceiling, and only when no
+        fully-published source is in the pool — those reads gate on the
+        source's live progress counter (pipeline chaining), exactly like
+        a PR 2 relay."""
+        chosen = self._swarm_chosen(pool)
+        if all(c >= num_units for _, c in chosen):
+            return self._partition_units([rv for rv, _ in chosen], start, num_units)
+        tail_i = max(range(len(chosen)), key=lambda i: (chosen[i][1], -i))
+        tail_rv = chosen[tail_i][0]
+        heads = sorted(
+            (e for i, e in enumerate(chosen) if i != tail_i),
+            key=lambda e: (e[1], e[0].replica),  # shallow prefixes first
+        )
+        remaining = num_units - start
+        weights = {rv.replica: 1.0 / (1.0 + rv.refcount) for rv, _ in chosen}
+        total = sum(weights.values())
+        plan: List[Tuple[str, int, int]] = []
+        pos = start
+        for rv, ceiling in heads:
+            share = max(1, int(remaining * weights[rv.replica] / total))
+            n = max(0, min(share, ceiling - pos, num_units - pos))
+            plan.append((rv.replica, pos, pos + n))
+            pos += n
+        plan.append((tail_rv.replica, pos, num_units))
+        return plan
+
     def _partition_units(
         self,
         pool: List[ReplicaVersionState],
@@ -1452,11 +1644,26 @@ class ReferenceServer:
         relay moves bytes link-disjointly at full rate, while fanning the
         tail onto already-shared publisher uplinks would contend. Chains
         lose only when units are giant (store-and-forward granularity) —
-        then the published pool with sub-unit chunking wins."""
+        then the published pool with sub-unit chunking wins.
+
+        Swarm replication generalizes both: in-progress replicas join the
+        pool for the prefix they have completed, so every plan is a blend
+        of published partitioning and pipeline chaining — the dedicated
+        relay is just the degenerate one-member swarm."""
         src = self._find_source(st, version, dest)
+        num_units = self._dest_num_units(st, version, dest)
+        if num_units is not None:
+            # a progress report past the unit count (client bug, adversarial
+            # test) must not produce an inverted range
+            start = min(start, num_units)
         if self._max_sources > 1:
-            num_units = self._dest_num_units(st, version, dest)
             if num_units is not None and num_units - start >= 1:
+                if self._swarm:
+                    spool = self._swarm_pool(st, version, dest, start)
+                    if len(spool) >= 2 and self._swarm_wins(
+                        st, version, dest, spool, src, start, num_units
+                    ):
+                        return self._swarm_partition(spool, start, num_units)
                 pool = self._multi_pool(st, version, dest)
                 if len(pool) >= 2 and (
                     src is None
@@ -1466,7 +1673,6 @@ class ReferenceServer:
                     return self._partition_units(pool, start, num_units)
         if src is None:
             return None
-        num_units = self._dest_num_units(st, version, dest)
         return [(src.replica, start, -1 if num_units is None else num_units)]
 
     def _install_plan(
@@ -1504,6 +1710,47 @@ class ReferenceServer:
             return
         start = min(rv.progress.values()) if rv.progress else 0
         if num_units - start < 2:
+            return
+        if self._swarm and self._pipeline:
+            # Swarm growth: the availability map changed (a peer announced
+            # its prefix, a replica published or completed). Re-partition
+            # the *unserved tail* only when (a) the grown pool actually
+            # out-supplies the current primary — a healthy dedicated chain
+            # is never broken for a starving swarm — and (b) the plan
+            # would gain a member; same-membership re-tilings are skipped
+            # because the data plane's availability-aware claiming already
+            # rebalances load inside the current membership without an
+            # epoch bump. The bump reuses the PR 2 resume-from-prefix
+            # machinery: the tail re-tiles, completed units are never
+            # re-read.
+            if num_units - start < 2 * self._max_sources:
+                # an epoch bump drains the in-flight window and refills it
+                # (a pipeline bubble of ~max_sources claims); a short tail
+                # cannot amortize that, so the end-game keeps its plan
+                return
+            vmap = st.versions.get(version, {})
+            primary = vmap.get(rv.source) if rv.source else None
+            if (
+                primary is not None
+                and primary.status == IN_PROGRESS
+                and not self._has_giant_units(st, version, info)
+            ):
+                # the primary is a live pipeline relay: its staggered
+                # prefix moves bytes link-disjointly at full rate, and the
+                # epidemic already flows through it — growing this plan
+                # would trade a dedicated uplink for shares of contended
+                # ones (chains break only on death or giant units)
+                return
+            spool = self._swarm_pool(st, version, info, start)
+            if len(spool) >= 2 and self._swarm_wins(
+                st, version, info, spool, primary, start, num_units
+            ):
+                plan = self._swarm_partition(spool, start, num_units)
+                current = {s for s, _, _ in rv.plan}
+                if not {s for s, _, _ in plan} <= current:
+                    self._install_plan(st, version, rv, info, plan)
+                    self.stats["swarm_grows"] += 1
+                    self.stats["work_steals"] += 1
             return
         # Steal only where a re-partition can actually win: giant-unit
         # workloads (chunk spread rebalances as full copies appear), or a
@@ -1561,6 +1808,8 @@ class ReferenceServer:
         self.stats["replications_started"] += 1
         if len(plan) > 1:
             self.stats["multi_source_assignments"] += 1
+        if any(s.ceiling >= 0 for s in assignment.sources):
+            self.stats["swarm_assignments"] += 1  # a partial prefix serves
         return assignment
 
     def _ensure_offload_seed(
@@ -1643,6 +1892,31 @@ class ReferenceServer:
         off = offload_name(replica)
         if off in st.replicas and not st.replicas[off].failed:
             self._remove_replica(st, off, reason=reason)
+        # Proactive blast-radius control: a swarm source sits in *many*
+        # readers' plans, so waiting for each reader to observe its dead
+        # flows (RDMA timeout) multiplies the detection latency across the
+        # swarm. Re-partition every affected reader's unserved tail now;
+        # the epoch bump reaches their data planes on the next claim.
+        dead = {replica, off}
+        for version in list(st.versions.keys()):
+            vmap = st.versions.get(version, {})
+            for rv in list(vmap.values()):
+                if rv.status != IN_PROGRESS:
+                    continue
+                names = {s for s, _, _ in rv.plan}
+                if rv.source is not None:
+                    names.add(rv.source)
+                if not names & dead:
+                    continue
+                info = st.replicas.get(rv.replica)
+                if info is None or info.failed:
+                    continue
+                start = min(rv.progress.values()) if rv.progress else 0
+                plan = self._plan_assignment(st, info, version, start=start)
+                if plan is None:
+                    continue  # no live source left; readers keep polling
+                self._install_plan(st, version, rv, info, plan)
+                self.stats["reassignments"] += 1
 
     def _remove_replica(self, st: ModelState, replica: str, *, reason: str) -> None:
         info = st.replicas.get(replica)

@@ -76,8 +76,17 @@ class WorkerStore:
         self._layouts: Dict[str, LayoutEntry] = {}
         self._units: List[TransferUnit] = []
         self._metas: List[TensorMeta] = []
+        self._unit_of: Dict[str, int] = {}
         #: simulate preemption: a failed store refuses all reads
         self.failed = False
+        #: swarm replication served-prefix watermark: while this shard is
+        #: itself mid-replication, only units ``[0, serving_prefix)`` hold
+        #: final bytes and may be served to swarm readers. ``None`` means
+        #: unrestricted (publishers, completed replicas). The owner's pull
+        #: loop advances it *before* reporting progress to the server, so
+        #: any unit the scheduler shows as available is readable here — a
+        #: read past the watermark is a planner/claim bug, not a race.
+        self.serving_prefix: Optional[int] = None
 
     # -- registration ----------------------------------------------------------
 
@@ -89,7 +98,13 @@ class WorkerStore:
     ) -> None:
         """Register weight buffers; ``layout`` optionally stamps each
         tensor's layout descriptor (global shape + slice offset) onto its
-        metadata so cross-layout readers can reshard from this shard."""
+        metadata so cross-layout readers can reshard from this shard.
+
+        Registration asserts ownership of the buffers, so any served-prefix
+        watermark left behind by an earlier aborted pull is lifted — a
+        stale watermark would otherwise poison every later version served
+        from this store."""
+        self.serving_prefix = None
         with self._lock:
             for name, arr in named_tensors.items():
                 buf = np.ascontiguousarray(arr)
@@ -116,6 +131,21 @@ class WorkerStore:
             tensor_meta(n, a, self._layouts.get(n)) for n, a in self._buffers.items()
         ]
         self._units = build_units(self._metas)
+        self._unit_of = {}
+        for u in self._units:
+            self._unit_of[u.name] = u.index
+            for m in u.members:
+                self._unit_of[m] = u.index
+
+    def _check_served(self, unit_index: int, what: str) -> None:
+        """Never-read-past-source-prefix guard (swarm replication)."""
+        sp = self.serving_prefix
+        if sp is not None and unit_index >= sp:
+            raise TensorHubError(
+                f"{self.worker_id}: read of {what} (unit {unit_index}) beyond "
+                f"the served prefix [0, {sp}) — the bytes there are not final; "
+                "swarm readers must gate on the source's progress counter"
+            )
 
     @property
     def layouts(self) -> Dict[str, LayoutEntry]:
@@ -146,7 +176,7 @@ class WorkerStore:
         if not self._buffers:
             raise NotRegisteredError(f"{self.worker_id}: no tensors registered")
         sums = tuple(
-            checksum_lib.checksum(self.read_unit(u)) if with_checksums else 0
+            checksum_lib.checksum(self._gather_unit(u)) if with_checksums else 0
             for u in self._units
         )
         return ShardManifest(
@@ -158,9 +188,16 @@ class WorkerStore:
     def read_unit(self, unit: TransferUnit) -> np.ndarray:
         """Serve one transfer unit as a flat byte array (zero-copy for large
         tensors; gather-into-staging for compacted buckets — the paper's
-        RDMA-copy path)."""
+        RDMA-copy path). Transport-facing: refuses reads of units beyond
+        the served prefix while this shard is itself mid-replication."""
         if self.failed:
             raise TransportError(f"{self.worker_id} is dead")
+        self._check_served(unit.index, unit.name)
+        return self._gather_unit(unit)
+
+    def _gather_unit(self, unit: TransferUnit) -> np.ndarray:
+        """Owner-local unit gather (manifest checksums, snapshots): not
+        prefix-guarded — the owner may always see its own buffers."""
         if not unit.is_compact:
             arr = self._buffers.get(unit.name)
             if arr is None:
@@ -197,6 +234,9 @@ class WorkerStore:
         reshard plan are exactly these one-sided range reads."""
         if self.failed:
             raise TransportError(f"{self.worker_id} is dead")
+        idx = self._unit_of.get(name)
+        if idx is not None:
+            self._check_served(idx, name)
         arr = self._buffers.get(name)
         if arr is None:
             raise NotRegisteredError(f"{self.worker_id}: unknown tensor {name}")
@@ -307,7 +347,13 @@ class LocalTransport:
         granularity: the source checksums the range at read time and the
         reader re-verifies after the wire copy; the caller additionally
         verifies the *assembled* unit against the manifest checksum, so
-        end-to-end protection is preserved under chunking."""
+        end-to-end protection is preserved under chunking.
+
+        The swarm served-prefix guard applies at chunk granularity too:
+        ``read_unit`` below refuses units past the source's watermark, so
+        a chunk of a not-yet-final unit can never be served (chunk-level
+        checksums alone would not catch it — they are computed at read
+        time and would happily cover garbage)."""
         src = self.registry.get(src_replica, shard_idx)
         full = src.read_unit(unit)
         if offset < 0 or offset + nbytes > full.nbytes:

@@ -172,6 +172,7 @@ class SimCluster:
         max_sources: int = 4,
         scheduler: str = "least_loaded",
         work_stealing: bool = True,
+        swarm: bool = True,
     ) -> None:
         #: cross-DC wire-byte multiplier: int8 quantization (kernels/quant)
         #: moves q(int8) + per-1024 f32 scales = x0.2539 of bf16 bytes at
@@ -200,6 +201,10 @@ class SimCluster:
             scheduler=scheduler,
             max_sources=max_sources,
             work_stealing=work_stealing,
+            # swarm replication: in-progress replicas serve their completed
+            # prefix as sources; ``swarm=False`` reproduces the pre-swarm
+            # (PR 2) scheduler exactly (benchmarks' parity knob)
+            swarm=swarm,
             # chunking disabled means no unit is "giant" to the scheduler:
             # it must not plan around chunk-spreading the data plane will
             # never perform (None would select the server's default hint)
@@ -791,6 +796,12 @@ class SimShard:
             # rate; claiming ranges out of order would starve relays to
             # 1/window of the bandwidth. Faster/idler sources win more
             # claims, so load balances itself around the server's ranges.
+            # The `tasks[i].unit < avail` predicate is ALSO the simulator's
+            # never-read-past-source-prefix guard (swarm replication): a
+            # claim is legal only for units the source's completed prefix
+            # covers, and progress is monotone, so a claimed unit can never
+            # outrun its source — in-progress replicas serve exactly their
+            # prefix (SourceSlice.ceiling is the plan-time snapshot of it).
             while state["scan"] < len(tasks) and claimed[state["scan"]]:
                 state["scan"] += 1
             pick = None

@@ -1,6 +1,10 @@
 """Exhaustive interleaving tests (paper 4.6): enumerate EVERY merge of two
 clients' control-plane op streams against one server and assert the
-consistency/availability invariants hold in all of them.
+consistency/availability invariants hold in all of them — plus randomized
+(seeded, reproducible) fault-injection interleavings for swarm
+replication: kill/preempt random swarm sources and bump progress at
+adversarial ticks, then check payload bit-identity, checksum integrity
+and simulator quiescence.
 
 This is the FoundationDB-style deterministic simulation the paper credits
 for uncovering subtle concurrency bugs; because all requests originate
@@ -8,11 +12,17 @@ from one process, every execution is reproducible.
 """
 
 import itertools
+import random
+import threading
+import time
 
+import numpy as np
 import pytest
 
+from repro.core import TensorHubClient
 from repro.core.errors import TensorHubError
-from repro.core.server import ReferenceServer
+from repro.core.server import IN_PROGRESS, ReferenceServer
+from repro.transfer.simcluster import SimCluster
 
 from tests.test_server_consistency import manifest, open_replica
 
@@ -141,3 +151,185 @@ def test_all_interleavings_two_readers_share_sources():
             for rv in vmap.values():
                 assert rv.refcount == 0, f"leaked refcount in {schedule}"
     assert count == 70  # C(8,4)
+
+
+# ---------------------------------------------------------------------------
+# randomized swarm fault injection (seeded, reproducible)
+# ---------------------------------------------------------------------------
+
+GB = 1e9
+
+
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_swarm_kills_sim_quiesces(seed):
+    """Kill random swarm sources at adversarial ticks (aligned to unit-flow
+    boundaries, where claims/progress/epochs race hardest): every survivor
+    completes with full per-shard progress, the victims' replicate groups
+    error out, and the event loop quiesces — no deadlocked waiter keeps
+    virtual time running to the horizon."""
+    rng = random.Random(seed)
+    cl = SimCluster()
+    units = [GB] * 12
+    n_dest = 6
+    pubs = [cl.add_replica("m", f"pub{i}", 2, unit_bytes=units) for i in range(2)]
+    dests = [
+        cl.add_replica("m", f"dst{i}", 2, unit_bytes=units, is_spot=True)
+        for i in range(n_dest)
+    ]
+    for r in pubs + dests:
+        r.open()
+    cl.run()
+    pubs[0].publish(0)
+    cl.run()
+    seeds = [p.replicate("latest") for p in pubs[1:]]
+    cl.run()
+    assert all(e.triggered and e.error is None for e in seeds)
+    t0 = cl.env.now
+    events = {d.name: d.replicate("latest") for d in dests}
+    # adversarial ticks: kills land right at unit-flow boundaries (one
+    # 1 GB unit over an effective ~23 GB/s uplink), plus a tiny jitter
+    # either side so both "just before" and "just after" races occur
+    unit_t = GB / (cl.hw.tensorhub_rdma_eff * cl.hw.rdma_per_shard)
+    victims = rng.sample([d.name for d in dests], rng.randint(1, 3))
+    for v in victims:
+        k = rng.randint(1, 10)
+        jitter = rng.choice([-1e-4, 0.0, 1e-4])
+        cl.env.schedule(max(1e-3, k * unit_t + jitter), lambda v=v: cl.kill_replica(v))
+    cl.run(until=300.0)
+    # quiesced: no keyed waiter is still parked (a reader gating forever on
+    # a progress counter that will never advance would show up here)
+    pending = [
+        k
+        for k, ev in cl.env._keyed.items()  # noqa: SLF001 - test introspection
+        if ev._waiters or ev._callbacks  # noqa: SLF001
+    ]
+    assert not pending, f"sim did not quiesce; parked waiters on {pending}"
+    for d in dests:
+        ev = events[d.name]
+        if d.name in victims:
+            continue  # a preempted group may error or (if late kill) finish
+        assert ev.triggered and ev.error is None, f"{d.name} did not complete"
+        for s in d.shards:
+            assert (
+                cl.server.shard_progress("m", d.name, 0, s.idx) == len(units)
+            ), f"{d.name}/s{s.idx}: incomplete progress"
+    # no replica left mid-replication: swarm state fully unwound
+    st = cl.server._models["m"]  # noqa: SLF001 - test introspection
+    for vmap in st.versions.values():
+        for rv in vmap.values():
+            if rv.replica in victims:
+                continue
+            assert rv.status != IN_PROGRESS, f"{rv.replica} stuck in-progress"
+
+
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_random_swarm_kills_threaded_bit_identical(seed):
+    """Threaded client with real bytes: random swarm-source kills at random
+    delays; surviving readers converge to bit-identical payloads with
+    whole-unit checksums verified end to end."""
+    rng = random.Random(seed)
+
+    def tensors(tag: float):
+        g = np.random.default_rng(int(tag))
+        return {
+            "big": g.integers(0, 255, size=(96, 1024), dtype=np.uint8),
+            "w": np.full((64, 8), tag, dtype=np.float32),
+        }
+
+    server = ReferenceServer()
+    hub = TensorHubClient(server, window=3, chunk_bytes=4096)
+    pub = [hub.open("m", "pub", 1, 0)]
+    pub[0].register(tensors(42.0))
+    pub[0].publish(0)
+    mirrors = []
+    for i in range(2):  # extra full copies that become kill targets
+        h = hub.open("m", f"mir{i}", 1, 0)
+        h.register(tensors(0.0))
+        h.replicate(0)
+        mirrors.append(h)
+
+    victims = rng.sample([m.replica for m in mirrors], rng.randint(1, 2))
+
+    def killer():
+        for v in victims:
+            time.sleep(rng.uniform(0.01, 0.08))
+            hub.registry.fail_replica(v)
+            with hub._cv:  # noqa: SLF001 — failure injection
+                server.fail_replica("m", v, reason="random preemption")
+
+    kt = threading.Thread(target=killer, daemon=True)
+    readers = [hub.open("m", f"r{i}", 1, 0) for i in range(3)]
+    for r in readers:
+        r.register(tensors(float(i := readers.index(r))))
+    errs = []
+
+    def pull(h):
+        try:
+            h.replicate(0)
+        except BaseException as e:  # noqa: BLE001
+            errs.append((h.replica, e))
+
+    ts = [threading.Thread(target=pull, args=(r,)) for r in readers]
+    kt.start()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    kt.join(timeout=10)
+    assert not errs, f"readers failed: {errs}"
+    want = tensors(42.0)
+    for r in readers:
+        for name, arr in want.items():
+            assert np.array_equal(r.store.get(name), arr), (seed, r.replica, name)
+
+
+@pytest.mark.timeout(300)
+def test_random_progress_bumps_against_planner():
+    """Server-level adversarial interleaving: random progress bumps, joins,
+    publishes and kills in random (seeded) order; after every op the swarm
+    planner's invariants hold for every in-progress reader — the plan
+    tiles the remaining range with no gaps/overlaps and references only
+    live replicas."""
+    for seed in range(6):
+        rng = random.Random(seed)
+        server = ReferenceServer()
+        open_replica(server, "pub")
+        for shard in range(2):
+            server.publish("m", "pub", shard, 0, manifest(), op_id=0)
+        readers = []
+        ops = 0
+        for step in range(60):
+            ops += 1
+            roll = rng.random()
+            try:
+                if roll < 0.3 and len(readers) < 5:
+                    name = f"r{len(readers)}"
+                    open_replica(server, name)
+                    for shard in range(2):
+                        server.begin_replicate("m", name, shard, 0, op_id=0)
+                    readers.append(name)
+                elif roll < 0.8 and readers:
+                    name = rng.choice(readers)
+                    shard = rng.randrange(2)
+                    bump = rng.randint(1, 8)
+                    server.update_progress("m", name, shard, 0, bump)
+                elif readers and roll < 0.9:
+                    victim = rng.choice(readers)
+                    readers.remove(victim)
+                    server.fail_replica("m", victim, reason="adversarial")
+            except TensorHubError:
+                pass  # defined errors allowed; invariants must still hold
+            st = server._models["m"]  # noqa: SLF001 - test introspection
+            n_units = server.manifest("m", 0, 0).num_units
+            vmap = st.versions.get(0, {})
+            for rv in vmap.values():
+                if rv.status != IN_PROGRESS or not rv.plan:
+                    continue
+                pos = rv.plan[0][1]
+                for src, a, b in rv.plan:
+                    assert a == pos and b >= a, f"seed {seed}: torn plan {rv.plan}"
+                    pos = b
+                    assert src in vmap, f"seed {seed}: dead source {src} in plan"
+                assert pos in (n_units, -1), f"seed {seed}: plan does not tile: {rv.plan}"

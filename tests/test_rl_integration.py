@@ -1,9 +1,12 @@
 """Integration: the full RL loop (Fig 4) across trainer + rollout threads
-with real weight bytes moving through TensorHub."""
+with real weight bytes moving through TensorHub — plus the swarm-pull
+strong-consistency scenario (trainer rolls v+1 while rollouts are mid-
+swarm-pull of v; no rollout may ever observe a torn version)."""
 
 import threading
 import time
 
+import numpy as np
 import pytest
 
 from repro.configs import get_config
@@ -51,3 +54,93 @@ def test_rl_loop_end_to_end():
     assert server.stats["replications_completed"] >= 2
     # rollouts converged to a recent version
     assert all(w.weights_version is not None and w.weights_version >= 1 for w in workers)
+
+
+# ---------------------------------------------------------------------------
+# swarm pull vs. concurrent publish: strong consistency (Table 2 semantics)
+# ---------------------------------------------------------------------------
+
+
+def _weights(version: int):
+    """Deterministic per-version weights, distinguishable byte-for-byte."""
+    rng = np.random.default_rng(1000 + version)
+    return {
+        "wq": rng.integers(0, 255, size=(128, 512), dtype=np.uint8),
+        "wk": np.full((64, 64), float(version), dtype=np.float32),
+        "scale": np.full((8,), 0.5 + version, dtype=np.float32),
+    }
+
+
+def _expect_version(handle, version: int) -> None:
+    want = _weights(version)
+    for name, arr in want.items():
+        got = handle.store.get(name)
+        assert np.array_equal(got, arr), (
+            f"{handle.replica}: tensor {name} is not pure v{version} "
+            "(torn or stale bytes observed)"
+        )
+
+
+@pytest.mark.timeout(300)
+def test_publish_next_version_during_swarm_pull_no_torn_reads():
+    """Fig 4 steady state under swarm replication: rollouts are mid-swarm-
+    pull of v1 (several concurrent readers, each other's prefixes in the
+    availability map) while the trainer unpublishes v1 and publishes v2.
+
+    Strong consistency requires: (a) every rollout's replicate(v1) lands
+    pure v1 bytes — the retention drain means the trainer cannot mutate
+    buffers readers still pull from; (b) a subsequent update("latest")
+    lands pure v2; (c) no interleaving ever shows a mix of the two."""
+    server = ReferenceServer()
+    hub = TensorHubClient(server, window=3, chunk_bytes=8192)
+
+    trainer = hub.open("rl", "trainer", 1, 0)
+    trainer.register(_weights(1))
+    trainer.publish(1)
+    # a second full copy so rollout pulls multi-source from the start
+    mirror = hub.open("rl", "mirror", 1, 0)
+    mirror.register(_weights(0))
+    mirror.replicate(1)
+
+    rollouts = [hub.open("rl", f"rollout-{i}", 1, 0) for i in range(3)]
+    for i, r in enumerate(rollouts):
+        r.register(_weights(0))
+
+    pulled = threading.Barrier(len(rollouts) + 1, timeout=60)
+    errs = []
+
+    def pull(h):
+        try:
+            v = h.replicate(1)
+            assert v == 1
+            _expect_version(h, 1)  # pure v1: no v2 bytes leaked mid-pull
+            pulled.wait()
+        except BaseException as e:  # noqa: BLE001
+            errs.append((h.replica, e))
+            try:
+                pulled.wait()
+            except threading.BrokenBarrierError:
+                pass
+
+    threads = [threading.Thread(target=pull, args=(r,)) for r in rollouts]
+    for t in threads:
+        t.start()
+
+    # trainer rolls the version while the swarm pull is in flight: the
+    # unpublish drains (readers hold refcounts) before buffers may mutate
+    trainer.unpublish()
+    for name, arr in _weights(2).items():
+        trainer.store.get(name)[...] = arr  # legal only after drain
+    trainer.publish(2)
+    pulled.wait()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errs, f"rollout errors: {errs}"
+
+    # every rollout flips to v2 atomically via update("latest")
+    for r in rollouts:
+        assert r.update("latest") is True
+        assert r.current_version == 2
+        _expect_version(r, 2)
+    for r in rollouts + [mirror, trainer]:
+        r.close()

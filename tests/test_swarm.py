@@ -1,0 +1,465 @@
+"""Swarm replication tests: the unit-granular availability map, the
+ceiling-aware swarm planner, plan growth (epoch bumps), topology
+weighting, and the never-read-past-source-prefix guard — server-level
+property tests (hypothesis via the compat shim) plus threaded-client
+end-to-end swarm pulls with real, verified bytes."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import ReferenceServer, TensorHubClient
+from repro.core.errors import TensorHubError
+from repro.core.meta import (
+    Assignment,
+    ShardManifest,
+    SourceSlice,
+    TensorMeta,
+    TransferUnit,
+    WorkerInfo,
+)
+from repro.core.server import IN_PROGRESS, PUBLISHED
+from repro.transfer.engine import WorkerStore
+
+
+def manifest(n_units=8, unit_bytes=100):
+    tensors = tuple(
+        TensorMeta(f"t{i}", (unit_bytes,), "uint8", unit_bytes) for i in range(n_units)
+    )
+    units = tuple(
+        TransferUnit(index=i, name=f"t{i}", nbytes=unit_bytes) for i in range(n_units)
+    )
+    return ShardManifest(tensors=tensors, units=units, checksums=(0,) * n_units)
+
+
+def worker(replica, shard, dc="dc0", node=None):
+    return WorkerInfo(f"{replica}/s{shard}", node or f"{dc}/{replica}", dc, False)
+
+
+def open_replica(s, name, shards=2, dc="dc0", node=None):
+    for i in range(shards):
+        s.open("m", name, shards, i, worker=worker(name, i, dc, node))
+        s.register("m", name, i)
+
+
+def publish(s, name, version, shards=2, op=0, n_units=8):
+    for i in range(shards):
+        s.publish("m", name, i, version, manifest(n_units), op_id=op)
+
+
+def assign(s, name, spec=0, op=0, shards=2):
+    a = None
+    for i in range(shards):
+        a = s.begin_replicate("m", name, i, spec, op_id=op)
+    return a
+
+
+def start_partial(s, name, version, progress, shards=2, op=0, n_units=8):
+    """Open a replica, begin replicating, and drive its per-shard progress
+    counters to ``progress`` — a partial prefix the swarm may serve."""
+    open_replica(s, name, shards=shards)
+    a = assign(s, name, version, op=op, shards=shards)
+    for i in range(shards):
+        if progress > 0:
+            s.update_progress("m", name, i, version, progress)
+    return a
+
+
+def plan_of(s, name, version=0):
+    rv = s._models["m"].versions[version][name]  # noqa: SLF001 — introspection
+    return list(rv.plan)
+
+
+def check_tiles(plan, start, n_units):
+    """The tiling invariant: sorted, contiguous, gap-free, overlap-free."""
+    pos = start
+    for _, a, b in plan:
+        assert a == pos, f"gap/overlap at {a} (expected {pos}) in {plan}"
+        assert b >= a
+        pos = b
+    assert pos == n_units, f"plan does not cover [{start}, {n_units}): {plan}"
+
+
+# ---------------------------------------------------------------------------
+# availability map
+# ---------------------------------------------------------------------------
+
+
+class TestAvailabilityMap:
+    def test_published_and_partial_prefixes(self):
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        start_partial(s, "r1", 0, progress=3)
+        av = s.availability("m", 0)
+        assert av["pub"] == 8  # fully published: every unit
+        assert av["r1"] == 3  # in-progress: the completed prefix
+
+    def test_min_over_shards(self):
+        """A group's servable prefix is the min over its shards — the only
+        prefix every shard of a reader can pull in lockstep."""
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        start_partial(s, "r1", 0, progress=0)
+        s.update_progress("m", "r1", 0, 0, 6)
+        s.update_progress("m", "r1", 1, 0, 2)
+        assert s.availability("m", 0)["r1"] == 2
+
+    def test_mid_publish_replica_counts_its_prefix(self):
+        """A replica with only some shards published serves like a partial
+        source, not a full one."""
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        open_replica(s, "mid")
+        s.publish("m", "mid", 0, 0, manifest(), op_id=0)  # shard 1 missing
+        assert s.availability("m", 0)["mid"] == 0
+
+
+# ---------------------------------------------------------------------------
+# swarm planning (direct)
+# ---------------------------------------------------------------------------
+
+
+class TestSwarmPlanning:
+    def test_partial_peer_joins_the_plan(self):
+        """One published + one announced partial peer: the swarm partitions
+        across both, the partial slice bounded by its ceiling."""
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        start_partial(s, "r1", 0, progress=4)
+        open_replica(s, "r2")
+        a = assign(s, "r2", 0, op=0)
+        assert {sl.source for sl in a.sources} == {"pub", "r1"}
+        check_tiles([(sl.source, sl.start_unit, sl.stop_unit) for sl in a.sources], 0, 8)
+        for sl in a.sources:
+            if sl.source == "r1":
+                assert 0 <= sl.ceiling <= 4
+                assert sl.stop_unit <= sl.ceiling  # never past the prefix
+            else:
+                assert sl.ceiling == -1  # published: unbounded
+        assert s.stats["swarm_assignments"] >= 1
+
+    def test_swarm_off_reproduces_pre_swarm_plans(self):
+        """swarm=False: a partial peer is never admitted; the planner
+        behaves exactly like the PR 2 scheduler (pipeline chain here)."""
+        for swarm in (True, False):
+            s = ReferenceServer(swarm=swarm)
+            open_replica(s, "pub")
+            publish(s, "pub", 0)
+            start_partial(s, "r1", 0, progress=4)
+            open_replica(s, "r2")
+            a = assign(s, "r2", 0, op=0)
+            srcs = {sl.source for sl in a.sources}
+            if swarm:
+                assert srcs == {"pub", "r1"}
+            else:
+                assert len(a.sources) <= 1  # single-source chain, as PR 2
+
+    def test_same_dc_partial_beats_cross_dc_published(self):
+        """Topology weighting: a same-DC in-progress peer outranks a
+        cross-DC published source — the WAN link carries exactly one copy
+        (the peer's own seed pull)."""
+        s = ReferenceServer()
+        open_replica(s, "remote", dc="dc0")
+        publish(s, "remote", 0)
+        open_replica(s, "seed", dc="dc1")
+        assign(s, "seed", 0, op=0)  # dc1's seeding replica (cross-DC chain)
+        for i in range(2):
+            s.update_progress("m", "seed", i, 0, 5)
+        open_replica(s, "r", dc="dc1")
+        a = assign(s, "r", 0, op=0)
+        assert a.source == "seed" and a.transport == "rdma"
+        assert all(sl.source != "remote" for sl in a.sources)
+
+    def test_growth_on_peer_announcement(self):
+        """A reader on a contended published source grows its plan (epoch
+        bump) when a swarm peer announces a prefix; the new plan starts at
+        the reader's completed prefix — completed units are never re-read."""
+        s = ReferenceServer(pipeline_replication=True)
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        open_replica(s, "x")
+        assign(s, "x", 0, op=0)  # loads pub (refcount 1)
+        start_partial(s, "r1", 0, progress=0, op=0)
+        # r1 completes units while another peer announces its prefix
+        start_partial(s, "peer", 0, progress=6, op=0)
+        for i in range(2):
+            s.update_progress("m", "r1", i, 0, 2)
+        a = s.get_assignment("m", "r1")
+        if a.epoch > 0:  # grew: the tail re-tiled over the richer pool
+            assert min(sl.start_unit for sl in a.sources) >= 2
+            check_tiles(
+                [(sl.source, sl.start_unit, sl.stop_unit) for sl in a.sources],
+                min(sl.start_unit for sl in a.sources),
+                8,
+            )
+
+    def test_source_death_repartitions_only_unserved_tail(self):
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        start_partial(s, "peer", 0, progress=8)
+        open_replica(s, "r")
+        a = assign(s, "r", 0, op=0)
+        assert {sl.source for sl in a.sources} == {"pub", "peer"}
+        for i in range(2):
+            s.update_progress("m", "r", i, 0, 3)
+        s.fail_replica("m", "peer", reason="spot preemption")
+        b = s.get_assignment("m", "r")
+        assert b.epoch > a.epoch
+        assert all(sl.source != "peer" for sl in b.sources)
+        assert min(sl.start_unit for sl in b.sources) == 3  # tail only
+
+    def test_no_read_cycles(self):
+        """Two readers never end up in each other's plans (a cycle whose
+        tails would gate on each other forever)."""
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0)
+        start_partial(s, "r1", 0, progress=4, op=0)
+        start_partial(s, "r2", 0, progress=4, op=0)
+        # drive growth on both; plans must stay acyclic
+        for name in ("r1", "r2"):
+            for i in range(2):
+                s.update_progress("m", name, i, 0, 5)
+        vmap = s._models["m"].versions[0]  # noqa: SLF001
+
+        def sources_of(n):
+            rv = vmap[n]
+            return {x for x, _, _ in rv.plan} | ({rv.source} if rv.source else set())
+
+        assert not ("r2" in sources_of("r1") and "r1" in sources_of("r2"))
+
+
+# ---------------------------------------------------------------------------
+# property-based planner invariants (hypothesis via the compat shim)
+# ---------------------------------------------------------------------------
+
+
+class TestPlannerProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n_units=st.integers(min_value=1, max_value=24),
+        n_pub=st.integers(min_value=0, max_value=3),
+        peer_progress=st.lists(
+            st.integers(min_value=0, max_value=24), min_size=0, max_size=4
+        ),
+        extra_load=st.integers(min_value=0, max_value=3),
+    )
+    def test_plan_tiles_and_respects_ceilings(
+        self, n_units, n_pub, peer_progress, extra_load
+    ):
+        """Random availability states: every swarm plan exactly tiles the
+        destination's unit list; no slice assigned to a partial source
+        exceeds its progress ceiling unless it is the tail slice of a
+        pool with no fully-available source (chain-tail, progress-gated)."""
+        s = ReferenceServer()
+        vmap_progress = {}
+        for i in range(n_pub):
+            open_replica(s, f"pub{i}")
+            publish(s, f"pub{i}", 0, n_units=n_units)
+        for j, p in enumerate(peer_progress):
+            if n_pub == 0 and j == 0:
+                # someone must publish first or nothing can replicate
+                open_replica(s, "seed")
+                publish(s, "seed", 0, n_units=n_units)
+            p = min(p, n_units)
+            start_partial(s, f"peer{j}", 0, progress=p, op=0, n_units=n_units)
+            vmap_progress[f"peer{j}"] = p
+        if n_pub == 0 and not peer_progress:
+            return  # nothing published: nothing to plan
+        if extra_load and n_pub:
+            st_m = s._models["m"]  # noqa: SLF001
+            st_m.versions[0][f"pub{0}"].refcount += extra_load
+        open_replica(s, "dest")
+        a = assign(s, "dest", 0, op=0)
+        assert a is not None
+        slices = a.slices(n_units)
+        check_tiles([(sl.source, sl.start_unit, sl.stop_unit) for sl in slices], 0, n_units)
+        has_unbounded = any(sl.ceiling < 0 for sl in slices)
+        for k, sl in enumerate(slices):
+            if sl.ceiling < 0:
+                continue  # fully published at plan time: unbounded
+            if sl.stop_unit > sl.ceiling and sl.start_unit < sl.stop_unit:
+                # only the tail slice may be progress-gated (chain-tail
+                # semantics), and never when a fully published source is
+                # in the plan to absorb the tail
+                assert k == len(slices) - 1, f"non-tail slice past ceiling: {slices}"
+                assert not has_unbounded, f"gated tail beside full source: {slices}"
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_units=st.integers(min_value=4, max_value=24),
+        done=st.integers(min_value=0, max_value=23),
+        peer_progress=st.integers(min_value=1, max_value=24),
+    )
+    def test_epoch_bumps_never_reread_completed_units(
+        self, n_units, done, peer_progress
+    ):
+        """Whatever triggers a re-partition (growth, death), the new plan
+        starts at or after the reader's completed prefix."""
+        done = min(done, n_units - 1)
+        s = ReferenceServer()
+        open_replica(s, "pub")
+        publish(s, "pub", 0, n_units=n_units)
+        # peer announces a prefix first, so the reader's plan includes it
+        start_partial(
+            s, "peer", 0, progress=min(peer_progress, n_units), op=0, n_units=n_units
+        )
+        open_replica(s, "r")
+        a = assign(s, "r", 0, op=0)
+        assert {sl.source for sl in a.sources} >= {"peer"} or len(a.sources) <= 1
+        for i in range(2):
+            if done:
+                s.update_progress("m", "r", i, 0, done)
+        s.fail_replica("m", "peer", reason="churn")  # re-plan: peer in r's plan
+        b = s.get_assignment("m", "r")
+        if b is not None and b.sources and b.epoch > a.epoch:
+            assert min(sl.start_unit for sl in b.sources) >= done
+
+
+# ---------------------------------------------------------------------------
+# never-read-past-source-prefix guard (engine + threaded client)
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixGuard:
+    def test_store_refuses_reads_past_watermark(self):
+        big = 3 * 1024 * 1024  # above TINY_TENSOR_BYTES: one unit per tensor
+        store = WorkerStore("w0")
+        store.register(
+            {
+                "a": np.zeros(big, dtype=np.uint8),
+                "b": np.ones(big, dtype=np.uint8),
+            }
+        )
+        units = store.units
+        assert len(units) == 2
+        store.serving_prefix = 1
+        store.read_unit(units[0])  # prefix unit: served
+        with pytest.raises(TensorHubError):
+            store.read_unit(units[1])
+        with pytest.raises(TensorHubError):
+            # range reads of a not-yet-final tensor are refused too
+            store.read_range(units[1].name, 0, 4)
+        store.serving_prefix = None
+        store.read_unit(units[1])  # unrestricted once replication completes
+
+    def test_manifest_checksums_ignore_watermark(self):
+        """The owner may always checksum its own buffers (publish path)."""
+        store = WorkerStore("w0")
+        store.register({"a": np.arange(64, dtype=np.uint8)})
+        store.serving_prefix = 0
+        m = store.build_manifest(with_checksums=True)
+        assert any(m.checksums)
+
+    def test_registration_lifts_stale_watermark(self):
+        """A watermark left by an aborted pull must not poison the store
+        for later versions: re-registering fresh buffers clears it."""
+        store = WorkerStore("w0")
+        store.register({"a": np.arange(64, dtype=np.uint8)})
+        store.serving_prefix = 0  # aborted pull left the guard armed
+        store.register({"a": np.ones(64, dtype=np.uint8)})
+        assert store.serving_prefix is None
+        store.read_unit(store.units[0])  # serves again
+
+    def test_publish_lifts_stale_watermark(self):
+        """Publishing vouches for every byte: a handle that aborted a pull
+        and then publishes serves all units again."""
+        from repro.core import ReferenceServer, TensorHubClient
+
+        server = ReferenceServer()
+        hub = TensorHubClient(server)
+        h = hub.open("m", "pub", 1, 0)
+        h.register({"a": np.arange(64, dtype=np.uint8)})
+        h.store.serving_prefix = 0  # simulate an aborted pull's leftover
+        h.publish(0)
+        assert h.store.serving_prefix is None
+        h.store.read_unit(h.store.units[0])
+
+
+def tensors(seed: float):
+    rng = np.random.default_rng(int(seed))
+    return {
+        "big": rng.integers(0, 255, size=(64, 1024), dtype=np.uint8),
+        "w0": np.full((32, 16), seed, dtype=np.float32),
+        "w1": np.full((32, 16), seed + 1, dtype=np.float32),
+    }
+
+
+def group(hub, name, shards, make, **kw):
+    handles = [hub.open("m", name, shards, i, **kw) for i in range(shards)]
+    for h in handles:
+        h.register(make())
+    return handles
+
+
+def run_group(handles, fn):
+    errs = []
+
+    def wrap(h):
+        try:
+            fn(h)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=wrap, args=(h,)) for h in handles]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    if errs:
+        raise errs[0]
+
+
+class TestThreadedSwarm:
+    def test_concurrent_readers_swarm_bit_identical(self):
+        """Several readers replicate concurrently (each other's prefixes in
+        the availability map); all end bit-identical with checksums on."""
+        server = ReferenceServer()
+        hub = TensorHubClient(server, window=3, chunk_bytes=4096)
+        pubs = group(hub, "pub", 2, lambda: tensors(11.0))
+        run_group(pubs, lambda h: h.publish(0))
+        readers = [group(hub, f"r{i}", 2, lambda: tensors(float(i))) for i in range(3)]
+        flat = [h for g in readers for h in g]
+        run_group(flat, lambda h: h.replicate(0))
+        want = tensors(11.0)
+        for h in flat:
+            for name, arr in want.items():
+                assert np.array_equal(h.store.get(name), arr), (h.replica, name)
+        # every reader's store is unrestricted again
+        assert all(h.store.serving_prefix is None for h in flat)
+
+    def test_swarm_source_death_mid_pull_recovers(self):
+        """Kill a replica that served its prefix into the swarm: survivors
+        re-partition the unserved tail and still converge bit-identically."""
+        server = ReferenceServer()
+        hub = TensorHubClient(server, window=2, chunk_bytes=4096)
+        pubs = group(hub, "pub", 1, lambda: tensors(13.0))
+        run_group(pubs, lambda h: h.publish(0))
+        mirror = group(hub, "mirror", 1, lambda: tensors(0.0))
+        run_group(mirror, lambda h: h.replicate(0))  # second full copy
+
+        def killer():
+            time.sleep(0.05)
+            hub.registry.fail_replica("mirror")
+            with hub._cv:  # noqa: SLF001 — failure injection
+                server.fail_replica("m", "mirror", reason="spot preemption")
+
+        t = threading.Thread(target=killer, daemon=True)
+        t.start()
+        subs = [group(hub, f"s{i}", 1, lambda: tensors(0.0)) for i in range(2)]
+        flat = [h for g in subs for h in g]
+        run_group(flat, lambda h: h.replicate(0))
+        t.join(timeout=10)
+        want = tensors(13.0)
+        for h in flat:
+            for name, arr in want.items():
+                assert np.array_equal(h.store.get(name), arr), (h.replica, name)
