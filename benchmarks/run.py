@@ -14,6 +14,7 @@ import traceback
 from benchmarks import (
     cross_dc,
     elastic,
+    failover,
     fanout,
     micro_bandwidth,
     micro_burst,
@@ -30,6 +31,7 @@ MODULES = [
     ("fig7c_failure", micro_failure),
     ("fanout_scheduler", fanout),
     ("swarm_replication", swarm),
+    ("failover_control_plane", failover),
     ("fig9_standalone", standalone),
     ("fig11_elastic", elastic),
     ("fig12_cross_dc", cross_dc),

@@ -11,6 +11,16 @@ Public API:
     handle.register(named_tensors)
     handle.publish(version=0)
     ...
+
+Fault tolerance (controller crash recovery):
+
+    from repro.core import OpLog, recover, take_snapshot
+
+    log = OpLog()
+    server = ReferenceServer(log=log)          # every mutation is logged
+    ...                                        # controller dies
+    standby = recover(log)                     # bit-identical replay
+    hub.failover(standby)                      # clients resume in place
 """
 
 from repro.core.client import ShardHandle, TensorHubClient
@@ -19,12 +29,19 @@ from repro.core.errors import (
     ConsistencyError,
     MutabilityViolationError,
     NotRegisteredError,
+    ServerUnavailableError,
     ShardLayoutError,
     StaleHandleError,
     TensorHubError,
     VersionUnavailableError,
 )
+from repro.core.failover import (
+    recover,
+    state_digest,
+    take_snapshot,
+)
 from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.oplog import OpLog, OpRecord, Snapshot
 from repro.core.server import (
     Assignment,
     Event,
@@ -41,10 +58,14 @@ __all__ = [
     "Event",
     "MutabilityViolationError",
     "NotRegisteredError",
+    "OpLog",
+    "OpRecord",
     "ReferenceServer",
+    "ServerUnavailableError",
     "ShardHandle",
     "ShardLayoutError",
     "ShardManifest",
+    "Snapshot",
     "StaleHandleError",
     "TensorHubClient",
     "TensorHubError",
@@ -55,4 +76,7 @@ __all__ = [
     "VersionUnavailableError",
     "WorkerInfo",
     "offload_name",
+    "recover",
+    "state_digest",
+    "take_snapshot",
 ]

@@ -23,6 +23,8 @@ import numpy as np
 from repro.core import server as server_lib
 from repro.core.errors import (
     ChecksumError,
+    ConsistencyError,
+    ServerUnavailableError,
     StaleHandleError,
     TensorHubError,
     VersionUnavailableError,
@@ -38,6 +40,15 @@ from repro.transfer.engine import (
 )
 
 _POLL = 0.02  # condition re-check period (seconds)
+
+#: op-id namespaces for post-failover re-assertion (keyed by version so
+#: every shard of a group derives the same id without coordination);
+#: disjoint from the per-handle sequences (0.. and 1_000_000..)
+_REASSERT_PUBLISH_BASE = 2_000_000
+_REASSERT_BEGIN_BASE = 3_000_000
+_REESTABLISH_BASE = 4_000_000  # distinct from the reassert begin: the two
+# can target the same version with different op kinds (begin_update vs the
+# parked begin_replicate), and one op id must never carry both
 
 
 class _SourceLost(Exception):
@@ -69,6 +80,7 @@ class TensorHubClient:
         clock: Callable[[], float] = time.monotonic,
         window: int = DEFAULT_WINDOW,
         chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
+        failover_timeout: float = 30.0,
     ) -> None:
         self.server = server
         self.registry = registry or WorkerRegistry()
@@ -82,8 +94,76 @@ class TensorHubClient:
         self.chunk_bytes = (
             int(chunk_bytes) if chunk_bytes and chunk_bytes > 0 else None
         )
+        #: how long a blocked server call waits for failover() to install
+        #: a recovered server after a controller crash
+        self.failover_timeout = failover_timeout
+        self._handles: List["ShardHandle"] = []
         self._cv = threading.Condition(threading.RLock())
         server.add_watcher(self._wake)
+
+    # -- controller failover ---------------------------------------------------
+
+    def call(self, method: str, *args, **kwargs):
+        """Invoke a server method, riding out a controller crash.
+
+        Caller must hold ``self._cv``. On :class:`ServerUnavailableError`
+        the call parks until :meth:`failover` installs a recovered server,
+        then retries there. Retrying across the crash is safe because
+        every control-plane op is idempotent under re-delivery (group ops
+        return their cached result; progress reports are max-based)."""
+        while True:
+            srv = self.server
+            try:
+                return getattr(srv, method)(*args, **kwargs)
+            except ServerUnavailableError:
+                self._await_failover(srv)
+
+    def _await_failover(self, crashed: ReferenceServer) -> None:
+        deadline = time.monotonic() + self.failover_timeout
+        while self.server is crashed:
+            if time.monotonic() > deadline:
+                raise ServerUnavailableError(
+                    "controller down and no failover server installed "
+                    f"within {self.failover_timeout}s"
+                )
+            self._cv.wait(_POLL)
+
+    def failover(self, new_server: ReferenceServer) -> None:
+        """Switch every handle to a recovered/standby server (built by
+        ``repro.core.failover.recover``) after the primary crashed.
+
+        Handles re-assert whatever durable state the recovered server may
+        have lost from the unflushed log tail — their registration, their
+        published version, and their in-flight replicate/update op — and
+        blocked calls then resume transparently; in-flight pulls pick up
+        the re-issued plan through the existing epoch machinery and
+        resume from their completed prefix.
+
+        Re-assertion is two-phase across ALL handles: every handle first
+        re-establishes its steady state (open/register/publish), and only
+        then are in-flight begin ops re-issued. Ordering matters — a
+        reader's re-issued ``begin_update("latest")`` must not resolve
+        against a server whose publisher has not re-published yet (it
+        would come back not-updated and strand the mid-pull threads)."""
+        with self._cv:
+            if new_server is self.server:
+                return
+            self.server = new_server
+            new_server.add_watcher(self._wake)
+            for phase in ("steady", "inflight"):
+                for h in list(self._handles):
+                    try:
+                        h.reassert(phase)
+                    except TensorHubError as e:  # pragma: no cover - diagnostics
+                        import logging
+
+                        logging.getLogger(__name__).warning(
+                            "%s: reassert (%s) after failover failed: %s",
+                            h.worker.worker_id,
+                            phase,
+                            e,
+                        )
+            self._cv.notify_all()
 
     def _wake(self) -> None:
         # The watcher fires while the server mutation holds our lock (all
@@ -118,22 +198,14 @@ class TensorHubClient:
             datacenter=datacenter,
             is_spot=is_spot,
         )
-        with self._cv:
-            self.server.open(
-                model_name,
-                replica_name,
-                num_shards,
-                shard_idx,
-                worker=worker,
-                retain=retain,
-            )
-        return ShardHandle(
+        handle = ShardHandle(
             client=self,
             model=model_name,
             replica=replica_name,
             shard_idx=shard_idx,
             num_shards=num_shards,
             worker=worker,
+            retain=retain,
             offload_seeding=offload_seeding,
             with_checksums=with_checksums,
             device_repack=device_repack,
@@ -142,6 +214,21 @@ class TensorHubClient:
                 int(chunk_bytes) if chunk_bytes and chunk_bytes > 0 else None
             ),
         )
+        with self._cv:
+            # open + handle registration under ONE cv hold: a failover
+            # interleaved between them would miss the handle in the
+            # reassert sweep while its open record sat in the lost tail
+            self.call(
+                "open",
+                model_name,
+                replica_name,
+                num_shards,
+                shard_idx,
+                worker=worker,
+                retain=retain,
+            )
+            self._handles.append(handle)
+        return handle
 
 
 class ShardHandle:
@@ -158,6 +245,7 @@ class ShardHandle:
         worker: WorkerInfo,
         offload_seeding: bool,
         with_checksums: bool,
+        retain: Optional[object] = None,
         device_repack: bool = False,
         window: int = DEFAULT_WINDOW,
         chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
@@ -168,6 +256,7 @@ class ShardHandle:
         self.shard_idx = shard_idx
         self.num_shards = num_shards
         self.worker = worker
+        self.retain = retain
         self.offload_seeding = offload_seeding
         self.with_checksums = with_checksums
         #: windowed data plane: concurrent unit fetches for this shard's
@@ -188,6 +277,16 @@ class ShardHandle:
         self._offload_stores: Dict[int, WorkerStore] = {}
         self._seed_threads: Dict[int, threading.Thread] = {}
         self._closed = False
+        #: failover re-assertion state: whether register() ran, and the
+        #: in-flight blocking op — (kind, spec, op_id) — if a replicate or
+        #: update is mid-pull when the controller dies
+        self._registered = False
+        self._inflight: Optional[tuple] = None
+        #: (version, op_id) of our last publish(): a post-failover
+        #: re-publish re-joins the same group op, so shards that did make
+        #: it into the durable log and shards that did not converge on one
+        #: transaction
+        self._publish_op: Optional[tuple] = None
 
     # -- helpers ---------------------------------------------------------------
 
@@ -209,6 +308,153 @@ class ShardHandle:
         self._off_op_seq += 1
         return op
 
+    def _scall(self, method: str, *args, **kwargs):
+        """Server call with controller-failover retry (cv must be held)."""
+        return self.client.call(method, *args, **kwargs)
+
+    # -- controller failover (see TensorHubClient.failover) ---------------------
+
+    def reassert(self, phase: str = "steady") -> None:
+        """Re-establish this shard's control-plane state on a freshly
+        recovered server that may have lost an unflushed suffix of the op
+        log. Called under the client cv by ``TensorHubClient.failover``,
+        once per phase: ``"steady"`` (open/register/publish) runs for
+        every handle before any ``"inflight"`` begin re-issue, so a
+        reader's ``begin_update("latest")`` never resolves against a
+        server whose publisher has not re-published yet.
+
+        Everything re-issued here is idempotent against a server that did
+        NOT lose the corresponding records: re-opening an open shard is
+        absorbed, register() is a set-add, and a re-delivered group op
+        returns its cached result. In-flight pull threads then self-heal:
+        the re-issued begin installs fresh in-progress state, their next
+        epoch check triggers a re-plan, and max-based progress reports
+        re-assert the completed prefix."""
+        if self._closed:
+            return
+        srv = self.client.server
+        if phase == "steady":
+            try:
+                srv.open(
+                    self.model,
+                    self.replica,
+                    self.num_shards,
+                    self.shard_idx,
+                    worker=self.worker,
+                    retain=self.retain,
+                )
+            except ConsistencyError:
+                pass  # this shard is already open on the recovered server
+            if self._registered:
+                srv.register(self.model, self.replica, self.shard_idx)
+            # if the recovered server lost our publish (all shards, or
+            # just this one — another shard's record, or its reassert,
+            # may already have re-installed the version), vouch for the
+            # registered bytes again (fresh manifest — buffers are
+            # immutable while published, so it is identical)
+            if (
+                self._inflight is None
+                and self.current_version is not None
+                and self._shard_publish_lost(srv)
+            ):
+                v = self.current_version
+                if self._publish_op is not None and self._publish_op[0] == v:
+                    # re-join the original publish group op, so durable
+                    # and lost shards converge on one transaction
+                    op = self._publish_op[1]
+                else:
+                    op = _REASSERT_PUBLISH_BASE + v
+                srv.publish(
+                    self.model,
+                    self.replica,
+                    self.shard_idx,
+                    v,
+                    self.store.build_manifest(with_checksums=self.with_checksums),
+                    op_id=op,
+                )
+            return
+        infl = self._inflight
+        if infl is None:
+            return
+        kind, spec, op, pinned = infl
+        if pinned is not None:
+            # mid-pull of a KNOWN version: re-issue pinned to it under a
+            # version-derived op id — a relative spec like "latest" may
+            # resolve differently on the recovered server (a newer
+            # publish survived in the log), and installing in-progress
+            # state for any other version would strand the pull threads.
+            # Against a server that retained the original state this
+            # degenerates to a no-op ("already current" / mutability
+            # rejection on a fresh op id).
+            op2 = _REASSERT_BEGIN_BASE + pinned
+            try:
+                if kind == "replicate":
+                    srv.begin_replicate(
+                        self.model, self.replica, self.shard_idx, pinned, op_id=op2
+                    )
+                else:
+                    srv.begin_update(
+                        self.model,
+                        self.replica,
+                        self.shard_idx,
+                        pinned,
+                        op_id=op2,
+                        offload_seeding=self.offload_seeding,
+                    )
+            except TensorHubError:
+                pass  # state (partially) present; pulls self-heal via epochs
+            return
+        # begin not yet answered: re-issue the original op verbatim —
+        # cached result if the server kept the txn, fresh (identical)
+        # execution if the log tail lost it
+        if kind == "replicate":
+            srv.begin_replicate(
+                self.model, self.replica, self.shard_idx, spec, op_id=op
+            )
+        else:
+            srv.begin_update(
+                self.model,
+                self.replica,
+                self.shard_idx,
+                spec,
+                op_id=op,
+                offload_seeding=self.offload_seeding,
+            )
+
+    def _reestablish(self, version: int, dest_name: str) -> None:
+        """Last-resort recovery for a pull whose in-progress state is
+        missing from the (recovered) server and whose re-issued begin
+        could not restore it — e.g. the target version's publisher lives
+        in ANOTHER client process that has not failed over yet, so
+        reassert ordering cannot help. Park a replicate for the absolute
+        version we were pulling: ``_service_pending`` assigns it the
+        moment a source (re)appears, and the waiting pull threads resume
+        from their completed prefix. cv must be held."""
+        if dest_name != self.replica or self._inflight is None:
+            return
+        try:
+            self._scall(
+                "begin_replicate",
+                self.model,
+                self.replica,
+                self.shard_idx,
+                version,
+                op_id=_REESTABLISH_BASE + version,
+            )
+        except TensorHubError:
+            pass  # state partially present (e.g. old version still held)
+
+    def _shard_publish_lost(self, srv: ReferenceServer) -> bool:
+        """Whether the recovered server is missing THIS shard's record of
+        our published version (whole-version loss or a partial group)."""
+        v = self.current_version
+        if srv.replica_version(self.model, self.replica) != v:
+            return True
+        try:
+            return srv.shard_progress(self.model, self.replica, v, self.shard_idx) == 0
+        except TensorHubError:
+            return True
+
     # -- Table 2: register / unregister -----------------------------------------
 
     def register(
@@ -224,11 +470,13 @@ class ShardHandle:
         self.store.register(named_tensors, layout=layout)
         self.client.registry.add(self.replica, self.shard_idx, self.store)
         with self._cv:
-            self._server.register(self.model, self.replica, self.shard_idx)
+            self._scall("register", self.model, self.replica, self.shard_idx)
+            self._registered = True
 
     def unregister(self) -> None:
         with self._cv:
-            self._server.unregister(self.model, self.replica, self.shard_idx)
+            self._scall("unregister", self.model, self.replica, self.shard_idx)
+            self._registered = False
         self.client.registry.remove(self.replica, self.shard_idx)
         self.store.unregister()
 
@@ -241,16 +489,18 @@ class ShardHandle:
         manifest = self.store.build_manifest(with_checksums=self.with_checksums)
         op = self._next_op()
         with self._cv:
-            self._server.publish(
+            self._scall(
+                "publish",
                 self.model, self.replica, self.shard_idx, version, manifest, op_id=op
             )
         self.current_version = version
+        self._publish_op = (version, op)
 
     def unpublish(self) -> None:
         op = self._next_op()
         with self._cv:
-            res = self._server.unpublish(
-                self.model, self.replica, self.shard_idx, op_id=op
+            res = self._scall(
+                "unpublish", self.model, self.replica, self.shard_idx, op_id=op
             )
         if res.offload_required:
             assert res.offload_version is not None
@@ -269,14 +519,15 @@ class ShardHandle:
         manifest = off_store.build_manifest(with_checksums=self.with_checksums)
         op = self._next_op()
         with self._cv:
-            self._server.publish_offload(
+            self._scall(
+                "publish_offload",
                 self.model, self.replica, self.shard_idx, version, manifest, op_id=op
             )
 
     def _wait_drained(self, timeout: Optional[float] = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
-            while not self._server.finish_unpublish(self.model, self.replica):
+            while not self._scall("finish_unpublish", self.model, self.replica):
                 if deadline is not None and time.monotonic() > deadline:
                     raise TensorHubError(f"{self.replica}: drain timed out")
                 self._cv.wait(_POLL)
@@ -288,45 +539,64 @@ class ShardHandle:
         the version exists. Returns the absolute version fetched."""
         op = self._next_op()
         deadline = None if timeout is None else time.monotonic() + timeout
-        with self._cv:
-            assignment = self._server.begin_replicate(
-                self.model, self.replica, self.shard_idx, version, op_id=op
-            )
-            while assignment is None:
-                if deadline is not None and time.monotonic() > deadline:
-                    raise VersionUnavailableError(
-                        f"{self.model} {version!r}: not published within timeout"
-                    )
-                self._cv.wait(_POLL)
-                assignment = self._server.redeem(self.model, self.replica, op_id=op)
-        self._pull(assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
-        self.current_version = assignment.version
+        try:
+            with self._cv:
+                self._inflight = ("replicate", version, op, None)
+                assignment = self._scall(
+                    "begin_replicate",
+                    self.model, self.replica, self.shard_idx, version, op_id=op
+                )
+                while assignment is None:
+                    if deadline is not None and time.monotonic() > deadline:
+                        raise VersionUnavailableError(
+                            f"{self.model} {version!r}: not published within timeout"
+                        )
+                    self._cv.wait(_POLL)
+                    assignment = self._scall("redeem", self.model, self.replica, op_id=op)
+                # pin the in-flight op to the RESOLVED version: "latest"
+                # may resolve differently on a recovered server, and a
+                # reassert must restore the version this pull is pulling
+                self._inflight = ("replicate", version, op, assignment.version)
+            self._pull(assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
+            self.current_version = assignment.version
+        finally:
+            with self._cv:
+                self._inflight = None
         self.process_events()
         return assignment.version
 
     def update(self, version: object = "latest") -> bool:
         """Atomically switch to a newer version if available (Table 2)."""
         op = self._next_op()
-        with self._cv:
-            d = self._server.begin_update(
-                self.model,
-                self.replica,
-                self.shard_idx,
-                version,
-                op_id=op,
-                offload_seeding=self.offload_seeding,
-            )
-        if d.seed_started and d.seed_version is not None:
-            self._spawn_seed_pull(d.seed_version)
-        if not d.updated:
-            self.process_events()
-            return False
-        if d.offload_required and d.offload_version is not None:
-            self._do_retention_offload(d.offload_version)
-        self._wait_drained()
-        assert d.assignment is not None
-        self._pull(d.assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
-        self.current_version = d.version
+        try:
+            with self._cv:
+                self._inflight = ("update", version, op, None)
+                d = self._scall(
+                    "begin_update",
+                    self.model,
+                    self.replica,
+                    self.shard_idx,
+                    version,
+                    op_id=op,
+                    offload_seeding=self.offload_seeding,
+                )
+                if d.updated and d.version is not None:
+                    # pin to the resolved version (see replicate())
+                    self._inflight = ("update", version, op, d.version)
+            if d.seed_started and d.seed_version is not None:
+                self._spawn_seed_pull(d.seed_version)
+            if not d.updated:
+                self.process_events()
+                return False
+            if d.offload_required and d.offload_version is not None:
+                self._do_retention_offload(d.offload_version)
+            self._wait_drained()
+            assert d.assignment is not None
+            self._pull(d.assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
+            self.current_version = d.version
+        finally:
+            with self._cv:
+                self._inflight = None
         self.process_events()
         return True
 
@@ -334,12 +604,12 @@ class ShardHandle:
 
     def list(self) -> Dict[int, set]:
         with self._cv:
-            return self._server.list_versions(self.model)
+            return self._scall("list_versions", self.model)
 
     def wait(self, predicate: Callable[[Dict[int, set]], bool], *, timeout: Optional[float] = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
-            while not predicate(self._server.list_versions(self.model)):
+            while not predicate(self._scall("list_versions", self.model)):
                 if deadline is not None and time.monotonic() > deadline:
                     raise TensorHubError("wait(): predicate not satisfied within timeout")
                 self._cv.wait(_POLL)
@@ -353,10 +623,14 @@ class ShardHandle:
         try:
             if self.current_version is not None:
                 self.unpublish()
+        except ServerUnavailableError:
+            raise  # dead controller, not a dead source/handle
         except (StaleHandleError, TensorHubError):
             pass
         with self._cv:
-            self._server.close(self.model, self.replica, self.shard_idx)
+            self._scall("close", self.model, self.replica, self.shard_idx)
+            if self in self.client._handles:
+                self.client._handles.remove(self)
         self.client.registry.remove(self.replica, self.shard_idx)
         self.client.registry.remove(offload_name(self.replica), self.shard_idx)
 
@@ -364,7 +638,8 @@ class ShardHandle:
 
     def heartbeat(self, now: Optional[float] = None) -> None:
         with self._cv:
-            self._server.heartbeat(
+            self._scall(
+                "heartbeat",
                 self.model, self.replica, self.shard_idx,
                 self.client.clock() if now is None else now,
             )
@@ -372,7 +647,7 @@ class ShardHandle:
     def process_events(self) -> None:
         """Drain server events: free released offload buffers (3.3)."""
         with self._cv:
-            events = self._server.poll_events(self.worker.worker_id)
+            events = self._scall("poll_events", self.worker.worker_id)
         for ev in events:
             if ev.kind == "offload_release" and ev.version is not None:
                 store = self._offload_stores.pop(ev.version, None)
@@ -393,11 +668,13 @@ class ShardHandle:
         idx = self.shard_idx if shard_idx is None else shard_idx
         with self._cv:
             while True:
-                m = self._server.replica_manifest(self.model, version, source, idx)
+                m = self._scall("replica_manifest", self.model, version, source, idx)
                 if m is not None:
                     return m
                 try:  # liveness: don't wait forever on an evicted source
-                    self._server.shard_progress(self.model, source, version, idx)
+                    self._scall("shard_progress", self.model, source, version, idx)
+                except ServerUnavailableError:
+                    raise  # dead controller, not a dead source/handle
                 except (StaleHandleError, TensorHubError):
                     raise _SourceLost(source)
                 self._cv.wait(_POLL)
@@ -444,10 +721,13 @@ class ShardHandle:
                 try:
                     done = max(
                         done,
-                        self._server.shard_progress(
-                            self.model, dest_name, version, self.shard_idx
+                        self._scall(
+                            "shard_progress",
+                            self.model, dest_name, version, self.shard_idx,
                         ),
                     )
+                except ServerUnavailableError:
+                    raise  # dead controller, not a dead source/handle
                 except (StaleHandleError, TensorHubError):
                     pass  # no in-progress state yet (first span)
             if dest_store.serving_prefix is not None:
@@ -482,7 +762,8 @@ class ShardHandle:
             # buffers); now that the bytes are final, upgrade it so readers
             # chaining off us get end-to-end verification back
             with self._cv:
-                self._server.put_manifest(
+                self._scall(
+                    "put_manifest",
                     self.model,
                     dest_name,
                     self.shard_idx,
@@ -491,7 +772,8 @@ class ShardHandle:
                 )
         complete_op = self._next_off_op() if twin else self._next_op()
         with self._cv:
-            self._server.complete_replicate(
+            self._scall(
+                "complete_replicate",
                 self.model, dest_name, self.shard_idx, version, op_id=complete_op
             )
 
@@ -525,10 +807,32 @@ class ShardHandle:
             )
             if outcome == "replan":
                 with self._cv:
-                    new = self._server.get_assignment(self.model, dest_name)
+                    new = self._scall("get_assignment", self.model, dest_name)
+                    if new is None:
+                        # in-progress state vanished: a controller failover
+                        # lost it and this client's reassert could not
+                        # restore it (e.g. the publisher lives in another
+                        # process that has not failed over yet). Park a
+                        # replicate for the absolute version and wait for
+                        # a source to (re)appear.
+                        self._reestablish(version, dest_name)
+                        deadline = (
+                            time.monotonic() + self.client.failover_timeout
+                        )
+                        while new is None:
+                            if time.monotonic() > deadline:
+                                raise StaleHandleError(
+                                    f"{dest_name}: in-progress state for "
+                                    f"v{version} not re-established after "
+                                    "controller failover"
+                                )
+                            self._cv.wait(_POLL)
+                            new = self._scall(
+                                "get_assignment", self.model, dest_name
+                            )
                 if new is not None and not new.resharded:
                     assignment = new
-                # a None/resharded refetch loops and retries on the same
+                # a resharded refetch loops and retries on the same
                 # plan; a dead source surfaces as _SourceLost upstream
         return done
 
@@ -573,8 +877,9 @@ class ShardHandle:
                 done += 1
                 dest_store.serving_prefix = done  # before the server learns
                 with self._cv:
-                    self._server.update_progress(
-                        self.model, dest_name, self.shard_idx, version, done
+                    self._scall(
+                        "update_progress",
+                        self.model, dest_name, self.shard_idx, version, done,
                     )
         return done
 
@@ -699,16 +1004,28 @@ class ShardHandle:
                         return
                 with self._cv:
                     try:
-                        ep = self._server.assignment_epoch(
-                            self.model, dest_name, version
+                        ep = self._scall(
+                            "assignment_epoch", self.model, dest_name, version
                         )
+                    except ServerUnavailableError:
+                        raise  # dead controller, not a dead source/handle
                     except (StaleHandleError, TensorHubError) as e:
-                        self._span_stop(shared, e)  # dest evicted mid-pull
+                        if self._inflight is not None and dest_name == self.replica:
+                            # our own in-progress state is missing — not an
+                            # eviction but a controller failover that lost
+                            # it; drain the span so the outer loop can
+                            # re-establish and resume from the prefix
+                            self._span_stop(shared, "replan")
+                        else:
+                            self._span_stop(shared, e)  # dest evicted mid-pull
                         return
                     try:
-                        avail = self._server.shard_progress(
-                            self.model, sl.source, version, self.shard_idx
+                        avail = self._scall(
+                            "shard_progress",
+                            self.model, sl.source, version, self.shard_idx,
                         )
+                    except ServerUnavailableError:
+                        raise  # dead controller, not a dead source/handle
                     except (StaleHandleError, TensorHubError):
                         raise _SourceLost(sl.source)
                 if ep != shared["epoch"]:
@@ -797,8 +1114,9 @@ class ShardHandle:
         if advanced:
             dest_store.serving_prefix = new_done  # before the server learns
             with self._cv:
-                self._server.update_progress(
-                    self.model, dest_name, self.shard_idx, version, new_done
+                self._scall(
+                    "update_progress",
+                    self.model, dest_name, self.shard_idx, version, new_done,
                 )
 
     def _pull_resharded_span(
@@ -819,7 +1137,8 @@ class ShardHandle:
         # readers chaining off us skip per-unit verification (zeros).
         local_manifest = dest_store.build_manifest(with_checksums=False)
         with self._cv:
-            self._server.put_manifest(
+            self._scall(
+                "put_manifest",
                 self.model, dest_name, self.shard_idx, version, local_manifest
             )
         src_n = assignment.source_shards or self.num_shards
@@ -860,8 +1179,9 @@ class ShardHandle:
             done += 1
             dest_store.serving_prefix = done  # before the server learns
             with self._cv:
-                self._server.update_progress(
-                    self.model, dest_name, self.shard_idx, version, done
+                self._scall(
+                    "update_progress",
+                    self.model, dest_name, self.shard_idx, version, done,
                 )
         return done
 
@@ -874,9 +1194,11 @@ class ShardHandle:
         with self._cv:
             while True:
                 try:
-                    avail = self._server.shard_progress(
-                        self.model, source, version, src_shard
+                    avail = self._scall(
+                        "shard_progress", self.model, source, version, src_shard
                     )
+                except ServerUnavailableError:
+                    raise  # dead controller, not a dead source/handle
                 except (StaleHandleError, TensorHubError):
                     raise _SourceLost(source)
                 if avail > needed:
@@ -886,9 +1208,9 @@ class ShardHandle:
     def _handle_source_failure(self, dest_name: str, dead_source: str) -> Assignment:
         """Report a dead source and wait for the server to re-route us."""
         with self._cv:
-            self._server.report_transfer_failure(self.model, dest_name, dead_source)
+            self._scall("report_transfer_failure", self.model, dest_name, dead_source)
             while True:
-                new = self._server.get_assignment(self.model, dest_name)
+                new = self._scall("get_assignment", self.model, dest_name)
                 if new is not None:
                     return new
                 self._cv.wait(_POLL)
@@ -941,7 +1263,7 @@ class ShardHandle:
         with self._cv:
             assignment = None
             while assignment is None:
-                assignment = self._server.get_assignment(self.model, twin)
+                assignment = self._scall("get_assignment", self.model, twin)
                 if assignment is None:
                     self._cv.wait(_POLL)
         self._pull(

@@ -152,6 +152,79 @@ class ShardManifest:
         return True
 
 
+# ---------------------------------------------------------------------------
+# Wire serialization (control-plane fault tolerance)
+# ---------------------------------------------------------------------------
+#
+# The replayable op log and the failover snapshots need every control-plane
+# record — op payloads (manifests, worker infos, version specs) and the
+# server's own state dataclasses — in a JSON-able form. Rather than one
+# hand-written encoder per type, a small generic codec walks registered
+# dataclasses and the containers they nest (tuples, sets, dicts with tuple
+# keys) and tags each non-JSON shape so the inverse is exact: a round trip
+# through ``to_wire``/``from_wire`` reconstructs equal objects, and two
+# equal object graphs encode to equal wire trees (the property the
+# replay-equivalence tests compare on).
+
+_WIRE_TYPES: Dict[str, type] = {}
+
+
+def register_wire(cls: type) -> type:
+    """Register a dataclass for wire encoding (usable as a decorator)."""
+    _WIRE_TYPES[cls.__name__] = cls
+    return cls
+
+
+def to_wire(obj):
+    """Encode ``obj`` into a JSON-able tree of dicts/lists/scalars."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    name = type(obj).__name__
+    if dataclasses.is_dataclass(obj) and name in _WIRE_TYPES:
+        return {
+            "__dc__": name,
+            "f": {
+                f.name: to_wire(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)
+            },
+        }
+    if isinstance(obj, tuple):
+        return {"__tuple__": [to_wire(x) for x in obj]}
+    if isinstance(obj, list):
+        return [to_wire(x) for x in obj]
+    if isinstance(obj, (set, frozenset)):
+        # canonical order so equal sets encode identically
+        return {"__set__": sorted((to_wire(x) for x in obj), key=repr)}
+    if isinstance(obj, dict):
+        # pair list: keys may be tuples (layout families, txn keys)
+        return {"__map__": [[to_wire(k), to_wire(v)] for k, v in obj.items()]}
+    raise TypeError(f"not wire-serializable: {name}")
+
+
+def from_wire(w):
+    """Inverse of :func:`to_wire`."""
+    if w is None or isinstance(w, (bool, int, float, str)):
+        return w
+    if isinstance(w, list):
+        return [from_wire(x) for x in w]
+    if "__dc__" in w:
+        cls = _WIRE_TYPES.get(w["__dc__"])
+        if cls is None:
+            raise TypeError(f"unknown wire type {w['__dc__']!r}")
+        return cls(**{k: from_wire(v) for k, v in w["f"].items()})
+    if "__tuple__" in w:
+        return tuple(from_wire(x) for x in w["__tuple__"])
+    if "__set__" in w:
+        return {from_wire(x) for x in w["__set__"]}
+    if "__map__" in w:
+        out = {}
+        for k, v in w["__map__"]:
+            key = from_wire(k)
+            out[tuple(key) if isinstance(key, list) else key] = from_wire(v)
+        return out
+    raise TypeError(f"malformed wire value: {w!r}")
+
+
 def dtype_from_str(name: str):
     """numpy dtype from its string name, including ml_dtypes extras
     (bfloat16 etc.). Shared by the client and the resharding layer."""
@@ -263,6 +336,11 @@ class SourceSlice:
         return self.ceiling < 0 or self.stop_unit <= self.ceiling
 
 
+for _cls in (TensorMeta, TransferUnit, ShardManifest, WorkerInfo, SourceSlice):
+    register_wire(_cls)
+
+
+@register_wire
 @dataclasses.dataclass(frozen=True)
 class Assignment:
     """Where a shard should pull its data from.

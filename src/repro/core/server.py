@@ -33,12 +33,14 @@ from repro.core import versions as version_lib
 from repro.core.errors import (
     ConsistencyError,
     MutabilityViolationError,
+    ServerUnavailableError,
     ShardLayoutError,
     StaleHandleError,
     TensorHubError,
     VersionUnavailableError,
 )
 from repro.core.meta import Assignment, ShardManifest, SourceSlice, WorkerInfo
+from repro.core.oplog import OpLog
 
 logger = logging.getLogger(__name__)
 
@@ -136,6 +138,15 @@ class _Txn:
     on_last: Optional[Callable[[], None]] = None
 
 
+#: retired group ops remembered per replica for idempotent re-delivery: a
+#: client retrying after a controller failover (at-most-once ambiguity —
+#: the crash may have landed between execute and reply) re-sends its most
+#: recent ops; the memory hands back the cached result instead of
+#: re-running them. Shards issue ops in lockstep program order, so a
+#: retry is always among the last few op ids.
+DONE_TXN_MEMORY = 8
+
+
 @dataclasses.dataclass
 class _PendingReplicate:
     """A replicate() group parked until its version spec resolves."""
@@ -174,6 +185,9 @@ class ModelState:
         dataclasses.field(default_factory=dict)
     )
     txns: Dict[Tuple[str, int], _Txn] = dataclasses.field(default_factory=dict)
+    #: retired group ops, (replica, op_id) -> completed txn (result cached,
+    #: on_last dropped); bounded to DONE_TXN_MEMORY per replica
+    done_txns: Dict[Tuple[str, int], _Txn] = dataclasses.field(default_factory=dict)
     pending: List[_PendingReplicate] = dataclasses.field(default_factory=list)
     #: per-version source generation: bumped whenever a replica finishes
     #: holding the version (publish of the last shard / completed
@@ -248,6 +262,7 @@ class ReferenceServer:
         work_stealing: bool = True,
         chunk_hint: Optional[float] = None,
         swarm: bool = True,
+        log: Optional[OpLog] = None,
     ) -> None:
         self._models: Dict[str, ModelState] = {}
         self._heartbeat_timeout = heartbeat_timeout
@@ -289,6 +304,67 @@ class ReferenceServer:
             "swarm_assignments": 0,
             "swarm_grows": 0,
         }
+        #: fault tolerance: replayable op log (None = PR 3 behavior,
+        #: bit-for-bit — nothing is recorded, nothing can be recovered)
+        self._dead = False
+        self._log: Optional[OpLog] = None
+        if log is not None:
+            log.set_config(self.config())
+            self._log = log
+
+    # -- fault tolerance: op logging, crash, recovery hooks -------------------
+
+    def config(self) -> Dict[str, Any]:
+        """The construction knobs (resolved), as recorded in the op log —
+        recovery rebuilds the server from exactly these."""
+        return {
+            "heartbeat_timeout": self._heartbeat_timeout,
+            "pipeline_replication": self._pipeline,
+            "smart_skipping": self._smart_skipping,
+            "scheduler": self._scheduler,
+            "max_sources": self._max_sources,
+            "work_stealing": self._work_stealing,
+            "chunk_hint": self._chunk_hint,
+            "swarm": self._swarm,
+        }
+
+    @property
+    def log(self) -> Optional[OpLog]:
+        return self._log
+
+    def attach_log(self, log: Optional[OpLog]) -> None:
+        """Attach (or detach) the op log without writing a config header —
+        used by recovery after replaying, so subsequent ops keep
+        appending where the crashed server left off."""
+        self._log = log
+
+    def crash(self) -> None:
+        """Kill the controller: every subsequent call raises
+        :class:`ServerUnavailableError` until clients fail over to a
+        recovered server (``repro.core.failover.recover``). In-flight
+        calls that already passed the liveness check complete against the
+        dead server's (discarded) state — the at-most-once ambiguity the
+        idempotent op layer absorbs on retry."""
+        self._dead = True
+
+    @property
+    def is_crashed(self) -> bool:
+        return self._dead
+
+    def _check_alive(self) -> None:
+        if self._dead:
+            raise ServerUnavailableError(
+                "reference server is down; fail over to the recovered server"
+            )
+
+    def _record(self, op: str, *args: Any) -> None:
+        """WAL-style intent record: appended before the mutation runs, so
+        a mid-op crash replays the op to completion (never a torn state).
+        Args are positional, in ``oplog.OP_SCHEMAS[op]`` order (= the
+        method signature) — the hot path never builds a kwargs dict."""
+        log = self._log
+        if log is not None:
+            log.append(op, args)
 
     # -- notification plumbing ------------------------------------------------
 
@@ -309,6 +385,16 @@ class ReferenceServer:
         self._events.setdefault(worker_id, []).append(ev)
 
     def poll_events(self, worker_id: str) -> List[Event]:
+        self._check_alive()
+        # logged only when the pop actually mutates — clients poll this
+        # after every op, and recording empty polls would bloat the log
+        # with no-ops (skipping them is trivially replay-equivalent).
+        # Replay then drains the same queues. A recovered-from-older-log
+        # server may re-deliver events a client already saw; client-side
+        # handling is idempotent (regression-tested), so re-delivery is
+        # a no-op, not a bug.
+        if worker_id in self._events:
+            self._record("poll_events", worker_id)
         return self._events.pop(worker_id, [])
 
     # -- lifecycle ------------------------------------------------------------
@@ -323,6 +409,8 @@ class ReferenceServer:
         worker: WorkerInfo,
         retain: Optional[version_lib.VersionSpec] = None,
     ) -> None:
+        self._check_alive()
+        self._record("open", model, replica, num_shards, shard_idx, worker, retain)
         st = self._models.setdefault(model, ModelState(name=model))
         if st.num_shards is None:
             # canonical layout = the first opener's; replicas with other
@@ -359,11 +447,15 @@ class ReferenceServer:
         self._bump()
 
     def register(self, model: str, replica: str, shard_idx: int) -> None:
+        self._check_alive()
+        self._record("register", model, replica, shard_idx)
         info = self._replica(model, replica)
         info.registered.add(shard_idx)
         self._bump()
 
     def unregister(self, model: str, replica: str, shard_idx: int) -> None:
+        self._check_alive()
+        self._record("unregister", model, replica, shard_idx)
         info = self._replica(model, replica)
         if info.current_version is not None:
             raise MutabilityViolationError(
@@ -374,6 +466,8 @@ class ReferenceServer:
         self._bump()
 
     def close(self, model: str, replica: str, shard_idx: int) -> None:
+        self._check_alive()
+        self._record("close", model, replica, shard_idx)
         st = self._model(model)
         info = st.replicas.get(replica)
         if info is None:
@@ -386,6 +480,11 @@ class ReferenceServer:
     # -- heartbeats / failure detection (4.5) ----------------------------------
 
     def heartbeat(self, model: str, replica: str, shard_idx: int, now: float) -> None:
+        self._check_alive()
+        # logged (time enters as an explicit argument, so replay is
+        # deterministic): unlogged heartbeats would make replayed tick()
+        # evict different replicas than the live run did
+        self._record("heartbeat", model, replica, shard_idx, now)
         st = self._models.get(model)
         if st is None:
             return
@@ -396,6 +495,8 @@ class ReferenceServer:
 
     def tick(self, now: float) -> List[str]:
         """Expire heartbeats; returns names of replicas evicted this tick."""
+        self._check_alive()
+        self._record("tick", now)
         if self._heartbeat_timeout is None:
             return []
         evicted = []
@@ -416,6 +517,8 @@ class ReferenceServer:
 
     def fail_replica(self, model: str, replica: str, reason: str = "injected") -> None:
         """Administrative/forced eviction (spot preemption, tests)."""
+        self._check_alive()
+        self._record("fail_replica", model, replica, reason)
         st = self._model(model)
         if replica in st.replicas:
             self._fail_replica(st, replica, reason=reason)
@@ -426,6 +529,8 @@ class ReferenceServer:
     ) -> None:
         """A reader detected its source died mid-transfer (4.5): mark the
         source failed and reassign; the reader resumes from its progress."""
+        self._check_alive()
+        self._record("report_transfer_failure", model, dest_replica, source_replica)
         st = self._model(model)
         if source_replica in st.replicas and not st.replicas[source_replica].failed:
             self._fail_replica(st, source_replica, reason="reported by reader")
@@ -436,6 +541,7 @@ class ReferenceServer:
         """Current source assignment for an in-progress replica (may have
         been re-routed after a failure). Works for GPU replicas and offload
         seeding twins alike."""
+        self._check_alive()
         st = self._model(model)
         info = st.replicas.get(replica)
         if info is None or info.failed:
@@ -458,6 +564,7 @@ class ReferenceServer:
         this against their Assignment's epoch between unit flows: a bump
         means the plan was re-partitioned (source death, work stealing) and
         the reader should re-fetch its assignment."""
+        self._check_alive()
         st = self._model(model)
         rv = st.versions.get(version, {}).get(replica)
         if rv is None:
@@ -476,6 +583,8 @@ class ReferenceServer:
         *,
         op_id: int,
     ) -> PublishResult:
+        self._check_alive()
+        self._record("publish", model, replica, shard_idx, version, manifest, op_id)
         st = self._model(model)
         info = self._replica(model, replica)
         if shard_idx not in info.registered:
@@ -499,13 +608,20 @@ class ReferenceServer:
         res = self._group_op(
             st, info, shard_idx, op_id, "publish", repr(version), on_first
         )
-        # per-shard manifest registration (data-plane visibility)
-        self._set_manifest(st, version, replica, info.num_shards, shard_idx, manifest)
-        rv = st.versions[version][replica]
-        rv.progress[shard_idx] = manifest.num_units
-        if len(rv.progress) >= info.num_shards:
-            # fully published: the multi-source candidate pool grew
-            st.source_gen[version] = st.source_gen.get(version, 0) + 1
+        # per-shard manifest registration (data-plane visibility); written
+        # to be idempotent — a retried publish (controller failover
+        # at-most-once ambiguity) must not bump the source generation or
+        # resurrect a since-dropped version
+        rv = st.versions.get(version, {}).get(replica)
+        if rv is not None:
+            self._set_manifest(
+                st, version, replica, info.num_shards, shard_idx, manifest
+            )
+            was_full = len(rv.progress) >= info.num_shards
+            rv.progress[shard_idx] = manifest.num_units
+            if not was_full and len(rv.progress) >= info.num_shards:
+                # fully published: the multi-source candidate pool grew
+                st.source_gen[version] = st.source_gen.get(version, 0) + 1
         self._service_pending(st)
         self._bump()
         return res
@@ -522,6 +638,10 @@ class ReferenceServer:
     ) -> PublishResult:
         """Publish the CPU offload copy created by the retention protocol or
         by offload seeding (3.3, 4.3.4)."""
+        self._check_alive()
+        self._record(
+            "publish_offload", model, replica, shard_idx, version, manifest, op_id
+        )
         st = self._model(model)
         info = self._replica(model, replica)
         off_name = offload_name(replica)
@@ -548,8 +668,12 @@ class ReferenceServer:
         res = self._group_op(
             st, info, shard_idx, op_id, "publish_offload", repr(version), on_first
         )
-        self._set_manifest(st, version, off_name, info.num_shards, shard_idx, manifest)
-        st.versions[version][off_name].progress[shard_idx] = manifest.num_units
+        off_rv = st.versions.get(version, {}).get(off_name)
+        if off_rv is not None:  # tolerate re-delivery after the copy dropped
+            self._set_manifest(
+                st, version, off_name, info.num_shards, shard_idx, manifest
+            )
+            off_rv.progress[shard_idx] = manifest.num_units
         if info.draining.get(version):
             info.draining[version] = False  # retention satisfied by the offload copy
         self._service_pending(st)
@@ -559,6 +683,8 @@ class ReferenceServer:
     def unpublish(
         self, model: str, replica: str, shard_idx: int, *, op_id: int
     ) -> UnpublishResult:
+        self._check_alive()
+        self._record("unpublish", model, replica, shard_idx, op_id)
         st = self._model(model)
         info = self._replica(model, replica)
 
@@ -576,8 +702,15 @@ class ReferenceServer:
         version of this replica has (a) zero in-flight readers and (b) its
         required offload published. Only then may the client reuse the
         weight buffers (3.2 mutability contract)."""
+        self._check_alive()
         st = self._model(model)
         info = self._replica(model, replica)
+        # logged only when a drain is actually outstanding: this is a
+        # 20ms polling call (clients spin on it while readers drain),
+        # and with nothing draining it provably mutates nothing — the
+        # log records state changes, not poll frequency
+        if info.draining:
+            self._record("finish_unpublish", model, replica)
         for v in list(info.draining.keys()):
             offload_pending = info.draining[v]
             rv = st.versions.get(v, {}).get(replica)
@@ -607,6 +740,8 @@ class ReferenceServer:
         """Start (or park) a blocking replicate(). Returns the group's
         Assignment, or None if the version does not exist yet — in which
         case the group is parked and must poll :meth:`redeem`."""
+        self._check_alive()
+        self._record("begin_replicate", model, replica, shard_idx, spec, op_id)
         st = self._model(model)
         info = self._replica(model, replica)
 
@@ -631,6 +766,7 @@ class ReferenceServer:
 
     def redeem(self, model: str, replica: str, *, op_id: int) -> Optional[Assignment]:
         """Check whether a parked replicate() has been assigned."""
+        self._check_alive()
         st = self._model(model)
         info = st.replicas.get(replica)
         if info is None or info.failed:
@@ -663,6 +799,10 @@ class ReferenceServer:
         offload_seeding: bool = False,
     ) -> UpdateDecision:
         """Atomic check-and-transition to a newer version (Table 2 update)."""
+        self._check_alive()
+        self._record(
+            "begin_update", model, replica, shard_idx, spec, op_id, offload_seeding
+        )
         st = self._model(model)
         info = self._replica(model, replica)
 
@@ -725,6 +865,7 @@ class ReferenceServer:
     def source_progress(self, model: str, source_replica: str, version: int) -> int:
         """Min over shards of the source's progress counter. Readers poll
         this (in the real system it is a one-sided read on the source)."""
+        self._check_alive()
         st = self._model(model)
         vmap = st.versions.get(version, {})
         rv = vmap.get(source_replica)
@@ -735,6 +876,7 @@ class ReferenceServer:
         return min(rv.progress.values())
 
     def shard_progress(self, model: str, source_replica: str, version: int, shard_idx: int) -> int:
+        self._check_alive()
         st = self._model(model)
         rv = st.versions.get(version, {}).get(source_replica)
         if rv is None:
@@ -744,6 +886,8 @@ class ReferenceServer:
     def update_progress(
         self, model: str, replica: str, shard_idx: int, version: int, progress: int
     ) -> None:
+        self._check_alive()
+        self._record("update_progress", model, replica, shard_idx, version, progress)
         st = self._model(model)
         rv = st.versions.get(version, {}).get(replica)
         if rv is None:
@@ -777,17 +921,47 @@ class ReferenceServer:
     def complete_replicate(
         self, model: str, replica: str, shard_idx: int, version: int, *, op_id: int
     ) -> None:
+        self._check_alive()
+        self._record("complete_replicate", model, replica, shard_idx, version, op_id)
         st = self._model(model)
         info = self._replica(model, replica)
         rv = st.versions.get(version, {}).get(replica)
         if rv is None:
+            if (info.name, op_id) in st.done_txns:
+                # the whole group already completed and the version has
+                # since been dropped: a re-delivered complete is a no-op
+                self._group_op(
+                    st, info, shard_idx, op_id, "complete", repr(version),
+                    lambda: None,
+                )
+                return
             raise StaleHandleError(f"{replica} lost its in-progress state for v{version}")
         rv.completed_shards.add(shard_idx)
+        self._group_op(
+            st,
+            info,
+            shard_idx,
+            op_id,
+            "complete",
+            repr(version),
+            lambda: None,
+            self._complete_on_last(st, version, replica),
+        )
+        self._bump()
 
-        def on_first() -> None:
-            return None
+    def _complete_on_last(
+        self, st: ModelState, version: int, replica: str
+    ) -> Callable[[], None]:
+        """The group-completion action of complete_replicate, as a factory
+        so snapshot restore can rebuild the callback for an open txn (the
+        closure binds only replayable state, never the live objects).
+        Idempotent: a re-run against an already-published replica (dup
+        delivery after failover) changes nothing."""
 
         def on_last() -> None:
+            rv = st.versions.get(version, {}).get(replica)
+            if rv is None or rv.status != IN_PROGRESS:
+                return  # already completed (or dropped): nothing to do
             rv.status = PUBLISHED
             rv.seeding = False
             self._release_sources(st.versions.get(version, {}), rv)
@@ -797,14 +971,12 @@ class ReferenceServer:
             self._maybe_release_offloads(st, version)
             self._service_pending(st)
 
-        self._group_op(
-            st, info, shard_idx, op_id, "complete", repr(version), on_first, on_last
-        )
-        self._bump()
+        return on_last
 
     # -- queries (Table 2: list / wait) ----------------------------------------
 
     def list_versions(self, model: str) -> Dict[int, Set[str]]:
+        self._check_alive()
         st = self._models.get(model)
         if st is None:
             return {}
@@ -820,12 +992,28 @@ class ReferenceServer:
         return out
 
     def latest(self, model: str) -> Optional[int]:
+        self._check_alive()
         st = self._models.get(model)
         return None if st is None else st.latest
 
     def num_shards(self, model: str) -> Optional[int]:
+        self._check_alive()
         st = self._models.get(model)
         return None if st is None else st.num_shards
+
+    def replica_version(self, model: str, replica: str) -> Optional[int]:
+        """The version a replica currently holds (published or in
+        progress), or None for an unknown/evicted/idle replica. Clients
+        re-asserting state after a controller failover compare this
+        against their local view to decide what to re-issue."""
+        self._check_alive()
+        st = self._models.get(model)
+        if st is None:
+            return None
+        info = st.replicas.get(replica)
+        if info is None or info.failed:
+            return None
+        return info.current_version
 
     def manifest(
         self,
@@ -837,6 +1025,7 @@ class ReferenceServer:
     ) -> Optional[ShardManifest]:
         """Manifest of one shard of one layout family; ``num_shards``
         defaults to the model's canonical (first-opened) layout."""
+        self._check_alive()
         st = self._model(model)
         layout = st.num_shards if num_shards is None else num_shards
         return st.manifests.get(version, {}).get((layout, shard_idx))
@@ -855,6 +1044,8 @@ class ReferenceServer:
         planner's inputs are server-visible and (b) downstream readers
         with the *same* non-canonical layout can pipeline plain unit
         pulls off this replica's progress counter."""
+        self._check_alive()
+        self._record("put_manifest", model, replica, shard_idx, version, manifest)
         st = self._model(model)
         info = self._replica(model, replica)
         self._set_manifest(st, version, replica, info.num_shards, shard_idx, manifest)
@@ -868,7 +1059,15 @@ class ReferenceServer:
         chains never diverge from their family). Readers resolve their
         assigned source through this — not through the count family — so
         two same-count layouts on one version cannot alias."""
-        st = self._model(model)
+        self._check_alive()
+        return self._replica_manifest(self._model(model), version, replica, shard_idx)
+
+    def _replica_manifest(
+        self, st: ModelState, version: int, replica: str, shard_idx: int
+    ) -> Optional[ShardManifest]:
+        """Unguarded internal lookup: scheduler internals must not trip
+        the public liveness check — a crashed server's in-flight op runs
+        to completion against its (discarded) state."""
         m = st.replica_manifests.get(version, {}).get((replica, shard_idx))
         if m is not None:
             return m
@@ -877,6 +1076,7 @@ class ReferenceServer:
         return st.manifests.get(version, {}).get((layout, shard_idx))
 
     def replica_datacenter(self, model: str, replica: str) -> str:
+        self._check_alive()
         return self._replica(model, replica).datacenter
 
     # ------------------------------------------------------------------
@@ -911,8 +1111,25 @@ class ReferenceServer:
     ) -> Any:
         """Transactional group op (4.4). First arrival executes; all shards
         consume the same cached result; optional on_last runs when the whole
-        group arrived."""
+        group arrived.
+
+        Re-delivery is a no-op: a shard retrying an op after a controller
+        failover (the crash may have landed between execute and reply)
+        gets the cached result back — from the open txn if the group is
+        still gathering, or from the bounded done-txn memory after it
+        retired. Only a *divergent* op (same id, different kind or args)
+        still raises: that is an SPMD framework bug, not a retry."""
         key = (info.name, op_id)
+        done = st.done_txns.get(key)
+        if done is not None:
+            if done.op != op or done.args_repr != args_repr:
+                raise ConsistencyError(
+                    f"{info.name} op#{op_id}: shard{shard_idx} issued "
+                    f"{op}({args_repr}) but group ran {done.op}({done.args_repr})"
+                )
+            if isinstance(done.result, TensorHubError):
+                raise done.result
+            return done.result
         txn = st.txns.get(key)
         if txn is None:
             result = on_first()
@@ -926,19 +1143,34 @@ class ReferenceServer:
                     f"{info.name} op#{op_id}: shard{shard_idx} issued "
                     f"{op}({args_repr}) but group ran {txn.op}({txn.args_repr})"
                 )
-        if shard_idx in txn.arrived:
-            raise ConsistencyError(
-                f"{info.name} op#{op_id}: shard{shard_idx} arrived twice"
-            )
-        txn.arrived.add(shard_idx)
-        if len(txn.arrived) == info.num_shards:
-            if txn.on_last is not None:
-                txn.on_last()
-            # keep completed replicate txns briefly? no: drop.
-            del st.txns[key]
+        if shard_idx not in txn.arrived:
+            txn.arrived.add(shard_idx)
+            if len(txn.arrived) == info.num_shards:
+                if txn.on_last is not None:
+                    txn.on_last()
+                del st.txns[key]
+                self._retire_txn(st, info.name, key, txn)
         if isinstance(txn.result, TensorHubError):
             raise txn.result
         return txn.result
+
+    def _retire_txn(
+        self, st: ModelState, replica: str, key: Tuple[str, int], txn: _Txn
+    ) -> None:
+        """Remember a completed group op for idempotent re-delivery,
+        pruned to the DONE_TXN_MEMORY most recent op ids per replica
+        (shards issue ops in lockstep, so retries are always recent)."""
+        st.done_txns[key] = _Txn(
+            op=txn.op, args_repr=txn.args_repr, result=txn.result,
+            arrived=set(txn.arrived),
+        )
+        # prune by insertion recency (dicts are insertion-ordered), NOT by
+        # op-id magnitude: reassert ops use high-base ids (2M+/3M+) that
+        # would otherwise squat the cache forever and evict genuinely
+        # recent ops
+        mine = [k for k in st.done_txns if k[0] == replica]
+        for k in mine[: max(0, len(mine) - DONE_TXN_MEMORY)]:
+            del st.done_txns[k]
 
     # -- publish/unpublish helpers ---------------------------------------------
 
@@ -1346,7 +1578,7 @@ class ReferenceServer:
             return out[:1]
         kept = []
         for rv in out:
-            m = self.replica_manifest(st.name, version, rv.replica, 0)
+            m = self._replica_manifest(st, version, rv.replica, 0)
             if m is not None and m.same_layout(ref):
                 kept.append(rv)
         return kept
@@ -1398,6 +1630,7 @@ class ReferenceServer:
         of its prefix are servable right now (``min`` over shards;
         published replicas report their full unit count). Diagnostic /
         test surface for the swarm planner's inputs."""
+        self._check_alive()
         st = self._model(model)
         out: Dict[str, int] = {}
         for rv in st.versions.get(version, {}).values():
@@ -1406,7 +1639,7 @@ class ReferenceServer:
                 continue
             if rv.status not in (PUBLISHED, IN_PROGRESS):
                 continue
-            m = self.replica_manifest(model, version, rv.replica, 0)
+            m = self._replica_manifest(st, version, rv.replica, 0)
             full = m.num_units if m is not None else 0
             c = self._source_ceiling(st, rv)
             out[rv.replica] = full if c < 0 else min(c, full) if full else c
@@ -1475,7 +1708,7 @@ class ReferenceServer:
             return out[:1]
         kept = []
         for rv, ceiling in out:
-            m = self.replica_manifest(st.name, version, rv.replica, 0)
+            m = self._replica_manifest(st, version, rv.replica, 0)
             if m is not None and m.same_layout(ref):
                 kept.append((rv, ceiling))
         return kept
@@ -1928,6 +2161,8 @@ class ReferenceServer:
         st.pending = [p for p in st.pending if p.replica != replica]
         for key in [k for k in st.txns if k[0] == replica]:
             del st.txns[key]
+        for key in [k for k in st.done_txns if k[0] == replica]:
+            del st.done_txns[key]
         for w in info.workers.values():
             self._emit(
                 w.worker_id,
@@ -1974,3 +2209,18 @@ class ReferenceServer:
 
 def offload_name(replica: str) -> str:
     return f"{replica}@offload"
+
+
+# wire registration (op-log payloads + failover snapshots); _Txn is
+# handled by repro.core.failover directly — its on_last callback cannot
+# travel and is rebuilt from the op kind on restore
+for _cls in (
+    PublishResult,
+    UnpublishResult,
+    UpdateDecision,
+    Event,
+    ReplicaVersionState,
+    ReplicaInfo,
+    _PendingReplicate,
+):
+    meta_defaults.register_wire(_cls)

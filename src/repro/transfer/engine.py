@@ -356,7 +356,10 @@ class LocalTransport:
         time and would happily cover garbage)."""
         src = self.registry.get(src_replica, shard_idx)
         full = src.read_unit(unit)
-        if offset < 0 or offset + nbytes > full.nbytes:
+        # a zero-length tail chunk (offset == nbytes == end of unit) is a
+        # valid no-op read; negative lengths and any byte past the unit
+        # end are not
+        if nbytes < 0 or offset < 0 or offset + nbytes > full.nbytes:
             raise TensorHubError(
                 f"unit {unit.name}: chunk [{offset}, {offset + nbytes}) "
                 f"exceeds unit of {full.nbytes}B"

@@ -19,8 +19,10 @@ import itertools
 import math
 from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
+from repro.core import failover as failover_lib
 from repro.core.errors import StaleHandleError, TensorHubError
 from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.oplog import OpLog
 from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
 from repro.transfer.engine import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW
 from repro.transfer.hardware import CLUSTER, ClusterHW
@@ -173,6 +175,7 @@ class SimCluster:
         scheduler: str = "least_loaded",
         work_stealing: bool = True,
         swarm: bool = True,
+        log: Optional[OpLog] = None,
     ) -> None:
         #: cross-DC wire-byte multiplier: int8 quantization (kernels/quant)
         #: moves q(int8) + per-1024 f32 scales = x0.2539 of bf16 bytes at
@@ -211,7 +214,11 @@ class SimCluster:
             chunk_hint=(
                 self.chunk_bytes if self.chunk_bytes is not None else math.inf
             ),
+            # fault tolerance: replayable op log; crash_and_recover()
+            # rebuilds a bit-identical controller from it mid-run
+            log=log,
         )
+        self.log = log
         self.server.add_watcher(self.env.state_notify)
         self._workers: Dict[Tuple[str, int], SimWorker] = {}
         self._node_seq = itertools.count()
@@ -286,6 +293,32 @@ class SimCluster:
         return rep
 
     # -- failure injection ------------------------------------------------------------
+
+    def crash_and_recover(self) -> "ReferenceServer":
+        """Controller failure: kill the server and swap in one recovered
+        from the op log (+ compaction snapshot).
+
+        The swap is atomic in virtual time — the crash-sweep harness
+        triggers it from the op log's ``on_append`` hook, i.e. at an
+        exact op boundary — so sim processes never observe a dead
+        controller: their next call lands on the recovered server, which
+        is bit-identical to the crashed one up to the committed log.
+        (An op in flight at the crash instant finishes against the dead
+        server's discarded state; its record is already in the log, so
+        the recovered server has applied the same mutation.) The threaded
+        client exercises the asynchronous wait-for-failover path instead;
+        see ``TensorHubClient.failover``."""
+        if self.log is None:
+            raise TensorHubError(
+                "SimCluster built without an op log cannot recover its "
+                "controller; pass log=OpLog(...)"
+            )
+        self.server.crash()
+        new = failover_lib.recover(self.log)
+        self.server = new
+        new.add_watcher(self.env.state_notify)
+        self.env.state_notify()
+        return new
 
     def kill_replica(self, name: str) -> None:
         """Spot preemption / node failure: immediate, no grace (5.3)."""

@@ -65,12 +65,20 @@ class TestGroupTransactions:
         with pytest.raises(ConsistencyError):
             s.begin_replicate("m", "r", 1, 0, op_id=0)  # different args
 
-    def test_double_arrival_raises(self):
+    def test_double_arrival_is_idempotent(self):
+        """Re-delivery of the same op by the same shard (a client retry
+        after a controller failover) returns the cached result and
+        mutates nothing; only *divergent* ops on one op id raise."""
         s = ReferenceServer()
         open_replica(s, "pub")
+        r1 = s.publish("m", "pub", 0, 1, manifest(), op_id=0)
+        r2 = s.publish("m", "pub", 0, 1, manifest(), op_id=0)  # re-delivered
+        assert r1 == r2
+        assert s.stats["publishes"] == 1
+        # the duplicate did not count as shard1's arrival: the group is
+        # still waiting, so a conflicting op id reuse still trips
         with pytest.raises(ConsistencyError):
-            s.publish("m", "pub", 0, 1, manifest(), op_id=0)
-            s.publish("m", "pub", 0, 1, manifest(), op_id=0)
+            s.begin_replicate("m", "pub", 1, "latest", op_id=0)
 
     def test_update_decision_is_group_wide(self):
         s = ReferenceServer()
