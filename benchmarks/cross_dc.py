@@ -12,7 +12,12 @@ a background CPU buffer, removing even the seeder's stall.
 
 Validates: per-GPU latency distribution (single 2.5 s tail, 0.45 s body),
 ~19x stall reduction vs UCX-over-TCP (with offload seeding, the abstract's
-number), cross-DC traffic = 1 copy vs n copies.
+number), cross-DC traffic = 1 copy vs n copies, and the wire-codec rows
+(beyond-paper): int8-quantized WAN transfer cuts wire bytes ~3.9x vs f32
+(~2.0x vs bf16) at < 1% max relative weight error, measured both in the
+fluid sim (codec-derived byte accounting) and on the threaded data plane
+with real bytes (``codec_parity``); ``codec="raw"`` reproduces the
+pre-codec byte counts bit-for-bit.
 """
 
 from __future__ import annotations
@@ -32,10 +37,10 @@ def tensorhub_cross_dc(
     *,
     offload_seeding: bool,
     poll_period: float = 0.2,
-    tcp_compression: float = 1.0,
+    wan_codec: str = "raw",
     swarm: bool = True,
 ) -> Dict[str, object]:
-    cl = SimCluster(tcp_compression=tcp_compression, swarm=swarm)
+    cl = SimCluster(wan_codec=wan_codec, swarm=swarm)
     units = W.unit_bytes(64)
     trainers = [
         cl.add_replica("m", f"tr{i}", W.num_shards, datacenter="dc0", unit_bytes=units)
@@ -111,8 +116,9 @@ def swarm_cold_fanin(*, swarm: bool) -> Dict[str, object]:
     RDMA — same-DC in-progress peers outrank cross-DC published sources,
     so the cross-DC link carries exactly ONE copy regardless of fan-out.
     ``swarm=False`` runs the PR 2 scheduler (pipeline chains off the
-    seeder) for comparison; the WAN invariant must hold in both."""
-    cl = SimCluster(swarm=swarm)
+    seeder) for comparison; the WAN invariant must hold in both (measured
+    with ``wan_codec="raw"`` so cross-DC bytes equal weight bytes)."""
+    cl = SimCluster(swarm=swarm, wan_codec="raw")
     units = W.unit_bytes(64)
     trainers = [
         cl.add_replica("m", f"tr{i}", W.num_shards, datacenter="dc0", unit_bytes=units)
@@ -162,25 +168,78 @@ def ucx_cross_dc() -> Dict[str, object]:
     }
 
 
-#: int8 + per-1024-element f32 scales vs bf16: (1 + 4/1024) / 2
-INT8_RATIO = 0.502
+def codec_parity() -> Dict[str, object]:
+    """Threaded plane, REAL bytes: raw-vs-int8 wire byte counts for one
+    cross-DC shard pull on bf16 and f32 weight sets, plus the decoded
+    weight error. ``codec="raw"`` must reproduce today's transfer byte
+    counts bit-for-bit (payload bytes == wire bytes == array bytes); the
+    int8 wire must cut f32 bytes ~3.9x (bf16 ~2.0x) at < 1% max relative
+    error, with end-to-end checksums verified over the decoded bytes
+    (``verify_checksums`` stays on for every pull below)."""
+    import ml_dtypes
+    import numpy as np
+
+    from repro.core import ReferenceServer, TensorHubClient
+
+    row: Dict[str, object] = {"system": "codec-parity (threaded)"}
+    for tag, np_dtype in (("f32", np.float32), ("bf16", ml_dtypes.bfloat16)):
+        rng = np.random.RandomState(0)
+        tensors = {
+            f"w{i}": (rng.randn((1 << 20) + 999) * 2).astype(np_dtype)
+            for i in range(2)
+        }
+        total = sum(v.nbytes for v in tensors.values())
+        moved: Dict[str, int] = {}
+        max_rel = 0.0
+        raw_exact = False
+        for codec in ("raw", "int8"):
+            hub = TensorHubClient(ReferenceServer(wan_codec=codec))
+            assert hub.transport.verify_checksums
+            pub = hub.open("m", "pub", 1, 0, datacenter="dc0")
+            pub.register(tensors)
+            pub.publish(0)
+            r = hub.open("m", "r", 1, 0, datacenter="dc1")
+            r.register({k: np.zeros_like(v) for k, v in tensors.items()})
+            r.replicate(0)
+            moved[codec] = hub.transport.bytes_moved
+            if codec == "raw":
+                raw_exact = moved["raw"] == total and all(
+                    np.array_equal(r.store.get(k).view(np.uint8), v.view(np.uint8))
+                    for k, v in tensors.items()
+                )
+            else:
+                for k, v in tensors.items():
+                    got = np.asarray(r.store.get(k), np.float32)
+                    want = np.asarray(v, np.float32)
+                    denom = max(float(np.max(np.abs(want))), 1e-12)
+                    max_rel = max(
+                        max_rel, float(np.max(np.abs(got - want))) / denom
+                    )
+        row[f"{tag}_raw_mb"] = round(moved["raw"] / 1e6, 3)
+        row[f"{tag}_int8_mb"] = round(moved["int8"] / 1e6, 3)
+        row[f"{tag}_reduction_x"] = round(moved["raw"] / moved["int8"], 2)
+        row[f"{tag}_max_rel_err"] = round(max_rel, 5)
+        row[f"{tag}_raw_bit_exact"] = raw_exact
+    return row
 
 
 def run(quick: bool = False) -> List[Dict]:
-    """``quick`` drops the offload-seeding and int8 variants (the two
-    extra warm-transition sims) — the smoke run keeps the headline
-    seeding row, the UCX baseline and both cold fan-in WAN checks."""
+    """``quick`` drops the offload-seeding variant (one extra
+    warm-transition sim) — the smoke run keeps the headline seeding row,
+    the UCX baseline, the raw-vs-int8 wire comparison (sim + threaded
+    codec parity) and both cold fan-in WAN checks."""
     th = tensorhub_cross_dc(offload_seeding=False)
+    th_q = tensorhub_cross_dc(offload_seeding=False, wan_codec="int8")
     ucx = ucx_cross_dc()
     rows = [
         {"system": "ucx-tcp", **_fmt(ucx)},
         {"system": "tensorhub", **_fmt(th)},
+        {"system": "tensorhub+int8-wire (beyond-paper)", **_fmt(th_q)},
+        codec_parity(),
     ]
     if not quick:
         th_off = tensorhub_cross_dc(offload_seeding=True)
-        th_q = tensorhub_cross_dc(offload_seeding=False, tcp_compression=INT8_RATIO)
         rows.append({"system": "tensorhub+offload-seeding", **_fmt(th_off)})
-        rows.append({"system": "tensorhub+int8-seeding (beyond-paper)", **_fmt(th_q)})
     for swarm in (False, True):
         cold = swarm_cold_fanin(swarm=swarm)
         rows.append(
@@ -207,8 +266,34 @@ def validate(rows: List[Dict]) -> List[str]:
     ucx = by_sys["ucx-tcp"]
     th = by_sys["tensorhub"]
     th_off = by_sys.get("tensorhub+offload-seeding")
-    th_q = by_sys.get("tensorhub+int8-seeding (beyond-paper)")
+    th_q = by_sys.get("tensorhub+int8-wire (beyond-paper)")
+    parity = by_sys.get("codec-parity (threaded)")
     checks = []
+    if th_q is not None:
+        wan_red = th["cross_dc_gb"] / max(th_q["cross_dc_gb"], 1e-9)
+        checks.append(
+            f"int8 WAN wire bytes (sim): {th_q['cross_dc_gb']} GB vs "
+            f"{th['cross_dc_gb']} GB raw = {wan_red:.2f}x less (int8 + "
+            f"per-256 f32 scales vs f32: 3.94x) -> "
+            f"{'OK' if 3.8 <= wan_red <= 4.0 else 'MISMATCH'}"
+        )
+    if parity is not None:
+        ok = (
+            parity["f32_raw_bit_exact"]
+            and parity["bf16_raw_bit_exact"]
+            and 3.8 <= parity["f32_reduction_x"] <= 4.0
+            and 1.9 <= parity["bf16_reduction_x"] <= 2.1
+            and parity["f32_max_rel_err"] < 0.01
+            and parity["bf16_max_rel_err"] < 0.01
+        )
+        checks.append(
+            "codec parity (threaded, real bytes): raw bit-exact="
+            f"{parity['f32_raw_bit_exact'] and parity['bf16_raw_bit_exact']}, "
+            f"int8 wire {parity['f32_reduction_x']}x (f32) / "
+            f"{parity['bf16_reduction_x']}x (bf16) smaller, max rel err "
+            f"{max(parity['f32_max_rel_err'], parity['bf16_max_rel_err'])} "
+            f"(<1%) -> {'OK' if ok else 'MISMATCH'}"
+        )
     # swarm replication: the cold fan-in moves exactly ONE copy across the
     # WAN (the seeder's), with the rest of dc1 fed from its prefix over
     # local RDMA — under both the swarm planner and the PR 2 chains
@@ -223,8 +308,8 @@ def validate(rows: List[Dict]) -> List[str]:
         )
     if th_q is not None:
         checks.append(
-            f"int8 seeding (beyond-paper): seeder tail {th_q['per_gpu_s'][-1]}s vs "
-            f"{th['per_gpu_s'][-1]}s bf16 -> "
+            f"int8 wire (beyond-paper): seeder tail {th_q['per_gpu_s'][-1]}s vs "
+            f"{th['per_gpu_s'][-1]}s raw -> "
             f"{'OK' if th_q['per_gpu_s'][-1] < th['per_gpu_s'][-1] * 0.65 else 'MISMATCH'}"
         )
     tail = th["per_gpu_s"]

@@ -1,5 +1,8 @@
 """Cross-datacenter weight transfer (paper 5.4) on the calibrated
 event-driven cluster: seeding, smart skipping, and offload seeding.
+WAN-crossing slices ride the default int8 wire codec (~3.9x fewer
+bytes than raw f32 weights; pass ``SimCluster(wan_codec="raw")`` for
+the paper's uncompressed 2.5 s seeding transfer).
 
     PYTHONPATH=src python examples/cross_dc.py
 """

@@ -32,6 +32,7 @@ from repro.core.errors import (
 from repro.core.meta import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW, WorkerInfo
 from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
 from repro.transfer import checksum as checksum_lib
+from repro.transfer import codec as codec_lib
 from repro.transfer.engine import (
     LocalTransport,
     TransportError,
@@ -708,6 +709,15 @@ class ShardHandle:
         version = assignment.version
         done = 0
         used_reshard = False
+        # lossy wire codecs (cross-DC int8): decoded bytes diverge from
+        # the publisher's, so readers chaining off us (or off anyone
+        # downstream of the lossy hop — divergence propagates along raw
+        # chains) must not verify against the publisher's manifest
+        # checksums. The span loop registers a zero-checksum manifest the
+        # moment a divergent plan is detected (mirroring the reshard
+        # path), and the epilogue below upgrades it to our real checksums
+        # once the bytes are final.
+        pull_state = {"divergent": False}
         # swarm replication: while this pull is in flight the store serves
         # other readers exactly its completed prefix; the watermark is
         # advanced before every server progress report and lifted when the
@@ -751,16 +761,18 @@ class ShardHandle:
                     )
                 else:
                     done = self._pull_units_span(
-                        assignment, dest_name, dest_store, done, src_manifest
+                        assignment, dest_name, dest_store, done, src_manifest,
+                        pull_state,
                     )
                 break
             except _SourceLost as e:
                 assignment = self._handle_source_failure(dest_name, e.source)
         dest_store.serving_prefix = None  # fully replicated: unrestricted
-        if used_reshard and self.with_checksums:
+        if (used_reshard or pull_state["divergent"]) and self.with_checksums:
             # our layout family was registered with zero checksums (pre-pull
-            # buffers); now that the bytes are final, upgrade it so readers
-            # chaining off us get end-to-end verification back
+            # buffers / lossy-decoded bytes mid-flight); now that the bytes
+            # are final, upgrade it so readers chaining off us get
+            # end-to-end verification back
             with self._cv:
                 self._scall(
                     "put_manifest",
@@ -784,6 +796,7 @@ class ShardHandle:
         dest_store: WorkerStore,
         done: int,
         manifest,
+        pull_state: Optional[dict] = None,
     ) -> int:
         """Same-layout pull: whole transfer units (or byte-range chunks of
         them), shard i <- shard i, against the source replicas' manifests
@@ -794,8 +807,32 @@ class ShardHandle:
         version = assignment.version
         units = manifest.units
         completed: Set[int] = set()
+        if pull_state is None:
+            pull_state = {"divergent": False}
         while done < len(units):
             slices = assignment.slices(len(units))
+            if not pull_state["divergent"] and self._divergent_pull(
+                assignment, manifest, version
+            ):
+                # Our bytes will diverge from the count-family (publisher)
+                # manifest — either a lossy slice decodes in this plan, or
+                # we are chaining off a replica whose own bytes already
+                # diverged (its manifest checksums differ from the
+                # family's). Register a zero-checksum manifest for
+                # ourselves BEFORE serving any prefix so chained readers
+                # skip publish-time verification against bytes we don't
+                # hold; the pull epilogue upgrades it to our real
+                # (decoded-byte) checksums.
+                pull_state["divergent"] = True
+                with self._cv:
+                    self._scall(
+                        "put_manifest",
+                        self.model,
+                        dest_name,
+                        self.shard_idx,
+                        version,
+                        dest_store.build_manifest(with_checksums=False),
+                    )
             if self.window <= 1 and self.chunk_bytes is None and len(slices) == 1:
                 return self._pull_units_seq(
                     assignment, dest_name, dest_store, done, manifest
@@ -836,19 +873,49 @@ class ShardHandle:
                 # plan; a dead source surfaces as _SourceLost upstream
         return done
 
+    def _divergent_pull(self, assignment: Assignment, manifest, version: int) -> bool:
+        """Whether this pull will leave us with bytes whose checksums
+        differ from the count-family (publisher) manifest — readers
+        resolving us through the family fallback would then mis-verify.
+        True when any negotiated codec in the plan is lossy, or when the
+        source manifest we verify against already carries non-family
+        checksums (the source itself descends from a lossy transfer:
+        divergence propagates down raw chains)."""
+        if codec_lib.assignment_lossy(assignment):
+            return True
+        with self._cv:
+            fam = self._scall(
+                "manifest",
+                self.model,
+                version,
+                self.shard_idx,
+                num_shards=self.num_shards,
+            )
+        return fam is not None and tuple(fam.checksums) != tuple(manifest.checksums)
+
     def _validated_slices(
         self, slices: List[SourceSlice], version: int, manifest
     ) -> List[SourceSlice]:
         """Unit pulls are interchangeable only between byte-identical
         layouts; drop any sibling source whose manifest diverges from the
         primary's (the server filters too — this is the client-side
-        guard). The primary is never dropped."""
+        guard). The primary is never dropped.
+
+        Layout identity alone is not enough: the windowed executor
+        verifies every unit against the *primary's* checksums, so a
+        sibling must also hold the same bytes. A replica whose manifest
+        carries different checksums (it descends from a lossy int8 hop
+        while the primary holds publisher bytes, or vice versa) would
+        fail verification — or worse, silently mix byte provenance with
+        checksums off — so it is dropped from the plan."""
         if len(slices) <= 1:
             return slices
         kept = [slices[0]]
         for sl in slices[1:]:
             m = self._wait_src_manifest(version, sl.source)
-            if m.same_layout(manifest):
+            if m.same_layout(manifest) and tuple(m.checksums) == tuple(
+                manifest.checksums
+            ):
                 kept.append(sl)
         return kept
 
@@ -865,14 +932,21 @@ class ShardHandle:
         version = assignment.version
         units = manifest.units
         source = assignment.source
+        codec = assignment.codec
         while done < len(units):
             avail = self._await_source_progress(source, version, self.shard_idx, done)
             for i in range(done, avail):
                 try:
                     self.client.transport.pull_unit(
-                        source, self.shard_idx, units[i], manifest.checksums[i], dest_store
+                        source, self.shard_idx, units[i], manifest.checksums[i],
+                        dest_store, codec=codec,
                     )
                 except TransportError:
+                    if dest_store.failed:
+                        # OUR store died (preemption): the write guard
+                        # fired, not the source — blaming the source
+                        # would evict a healthy replica cluster-wide
+                        raise
                     raise _SourceLost(source)
                 done += 1
                 dest_store.serving_prefix = done  # before the server learns
@@ -886,15 +960,24 @@ class ShardHandle:
     def _build_pull_tasks(
         self,
         slices: List[SourceSlice],
-        units,
+        manifest,
         done: int,
         completed: Set[int],
     ) -> List[_PullTask]:
         """Expand the plan's unit ranges into an ordered task list; units
         above the chunk threshold become byte-range tasks, owner-hinted
         round-robin across all sources (identical bytes everywhere, so a
-        giant tensor can aggregate every source's bandwidth)."""
+        giant tensor can aggregate every source's bandwidth).
+
+        With a non-raw codec in the plan, chunk boundaries are aligned up
+        to the codec's row granularity so every chunk encodes exactly the
+        rows the whole-unit encoding would — chunked giant units then
+        reassemble bit-identically to an unchunked transfer."""
+        units = manifest.units
         chunk = self.chunk_bytes
+        codecs = [codec_lib.get_codec(sl.codec) for sl in slices]
+        any_coded = any(c.name != "raw" for c in codecs)
+        by_name = {t.name: t for t in manifest.tensors} if any_coded else {}
         owners: Dict[int, int] = {}
         for k, sl in enumerate(slices):
             for ui in range(max(sl.start_unit, done), min(sl.stop_unit, len(units))):
@@ -909,13 +992,20 @@ class ShardHandle:
             if chunk is not None and nbytes > chunk:
                 n_parts = -(-nbytes // chunk)
                 per = -(-nbytes // n_parts)
+                if any_coded:
+                    dtype = codec_lib.unit_wire_dtype(by_name, units[ui])
+                    align = max(c.row_bytes(dtype) for c in codecs)
+                    if align > 1:
+                        per = -(-per // align) * align
                 off = 0
-                for j in range(n_parts):
+                j = 0
+                while off < nbytes:
                     step = min(per, nbytes - off)
                     tgt = (rr + j) % len(slices) if len(slices) > 1 else k
                     tasks.append(_PullTask(ui, off, step, tgt))
                     off += step
-                rr += n_parts
+                    j += 1
+                rr += j
             else:
                 tasks.append(_PullTask(ui, 0, nbytes, k))
         return tasks
@@ -938,7 +1028,7 @@ class ShardHandle:
         checksum verification after chunk reassembly."""
         version = assignment.version
         units = manifest.units
-        tasks = self._build_pull_tasks(slices, units, done, completed)
+        tasks = self._build_pull_tasks(slices, manifest, done, completed)
         if not tasks:
             return "done", done
         remaining: Dict[int, int] = {}
@@ -953,6 +1043,7 @@ class ShardHandle:
             "scan": 0,
             "remaining": remaining,
             "staging": {},  # unit -> np.uint8 reassembly buffer
+            "lossy_units": set(),  # units with any lossy-codec chunk
             "completed": completed,  # shared with caller: survives re-plans
             "done": done,
             "stop": None,  # None | "replan" | BaseException
@@ -1055,8 +1146,12 @@ class ShardHandle:
                     )
                 finally:
                     shared["sem"].release()
-        except TransportError:
-            self._span_stop(shared, _SourceLost(sl.source))
+        except TransportError as e:
+            if dest_store.failed:
+                # our own store died (dest preemption), not the source
+                self._span_stop(shared, e)
+            else:
+                self._span_stop(shared, _SourceLost(sl.source))
         except BaseException as e:  # noqa: BLE001 — relayed to the caller
             self._span_stop(shared, e)
 
@@ -1071,14 +1166,20 @@ class ShardHandle:
         version: int,
     ) -> None:
         unit = manifest.units[t.unit]
+        if not codec_lib.get_codec(sl.codec).lossless:
+            # decoded bytes won't match the publish-time checksum: mark
+            # the unit before any finish check can verify it
+            with shared["lock"]:
+                shared["lossy_units"].add(t.unit)
         whole = t.offset == 0 and t.nbytes == unit.nbytes
         if whole:
             self.client.transport.pull_unit(
-                sl.source, self.shard_idx, unit, manifest.checksums[t.unit], dest_store
+                sl.source, self.shard_idx, unit, manifest.checksums[t.unit],
+                dest_store, codec=sl.codec,
             )
         else:
             payload = self.client.transport.read_unit_range(
-                sl.source, self.shard_idx, unit, t.offset, t.nbytes
+                sl.source, self.shard_idx, unit, t.offset, t.nbytes, codec=sl.codec
             )
             with shared["lock"]:
                 buf = shared["staging"].get(t.unit)
@@ -1091,10 +1192,14 @@ class ShardHandle:
             shared["remaining"][t.unit] -= 1
             finished = shared["remaining"][t.unit] == 0
             buf = shared["staging"].pop(t.unit, None) if finished else None
+            unit_lossy = t.unit in shared["lossy_units"]
         if not finished:
             return
         if buf is not None:  # chunked unit: verify end-to-end, then absorb
-            expected = manifest.checksums[t.unit]
+            # lossy-coded chunks were each verified over their decoded
+            # bytes; the publish-time manifest checksum only applies to
+            # raw (bit-exact) reassembly
+            expected = 0 if unit_lossy else manifest.checksums[t.unit]
             if self.client.transport.verify_checksums and expected:
                 got = checksum_lib.checksum(buf)
                 if got != expected:
@@ -1128,9 +1233,22 @@ class ShardHandle:
     ) -> int:
         """Cross-layout pull: plan striped interval reads against the
         source layout, stage each destination unit, repack, publish unit
-        progress. Starts at destination unit ``done`` (resume)."""
+        progress. Starts at destination unit ``done`` (resume).
+
+        Interval reads are raw-only in this revision: intervals slice
+        tensors at arbitrary byte offsets that cannot sit on a
+        quantization row grid, so a non-raw negotiation is rejected
+        explicitly up front rather than allowed to corrupt bytes (the
+        server never emits one for a resharded plan; this guards forged
+        or stale assignments)."""
         from repro.resharding import ReshardExecutor, layout_from_manifests, plan_shard
 
+        bad = codec_lib.slice_codecs(assignment) - {"raw"}
+        if bad:
+            raise TensorHubError(
+                f"resharded pull of {dest_name}: assignment negotiated "
+                f"non-raw codec(s) {sorted(bad)}; interval reads are raw-only"
+            )
         version = assignment.version
         # our own layout family: checksums are disabled because they would
         # be computed over the *pre-pull* buffer contents; same-layout

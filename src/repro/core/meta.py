@@ -319,7 +319,13 @@ class SourceSlice:
     means the source was fully published when the plan was built. A
     partial (in-progress) source serves exactly ``[0, ceiling)``; reads
     beyond it must first await the source's live progress counter — the
-    never-read-past-source-prefix contract both data planes enforce."""
+    never-read-past-source-prefix contract both data planes enforce.
+
+    ``codec`` is the wire codec the server negotiated for this link
+    (``repro.transfer.codec``): WAN-crossing slices default to ``int8``,
+    intra-DC (and all resharded interval reads) stay ``raw``. Both data
+    planes honor it — the threaded transport encodes/decodes real bytes,
+    the simulator derives fluid wire bytes from the codec's ratio."""
 
     source: str
     source_kind: str
@@ -329,6 +335,7 @@ class SourceSlice:
     seeding: bool = False
     source_shards: int = 0
     ceiling: int = -1
+    codec: str = "raw"
 
     def serves_whole_range(self) -> bool:
         """True when the plan-time prefix already covers the assigned
@@ -373,6 +380,9 @@ class Assignment:
     dest_shards: int = 0
     sources: Tuple[SourceSlice, ...] = ()
     epoch: int = 0
+    #: wire codec of the *primary* source link (``sources[0].codec`` when
+    #: a plan exists); legacy single-source pulls read it directly
+    codec: str = "raw"
 
     @property
     def resharded(self) -> bool:
@@ -412,5 +422,6 @@ class Assignment:
                 stop_unit=num_units,
                 seeding=self.seeding,
                 source_shards=self.source_shards,
+                codec=self.codec,
             )
         ]

@@ -262,6 +262,7 @@ class ReferenceServer:
         work_stealing: bool = True,
         chunk_hint: Optional[float] = None,
         swarm: bool = True,
+        wan_codec: str = "int8",
         log: Optional[OpLog] = None,
     ) -> None:
         self._models: Dict[str, ModelState] = {}
@@ -279,6 +280,16 @@ class ReferenceServer:
         self._chunk_hint = (
             meta_defaults.DEFAULT_CHUNK_BYTES if chunk_hint is None else chunk_hint
         )
+        #: wire codec negotiated for WAN-crossing (cross-DC) slices; the
+        #: resolve validates the name at construction so a bad knob fails
+        #: here, not mid-transfer. Intra-DC links and resharded interval
+        #: reads always negotiate "raw" (see _make_assignment). Imported
+        #: lazily: repro.transfer.codec depends on repro.core.meta, so a
+        #: module-level import would close an import cycle.
+        from repro.transfer.codec import get_codec
+
+        get_codec(wan_codec)
+        self._wan_codec = wan_codec
         #: swarm replication: admit *in-progress* replicas into the
         #: multi-source pool for the prefix of units they have completed
         #: (unit-granular availability map). ``swarm=False`` reproduces
@@ -326,6 +337,7 @@ class ReferenceServer:
             "work_stealing": self._work_stealing,
             "chunk_hint": self._chunk_hint,
             "swarm": self._swarm,
+            "wan_codec": self._wan_codec,
         }
 
     @property
@@ -1453,12 +1465,24 @@ class ReferenceServer:
     ) -> Assignment:
         cross = self._cross_dc(st, src, dest)
         vmap = st.versions.get(version, {})
+
+        def codec_for(is_cross: bool, source_shards: int) -> str:
+            # per-link negotiation: WAN-crossing slices carry the WAN
+            # codec; intra-DC stays raw. Mismatched shard counts run the
+            # resharded interval-read path, which is raw-only in this
+            # revision — negotiating anything else would corrupt bytes,
+            # so the planes also reject non-raw resharded assignments.
+            if not is_cross or source_shards != dest.num_shards:
+                return "raw"
+            return self._wan_codec
+
         slices = []
         for name, a, b in plan or []:
             s_rv = vmap.get(name)
             if s_rv is None:
                 continue
             s_cross = self._cross_dc(st, s_rv, dest)
+            s_shards = st.replicas[name].num_shards
             slices.append(
                 SourceSlice(
                     source=name,
@@ -1467,20 +1491,23 @@ class ReferenceServer:
                     start_unit=a,
                     stop_unit=b,
                     seeding=s_cross,
-                    source_shards=st.replicas[name].num_shards,
+                    source_shards=s_shards,
                     ceiling=self._source_ceiling(st, s_rv),
+                    codec=codec_for(s_cross, s_shards),
                 )
             )
+        src_shards = st.replicas[src.replica].num_shards
         return Assignment(
             version=version,
             source=src.replica,
             source_kind=src.kind,
             transport="tcp" if cross else "rdma",
             seeding=cross,
-            source_shards=st.replicas[src.replica].num_shards,
+            source_shards=src_shards,
             dest_shards=dest.num_shards,
             sources=tuple(slices),
             epoch=epoch,
+            codec=slices[0].codec if slices else codec_for(cross, src_shards),
         )
 
     # -- multi-source planning (windowed data plane) ----------------------------

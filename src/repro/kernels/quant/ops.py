@@ -4,7 +4,7 @@ cross-DC seeding and gradient all-reduce)."""
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,5 +41,17 @@ def dequantize(q: jax.Array, scales: jax.Array, shape: Tuple[int, ...], dtype=jn
     return flat[:n].reshape(shape)
 
 
-def compressed_bytes(q: jax.Array, scales: jax.Array) -> int:
-    return q.size * q.dtype.itemsize + scales.size * scales.dtype.itemsize
+def compressed_bytes(
+    q: jax.Array, scales: jax.Array, num_elements: Optional[int] = None
+) -> int:
+    """Wire size of a quantized tensor: q payload + scales.
+
+    ``quantize`` zero-pads the flattened tensor to a multiple of
+    ``row_len`` before reshaping into rows, so ``q.size`` over-counts
+    tensors whose element count is not a row multiple — the padding is
+    reconstructed from the header at decode time and never crosses the
+    wire. Pass ``num_elements`` (``prod(shape)`` from ``quantize``'s
+    returned shape) to clamp the count to the true payload.
+    """
+    n = q.size if num_elements is None else min(int(num_elements), q.size)
+    return n * q.dtype.itemsize + scales.size * scales.dtype.itemsize

@@ -1,0 +1,395 @@
+"""Wire codecs: pluggable per-link payload encodings for the data plane.
+
+The paper's cross-DC workload (5.4) wins by moving fewer bytes over the
+WAN. This module makes that real: a :class:`WireCodec` transforms a
+transfer-unit payload into *wire bytes* at the source and back into
+weight bytes at the destination. The reference server negotiates the
+codec **per link class** when it builds an :class:`~repro.core.meta.Assignment`:
+WAN-crossing slices default to ``int8`` (symmetric per-row quantization,
+backed by the Pallas kernel package ``repro.kernels.quant``, with a
+pure-NumPy implementation when JAX is absent), intra-DC slices stay
+``raw``. The negotiated name travels on ``SourceSlice.codec`` /
+``Assignment.codec`` and is honored by both data planes
+(``repro.transfer.engine`` for real bytes, ``repro.transfer.simcluster``
+for fluid bytes).
+
+Integrity contract (4.6)
+------------------------
+End-to-end checksums are verified over the **decoded** bytes:
+
+* ``raw`` — the manifest's publish-time per-unit checksum, exactly as
+  before (bit-for-bit the pre-codec wire).
+* lossy codecs (``int8``) — the publish-time checksum cannot match the
+  de-quantized bytes, so the source checksums ``decode(encode(payload))``
+  at read time and the destination re-verifies its decoded copy — the
+  same transit protection contract as ``LocalTransport.read_interval``.
+  Additionally the wire header carries dtype / row length / payload size
+  and the decoder validates all of them plus scale finiteness (the
+  wire-level scale/shape integrity check), so a torn or misframed wire
+  buffer fails loudly instead of decoding garbage.
+
+Chunk alignment
+---------------
+Sub-unit chunking composes with quantization because rows are a pure
+function of element *position*: a chunk whose byte offset is a multiple
+of :meth:`WireCodec.row_bytes` encodes exactly the same (scale, q) rows
+as the corresponding slice of the whole-unit encoding, so chunked giant
+units reassemble bit-identically to a single-flow transfer. The client's
+task builder aligns chunk boundaries accordingly; the transport rejects
+misaligned non-raw range reads.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.errors import TensorHubError
+from repro.core.meta import TensorMeta, TransferUnit, dtype_from_str
+
+#: default row length (elements) of the ``int8`` wire codec: f32 scales
+#: per 256 elements cost 4/256 extra bytes/element, i.e. a wire ratio of
+#: (1 + 4/256)/4 = 0.2539 vs float32 weights (~3.9x) and 0.5078 vs bf16
+#: (~2.0x). Matches the quant kernel's 256-row VMEM block geometry.
+INT8_ROW_LEN = 256
+
+#: dtypes the int8 codec quantizes; anything else rides as a tagged raw
+#: passthrough (bit-exact) inside the same wire framing
+_QUANTIZABLE: Dict[str, int] = {
+    "float32": 1,
+    "bfloat16": 2,
+    "float16": 3,
+    "float64": 4,
+}
+_DTYPE_FROM_CODE = {v: k for k, v in _QUANTIZABLE.items()}
+
+#: int8 wire header: magic u32, version u8, flags u8 (bit0 = raw
+#: passthrough), dtype code u8, reserved u8, row_len u32, orig_nbytes u64
+_HDR = struct.Struct("<IBBBBIQ")
+_MAGIC = 0x38515754  # "TWQ8"
+_VERSION = 1
+_FLAG_PASSTHROUGH = 1
+
+
+class CodecError(TensorHubError):
+    """Malformed or inconsistent wire bytes (failed the wire-level
+    scale/shape integrity check), or a codec misuse the data plane must
+    refuse rather than corrupt bytes."""
+
+
+class WireCodec:
+    """Interface: encode unit payloads into wire bytes and back.
+
+    ``dtype`` is the payload's element dtype as a numpy dtype string
+    (``None`` when unknown — e.g. a compacted bucket of mixed-dtype tiny
+    tensors); codecs that need element semantics fall back to a tagged
+    passthrough for such payloads.
+    """
+
+    name: str = "?"
+    #: lossless codecs decode to the exact source bytes, so publish-time
+    #: manifest checksums remain valid on the decoded payload
+    lossless: bool = True
+
+    def encode(self, payload: np.ndarray, dtype: Optional[str]) -> np.ndarray:
+        """Flat uint8 payload -> flat uint8 wire bytes."""
+        raise NotImplementedError
+
+    def decode(self, wire: np.ndarray) -> np.ndarray:
+        """Flat uint8 wire bytes -> flat uint8 decoded payload (the wire
+        framing is self-describing)."""
+        raise NotImplementedError
+
+    def wire_nbytes(self, nbytes: int, dtype: Optional[str]) -> int:
+        """Predicted wire size of an ``nbytes`` payload (exact for the
+        real transport; the simulator derives fluid byte counts from it)."""
+        raise NotImplementedError
+
+    def row_bytes(self, dtype: Optional[str]) -> int:
+        """Chunk-boundary granularity in payload bytes: sub-unit chunk
+        offsets must be multiples of this for encode(chunk) to reproduce
+        the whole-unit encoding row-for-row."""
+        return 1
+
+
+class RawCodec(WireCodec):
+    """Identity codec: wire bytes ARE the payload bytes (no framing), so
+    ``codec="raw"`` reproduces the pre-codec data plane bit-for-bit."""
+
+    name = "raw"
+    lossless = True
+
+    def encode(self, payload: np.ndarray, dtype: Optional[str]) -> np.ndarray:
+        return payload
+
+    def decode(self, wire: np.ndarray) -> np.ndarray:
+        return wire
+
+    def wire_nbytes(self, nbytes: int, dtype: Optional[str]) -> int:
+        return nbytes
+
+
+class Int8Codec(WireCodec):
+    """Symmetric per-row int8 quantization (q int8 + f32 scale per
+    ``row_len`` elements), the ``kernels/quant`` scheme on the wire.
+
+    Quantization is deterministic, so every replica that decodes the same
+    published version over this codec holds byte-identical weights — the
+    property that lets intra-DC readers chain raw pulls off an
+    int8-seeded replica.
+    """
+
+    name = "int8"
+    lossless = False
+
+    def __init__(self, row_len: int = INT8_ROW_LEN, backend: str = "auto") -> None:
+        if row_len <= 0:
+            raise ValueError("row_len must be positive")
+        self.row_len = row_len
+        if backend not in ("auto", "numpy", "jax"):
+            raise ValueError(f"unknown int8 backend {backend!r}")
+        self._backend = backend
+        self._jax_quant = None  # resolved lazily
+
+    # -- backends ---------------------------------------------------------
+
+    def _quant_rows(self, rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """f32 [R, L] -> (q int8 [R, L], scales f32 [R]). The jax path is
+        the ``kernels/quant`` oracle (jitted; numerically identical to the
+        Pallas kernel); NumPy reproduces it op-for-op (same IEEE ops, same
+        round-half-to-even), so mixed deployments stay deterministic."""
+        if self._backend != "numpy":
+            fn = self._resolve_jax()
+            if fn is not None:
+                q, s = fn(rows)
+                return np.asarray(q), np.asarray(s)
+            if self._backend == "jax":
+                raise CodecError("int8 codec: backend='jax' but JAX is unavailable")
+        absmax = np.max(np.abs(rows), axis=1)
+        scales = np.maximum(absmax / 127.0, 1e-12).astype(np.float32)
+        q = np.clip(np.rint(rows / scales[:, None]), -127, 127).astype(np.int8)
+        return q, scales
+
+    def _resolve_jax(self):
+        if self._jax_quant is None:
+            try:
+                import jax
+
+                from repro.kernels.quant.ref import quantize_ref
+
+                self._jax_quant = jax.jit(quantize_ref)
+            except Exception:  # noqa: BLE001 — any import/backend failure
+                self._jax_quant = False
+        return self._jax_quant or None
+
+    # -- framing ----------------------------------------------------------
+
+    def _header(self, flags: int, dtype_code: int, nbytes: int) -> bytes:
+        return _HDR.pack(_MAGIC, _VERSION, flags, dtype_code, 0, self.row_len, nbytes)
+
+    def encode(self, payload: np.ndarray, dtype: Optional[str]) -> np.ndarray:
+        flat = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
+        npdtype = None
+        if dtype in _QUANTIZABLE:
+            npdtype = dtype_from_str(dtype)
+            if flat.nbytes % npdtype.itemsize:
+                npdtype = None  # not a whole number of elements: passthrough
+        if npdtype is None or flat.nbytes == 0:
+            hdr = self._header(_FLAG_PASSTHROUGH, 0, flat.nbytes)
+            return np.concatenate([np.frombuffer(hdr, np.uint8), flat])
+        with np.errstate(over="ignore"):  # f32-overflow becomes inf, handled below
+            x = flat.view(npdtype).astype(np.float32, copy=False)
+        if not np.all(np.isfinite(x)):
+            # NaN/Inf weights (transient RL loss spikes; f64 values that
+            # overflow f32) would produce non-finite scales and fail the
+            # decoder's integrity check — ship them bit-exact instead of
+            # bricking the transfer
+            hdr = self._header(_FLAG_PASSTHROUGH, 0, flat.nbytes)
+            return np.concatenate([np.frombuffer(hdr, np.uint8), flat])
+        n = x.size
+        pad = (-n) % self.row_len
+        if pad:
+            x = np.concatenate([x, np.zeros(pad, np.float32)])
+        q, scales = self._quant_rows(x.reshape(-1, self.row_len))
+        hdr = self._header(0, _QUANTIZABLE[dtype], flat.nbytes)
+        return np.concatenate(
+            [
+                np.frombuffer(hdr, np.uint8),
+                scales.view(np.uint8).reshape(-1),
+                # zero-padding elements are NOT wire bytes: send the true
+                # payload only (the compressed_bytes clamp, on the wire)
+                q.reshape(-1)[:n].view(np.uint8),
+            ]
+        )
+
+    def decode(self, wire: np.ndarray) -> np.ndarray:
+        buf = np.ascontiguousarray(wire).view(np.uint8).reshape(-1)
+        if buf.nbytes < _HDR.size:
+            raise CodecError(f"int8 wire: short buffer ({buf.nbytes}B < header)")
+        magic, version, flags, dcode, _, row_len, orig_nbytes = _HDR.unpack(
+            buf[: _HDR.size].tobytes()
+        )
+        if magic != _MAGIC or version != _VERSION:
+            raise CodecError(
+                f"int8 wire: bad framing (magic {magic:#x}, version {version})"
+            )
+        body = buf[_HDR.size :]
+        if flags & _FLAG_PASSTHROUGH:
+            if body.nbytes != orig_nbytes:
+                raise CodecError(
+                    f"int8 wire: passthrough length {body.nbytes}B != "
+                    f"declared {orig_nbytes}B"
+                )
+            return body
+        dtype = _DTYPE_FROM_CODE.get(dcode)
+        if dtype is None:
+            raise CodecError(f"int8 wire: unknown dtype code {dcode}")
+        npdtype = dtype_from_str(dtype)
+        if row_len <= 0 or orig_nbytes % npdtype.itemsize:
+            raise CodecError(
+                f"int8 wire: inconsistent shape (row_len {row_len}, "
+                f"{orig_nbytes}B of {dtype})"
+            )
+        n = orig_nbytes // npdtype.itemsize
+        rows = -(-n // row_len)
+        if body.nbytes != 4 * rows + n:
+            raise CodecError(
+                f"int8 wire: {body.nbytes}B body != {4 * rows}B scales + "
+                f"{n}B q for {n} x {dtype}"
+            )
+        scales = body[: 4 * rows].view(np.float32)
+        if not np.all(np.isfinite(scales)) or np.any(scales <= 0):
+            raise CodecError("int8 wire: non-finite or non-positive scales")
+        q = np.zeros(rows * row_len, np.int8)
+        q[:n] = body[4 * rows :].view(np.int8)
+        x = (q.reshape(rows, row_len).astype(np.float32) * scales[:, None]).reshape(-1)
+        return np.ascontiguousarray(x[:n].astype(npdtype)).view(np.uint8).reshape(-1)
+
+    def wire_nbytes(self, nbytes: int, dtype: Optional[str]) -> int:
+        if dtype in _QUANTIZABLE and nbytes:
+            itemsize = dtype_from_str(dtype).itemsize
+            if nbytes % itemsize == 0:
+                n = nbytes // itemsize
+                return _HDR.size + 4 * (-(-n // self.row_len)) + n
+        return _HDR.size + nbytes
+
+    def row_bytes(self, dtype: Optional[str]) -> int:
+        if dtype in _QUANTIZABLE:
+            return self.row_len * dtype_from_str(dtype).itemsize
+        return 1
+
+
+class FixedRatioCodec(WireCodec):
+    """Fluid-byte modeling codec: scales wire bytes by a fixed ratio.
+
+    This is the migration target of the simulator's deprecated
+    ``tcp_compression`` scalar — it exists so legacy callers keep their
+    exact byte accounting. It carries no real encoding, so the threaded
+    transport refuses it.
+    """
+
+    lossless = True
+
+    def __init__(self, ratio: float) -> None:
+        if not (0.0 < ratio):
+            raise ValueError(f"fixed codec ratio must be positive, got {ratio}")
+        self.ratio = float(ratio)
+        self.name = f"fixed:{self.ratio!r}"
+
+    def encode(self, payload: np.ndarray, dtype: Optional[str]) -> np.ndarray:
+        raise CodecError(
+            "fixed-ratio codecs model wire bytes in the simulator only; "
+            "the real transport cannot encode with one"
+        )
+
+    def decode(self, wire: np.ndarray) -> np.ndarray:
+        raise CodecError(
+            "fixed-ratio codecs model wire bytes in the simulator only; "
+            "the real transport cannot decode with one"
+        )
+
+    def wire_nbytes(self, nbytes: int, dtype: Optional[str]) -> int:
+        return int(round(nbytes * self.ratio))
+
+
+_REGISTRY: Dict[str, WireCodec] = {}
+
+
+def get_codec(name: str) -> WireCodec:
+    """Resolve a negotiated codec name (``raw``, ``int8``,
+    ``fixed:<ratio>``). Raises :class:`TensorHubError` for unknown names
+    so a bad negotiation fails at plan time, not mid-transfer."""
+    c = _REGISTRY.get(name)
+    if c is not None:
+        return c
+    if name.startswith("fixed:"):
+        try:
+            c = FixedRatioCodec(float(name[len("fixed:") :]))
+        except ValueError as e:
+            raise TensorHubError(f"bad fixed-ratio codec {name!r}: {e}") from None
+        _REGISTRY[name] = c
+        return c
+    raise TensorHubError(f"unknown wire codec {name!r}")
+
+
+for _c in (RawCodec(), Int8Codec()):
+    _REGISTRY[_c.name] = _c
+
+
+# ---------------------------------------------------------------------------
+# shared helpers for the data planes
+# ---------------------------------------------------------------------------
+
+
+def unit_wire_dtype(
+    tensors: Mapping[str, TensorMeta], unit: TransferUnit
+) -> Optional[str]:
+    """Element dtype of a transfer unit's payload: the tensor's dtype for
+    a plain unit, the members' common dtype for a homogeneous compacted
+    bucket, ``None`` (codecs pass through) when members mix dtypes or a
+    member is unknown."""
+    if not unit.is_compact:
+        t = tensors.get(unit.name)
+        return None if t is None else t.dtype
+    dtype: Optional[str] = None
+    for name in unit.members:
+        t = tensors.get(name)
+        if t is None:
+            return None
+        if dtype is None:
+            dtype = t.dtype
+        elif t.dtype != dtype:
+            return None
+    return dtype
+
+
+def wire_ratio(
+    codec: WireCodec, unit_sizes: Iterable[int], dtype: Optional[str]
+) -> float:
+    """Wire-bytes / payload-bytes of one shard manifest under ``codec``
+    (the simulator's fluid byte multiplier, computed from the codec's
+    actual size formula rather than a hand-set scalar)."""
+    if isinstance(codec, FixedRatioCodec):
+        return codec.ratio
+    sizes = [int(n) for n in unit_sizes]
+    total = sum(sizes)
+    if total <= 0:
+        return 1.0
+    return sum(codec.wire_nbytes(n, dtype) for n in sizes) / total
+
+
+def slice_codecs(assignment) -> set:
+    """All codec names an assignment may use (top-level + per-slice)."""
+    out = {assignment.codec}
+    for s in assignment.sources:
+        out.add(s.codec)
+    return out
+
+
+def assignment_lossy(assignment) -> bool:
+    """True when any negotiated codec in the plan is lossy — the decoded
+    bytes then differ from the publisher's, so the destination must
+    (re)register its own manifest checksums."""
+    return any(not get_codec(n).lossless for n in slice_codecs(assignment))

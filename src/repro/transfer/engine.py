@@ -34,6 +34,7 @@ from repro.core.meta import (  # noqa: F401  (DEFAULT_* re-exported)
     build_units,
 )
 from repro.transfer import checksum as checksum_lib
+from repro.transfer import codec as codec_lib
 
 #: per-tensor layout descriptor: (global_shape, offset) — see
 #: ``repro.resharding`` for the format
@@ -76,6 +77,7 @@ class WorkerStore:
         self._layouts: Dict[str, LayoutEntry] = {}
         self._units: List[TransferUnit] = []
         self._metas: List[TensorMeta] = []
+        self._meta_by_name: Dict[str, TensorMeta] = {}
         self._unit_of: Dict[str, int] = {}
         #: simulate preemption: a failed store refuses all reads
         self.failed = False
@@ -130,12 +132,18 @@ class WorkerStore:
         self._metas = [
             tensor_meta(n, a, self._layouts.get(n)) for n, a in self._buffers.items()
         ]
+        self._meta_by_name = {m.name: m for m in self._metas}
         self._units = build_units(self._metas)
         self._unit_of = {}
         for u in self._units:
             self._unit_of[u.name] = u.index
             for m in u.members:
                 self._unit_of[m] = u.index
+
+    def unit_dtype(self, unit: TransferUnit) -> Optional[str]:
+        """Element dtype of a unit's payload (None for mixed-dtype compact
+        buckets) — what a wire codec needs to quantize the bytes."""
+        return codec_lib.unit_wire_dtype(self._meta_by_name, unit)
 
     def _check_served(self, unit_index: int, what: str) -> None:
         """Never-read-past-source-prefix guard (swarm replication)."""
@@ -210,7 +218,13 @@ class WorkerStore:
         return staging
 
     def write_unit(self, unit: TransferUnit, payload: np.ndarray) -> None:
-        """Absorb one transfer unit into the registered buffers in place."""
+        """Absorb one transfer unit into the registered buffers in place.
+
+        Like the read paths, a failed (preempted) store refuses the
+        write: a dead worker silently accepting bytes would let a pull
+        "complete" into memory nobody will ever serve or use."""
+        if self.failed:
+            raise TransportError(f"{self.worker_id} is dead")
         if payload.nbytes != unit.nbytes:
             raise TensorHubError(
                 f"unit {unit.name}: payload {payload.nbytes}B != expected {unit.nbytes}B"
@@ -248,6 +262,11 @@ class WorkerStore:
         return arr.view(np.uint8).reshape(-1)[offset : offset + nbytes]
 
     def write_range(self, name: str, offset: int, payload: np.ndarray) -> None:
+        """Absorb a byte range (reshard staging writes). Refuses writes on
+        a failed store, mirroring ``read_range`` — a dead worker must not
+        silently accept bytes."""
+        if self.failed:
+            raise TransportError(f"{self.worker_id} is dead")
         dst = self._buffers.get(name)
         if dst is None:
             raise NotRegisteredError(f"{self.worker_id}: unknown tensor {name}")
@@ -320,18 +339,54 @@ class LocalTransport:
         unit: TransferUnit,
         expected_checksum: int,
         dst_store: WorkerStore,
+        codec: str = "raw",
     ) -> None:
+        """Pull one whole transfer unit through the negotiated wire codec.
+
+        ``codec="raw"`` is the pre-codec wire bit-for-bit: payload bytes
+        move unframed and are verified against the *publish-time* manifest
+        checksum. A non-raw codec encodes at the source and decodes at the
+        destination; end-to-end verification then runs over the **decoded**
+        bytes — the source checksums ``decode(encode(payload))`` at read
+        time (a lossy codec's output cannot match the publish-time sum)
+        and the reader re-verifies after the wire copy, the same transit
+        contract as :meth:`read_interval`. ``bytes_moved`` counts wire
+        bytes, i.e. what the NIC actually carried."""
         src = self.registry.get(src_replica, shard_idx)
-        payload = src.read_unit(unit).copy()  # the wire copy
-        if self.verify_checksums and expected_checksum:
+        cdc = codec_lib.get_codec(codec)
+        if codec == "raw":
+            payload = src.read_unit(unit).copy()  # the wire copy
+            if self.verify_checksums and expected_checksum:
+                got = checksum_lib.checksum(payload)
+                if got != expected_checksum:
+                    raise ChecksumError(
+                        f"unit {unit.name} from {src_replica}/shard{shard_idx}: "
+                        f"checksum {got:#x} != expected {expected_checksum:#x}"
+                    )
+            dst_store.write_unit(unit, payload)
+            self.bytes_moved += unit.nbytes
+            return
+        wire = cdc.encode(src.read_unit(unit), src.unit_dtype(unit))
+        # decode ONCE (deterministic, and it validates the wire framing);
+        # the source's advertised checksum is folded over these decoded
+        # bytes, and the copy below models the wire transfer + the
+        # destination's decode — so the comparison still runs over two
+        # distinct buffers, without paying a second dequantize
+        decoded_src = cdc.decode(wire)
+        expected = (
+            checksum_lib.checksum(decoded_src) if self.verify_checksums else 0
+        )
+        payload = decoded_src.copy()  # the wire copy, decoded at the dest
+        if self.verify_checksums:
             got = checksum_lib.checksum(payload)
-            if got != expected_checksum:
+            if got != expected:
                 raise ChecksumError(
-                    f"unit {unit.name} from {src_replica}/shard{shard_idx}: "
-                    f"checksum {got:#x} != expected {expected_checksum:#x}"
+                    f"unit {unit.name} ({codec}) from "
+                    f"{src_replica}/shard{shard_idx}: decoded checksum "
+                    f"{got:#x} != expected {expected:#x}"
                 )
         dst_store.write_unit(unit, payload)
-        self.bytes_moved += unit.nbytes
+        self.bytes_moved += wire.nbytes
 
     def read_unit_range(
         self,
@@ -340,14 +395,23 @@ class LocalTransport:
         unit: TransferUnit,
         offset: int,
         nbytes: int,
+        codec: str = "raw",
     ) -> np.ndarray:
         """Pull one byte sub-range of a transfer unit (sub-unit chunking).
 
         Like :meth:`read_interval` there is no manifest checksum at chunk
         granularity: the source checksums the range at read time and the
-        reader re-verifies after the wire copy; the caller additionally
-        verifies the *assembled* unit against the manifest checksum, so
-        end-to-end protection is preserved under chunking.
+        reader re-verifies after the wire copy; for a raw codec the caller
+        additionally verifies the *assembled* unit against the manifest
+        checksum, so end-to-end protection is preserved under chunking.
+
+        Non-raw codecs encode the chunk independently; the range is in
+        *decoded* (payload) space and ``offset`` must sit on a codec row
+        boundary (:meth:`~repro.transfer.codec.WireCodec.row_bytes`) so
+        the chunk's quantization rows coincide with the whole-unit
+        encoding and the reassembled unit is bit-identical to an
+        unchunked transfer. The per-chunk checksum runs over the decoded
+        bytes, exactly as in :meth:`pull_unit`.
 
         The swarm served-prefix guard applies at chunk granularity too:
         ``read_unit`` below refuses units past the source's watermark, so
@@ -365,17 +429,45 @@ class LocalTransport:
                 f"exceeds unit of {full.nbytes}B"
             )
         view = full[offset : offset + nbytes]
-        expected = checksum_lib.checksum(view) if self.verify_checksums else 0
-        payload = view.copy()  # the wire copy
+        if codec == "raw":
+            expected = checksum_lib.checksum(view) if self.verify_checksums else 0
+            payload = view.copy()  # the wire copy
+            if self.verify_checksums:
+                got = checksum_lib.checksum(payload)
+                if got != expected:
+                    raise ChecksumError(
+                        f"chunk {unit.name}[{offset}:{offset + nbytes}] from "
+                        f"{src_replica}/shard{shard_idx}: checksum {got:#x} != "
+                        f"expected {expected:#x}"
+                    )
+            self.bytes_moved += nbytes
+            return payload
+        cdc = codec_lib.get_codec(codec)
+        dtype = src.unit_dtype(unit)
+        rb = cdc.row_bytes(dtype)
+        if offset % rb or (nbytes % rb and offset + nbytes != full.nbytes):
+            raise codec_lib.CodecError(
+                f"chunk {unit.name}[{offset}:{offset + nbytes}] not aligned "
+                f"to the {codec} codec's {rb}B row granularity — the "
+                "reassembled unit would diverge from an unchunked transfer"
+            )
+        wire = cdc.encode(view, dtype)
+        # single decode (see pull_unit): checksum the decoded bytes at the
+        # source, copy models the wire + destination decode
+        decoded_src = cdc.decode(wire)
+        expected = (
+            checksum_lib.checksum(decoded_src) if self.verify_checksums else 0
+        )
+        payload = decoded_src.copy()  # the wire copy, decoded at the dest
         if self.verify_checksums:
             got = checksum_lib.checksum(payload)
             if got != expected:
                 raise ChecksumError(
-                    f"chunk {unit.name}[{offset}:{offset + nbytes}] from "
-                    f"{src_replica}/shard{shard_idx}: checksum {got:#x} != "
-                    f"expected {expected:#x}"
+                    f"chunk {unit.name}[{offset}:{offset + nbytes}] ({codec}) "
+                    f"from {src_replica}/shard{shard_idx}: decoded checksum "
+                    f"{got:#x} != expected {expected:#x}"
                 )
-        self.bytes_moved += nbytes
+        self.bytes_moved += wire.nbytes
         return payload
 
     def read_interval(
@@ -385,6 +477,7 @@ class LocalTransport:
         tensor: str,
         offset: int,
         nbytes: int,
+        codec: str = "raw",
     ) -> np.ndarray:
         """Pull one striped byte range of a reshard plan.
 
@@ -392,7 +485,17 @@ class LocalTransport:
         at interval granularity; the source checksums the range at read
         time and the reader re-verifies after the wire copy — the same
         end-to-end transit protection, scoped to the interval (4.6).
+
+        Interval reads are raw-only in this revision: intervals slice
+        tensors at arbitrary byte offsets, which cannot be aligned to a
+        quantization row grid, so a non-raw negotiation is rejected
+        explicitly rather than allowed to corrupt bytes.
         """
+        if codec != "raw":
+            raise codec_lib.CodecError(
+                f"resharded interval reads are raw-only; refusing negotiated "
+                f"codec {codec!r} for {tensor}[{offset}:{offset + nbytes}]"
+            )
         src = self.registry.get(src_replica, src_shard)
         view = src.read_range(tensor, offset, nbytes)
         expected = checksum_lib.checksum(view) if self.verify_checksums else 0

@@ -17,6 +17,8 @@ import collections
 import dataclasses
 import itertools
 import math
+import warnings
+import weakref
 from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
 from repro.core import failover as failover_lib
@@ -24,6 +26,7 @@ from repro.core.errors import StaleHandleError, TensorHubError
 from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
 from repro.core.oplog import OpLog
 from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
+from repro.transfer import codec as codec_lib
 from repro.transfer.engine import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW
 from repro.transfer.hardware import CLUSTER, ClusterHW
 from repro.transfer.simnet import FlowKilled, Link, SimEnv, SimEvent, SimNetwork
@@ -167,7 +170,7 @@ class SimCluster:
         pipeline_replication: bool = True,
         smart_skipping: bool = True,
         control_latency: Optional[float] = None,
-        tcp_compression: float = 1.0,
+        tcp_compression: Optional[float] = None,
         window: int = DEFAULT_WINDOW,
         chunk_bytes: Optional[float] = DEFAULT_CHUNK_BYTES,
         tcp_streams: int = 1,
@@ -175,12 +178,48 @@ class SimCluster:
         scheduler: str = "least_loaded",
         work_stealing: bool = True,
         swarm: bool = True,
+        wan_codec: Optional[str] = None,
+        codec_dtype: str = "float32",
         log: Optional[OpLog] = None,
     ) -> None:
-        #: cross-DC wire-byte multiplier: int8 quantization (kernels/quant)
-        #: moves q(int8) + per-1024 f32 scales = x0.2539 of bf16 bytes at
-        #: <1% relative error (beyond-paper; EXPERIMENTS.md Perf)
-        self.tcp_compression = tcp_compression
+        #: DEPRECATED — ``tcp_compression`` was a hand-set cross-DC
+        #: wire-byte scalar whose docstring claimed the int8 ratio while
+        #: the default (1.0) compressed nothing. Wire bytes are now
+        #: derived from the *negotiated codec*'s actual size formula
+        #: (``wan_codec``, default "int8"; see repro.transfer.codec).
+        #: Passing the legacy knob preserves the old byte accounting
+        #: EXACTLY: the scalar is applied to every WAN TCP flow —
+        #: including resharded interval flows, which codec negotiation
+        #: keeps raw — and codec-based negotiation is disabled (raw)
+        #: unless ``wan_codec`` is also passed explicitly. A fixed-ratio
+        #: codec (``wan_codec="fixed:<r>"``) is the non-deprecated way to
+        #: model a flat ratio on same-layout WAN pulls.
+        self._legacy_tcp_compression: Optional[float] = None
+        if tcp_compression is not None:
+            warnings.warn(
+                "SimCluster(tcp_compression=...) is deprecated; pass "
+                'wan_codec="fixed:<ratio>" (or the default "int8") instead',
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if tcp_compression < 1.0:
+                self._legacy_tcp_compression = float(tcp_compression)
+            if wan_codec is None:
+                wan_codec = "raw"
+        if wan_codec is None:
+            wan_codec = "int8"
+        #: wire codec the server negotiates for WAN-crossing slices
+        self.wan_codec = wan_codec
+        #: element dtype the fluid simulator assumes when computing a
+        #: codec's wire ratio (real manifests carry per-tensor dtypes;
+        #: sim manifests are size-only stand-ins for float weights)
+        self.codec_dtype = codec_dtype
+        #: deprecated alias, kept readable for legacy callers
+        self.tcp_compression = 1.0 if tcp_compression is None else tcp_compression
+        #: (codec, id(manifest)) -> ratio; entries are evicted by a
+        #: weakref finalizer when the manifest is collected, so the cache
+        #: neither pins dead replicas' manifests nor outlives id reuse
+        self._ratio_cache: Dict[Tuple[str, int], float] = {}
         #: windowed data plane: concurrent unit flows per destination shard
         #: (RDMA/PCIe paths); units above ``chunk_bytes`` are split into
         #: sub-unit byte-range flows. ``window=1`` + ``chunk_bytes=None``
@@ -214,6 +253,10 @@ class SimCluster:
             chunk_hint=(
                 self.chunk_bytes if self.chunk_bytes is not None else math.inf
             ),
+            # wire codec for WAN-crossing slices (repro.transfer.codec):
+            # the sim derives fluid wire bytes from the negotiated
+            # codec's size formula per manifest (codec_ratio below)
+            wan_codec=wan_codec,
             # fault tolerance: replayable op log; crash_and_recover()
             # rebuilds a bit-identical controller from it mid-run
             log=log,
@@ -291,6 +334,28 @@ class SimCluster:
         )
         self.replicas[name] = rep
         return rep
+
+    # -- wire codecs (fluid byte accounting) ---------------------------------------
+
+    def codec_ratio(self, codec: str, manifest: ShardManifest) -> float:
+        """Wire-bytes / payload-bytes multiplier of ``codec`` over one
+        shard manifest, from the codec's actual size formula (sim
+        manifests are size-only, so elements are assumed ``codec_dtype``).
+        Cached per (codec, manifest); a finalizer drops the entry when
+        the manifest is garbage collected (id reuse is impossible while
+        the entry exists, and churning replicas don't grow the cache)."""
+        key = (codec, id(manifest))
+        hit = self._ratio_cache.get(key)
+        if hit is not None:
+            return hit
+        ratio = codec_lib.wire_ratio(
+            codec_lib.get_codec(codec),
+            (u.nbytes for u in manifest.units),
+            self.codec_dtype,
+        )
+        self._ratio_cache[key] = ratio
+        weakref.finalize(manifest, self._ratio_cache.pop, key, None)
+        return ratio
 
     # -- failure injection ------------------------------------------------------------
 
@@ -527,6 +592,7 @@ class SimShard:
         nbytes: float,
         transport: str,
         dest_name: str,
+        codec: str = "raw",
     ) -> SimEvent:
         cluster = self.rep.cluster
         src_w = cluster.worker(src_replica, src_shard)
@@ -542,8 +608,19 @@ class SimShard:
         else:
             links = [src_w.up, dst_w.down]
             cap = hw.tensorhub_rdma_eff * hw.rdma_per_shard
-        if transport == "tcp" and cluster.tcp_compression < 1.0:
-            nbytes = nbytes * cluster.tcp_compression
+        legacy = cluster._legacy_tcp_compression
+        if legacy is not None and transport == "tcp":
+            # deprecated tcp_compression scalar: the pre-codec behavior
+            # verbatim — every WAN TCP flow scaled, resharded interval
+            # flows included (codec negotiation keeps those raw)
+            nbytes = nbytes * legacy
+        elif codec != "raw":
+            # the negotiated wire codec moves fewer (or framed) bytes; the
+            # multiplier comes from the codec's size formula over this
+            # shard's manifest, not a hand-set scalar
+            nbytes = nbytes * cluster.codec_ratio(
+                codec, self.rep.manifest_for(self.idx)
+            )
         tag = f"{src_replica}/s{src_shard}->{dest_name}/s{self.idx}"
         return cluster.net.flow(
             nbytes, links, rate_cap=cap, latency=hw.unit_latency, tag=tag
@@ -653,6 +730,7 @@ class SimShard:
         units = manifest.units
         source = assignment.source
         transport = assignment.transport
+        codec = assignment.codec
         done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
         while done < len(units):
             if self.dead:
@@ -663,7 +741,8 @@ class SimShard:
             for i in range(done, avail):
                 try:
                     yield self._flow_for_bytes(
-                        source, self.idx, units[i].nbytes, transport, dest
+                        source, self.idx, units[i].nbytes, transport, dest,
+                        codec=codec,
                     )
                 except FlowKilled:
                     if self.dead:
@@ -860,7 +939,8 @@ class SimShard:
                 return
             try:
                 yield self._flow_for_bytes(
-                    sl.source, self.idx, t.nbytes, sl.transport, dest
+                    sl.source, self.idx, t.nbytes, sl.transport, dest,
+                    codec=sl.codec,
                 )
             except FlowKilled:
                 slots.release()
@@ -903,9 +983,19 @@ class SimShard:
         """Striped cross-layout pull in virtual time: real planner, fluid
         bytes. Each interval flows over the *owning* source shard's NIC,
         so bandwidth aggregates across all source shards exactly as the
-        byte accounting says it should."""
+        byte accounting says it should.
+
+        Interval reads are raw-only (byte offsets cannot sit on a
+        quantization row grid): a non-raw negotiation is rejected
+        explicitly, mirroring the threaded plane."""
         from repro.resharding import layout_from_manifests, plan_shard
 
+        bad = codec_lib.slice_codecs(assignment) - {"raw"}
+        if bad:
+            raise TensorHubError(
+                f"resharded pull of {dest}: assignment negotiated non-raw "
+                f"codec(s) {sorted(bad)}; interval reads are raw-only"
+            )
         env = self.env
         version = assignment.version
         src_n = assignment.source_shards

@@ -104,8 +104,8 @@ class TestSimTensorHub:
         assert e1.triggered and e1.error is None
         assert cl.server.stats["reassignments"] >= 1 or True  # rerouted or direct
 
-    def test_cross_dc_single_seed(self):
-        cl = SimCluster()
+    def _cross_dc_wan_bytes(self, **kw):
+        cl = SimCluster(**kw)
         units = [GB] * 10
         tr = cl.add_replica("m", "tr", 2, datacenter="dc0", unit_bytes=units)
         ros = [
@@ -121,9 +121,32 @@ class TestSimTensorHub:
         for r in ros:
             r.replicate("latest")
         cl.run()
-        # exactly one replica's worth of bytes crossed the DC boundary
-        vpc_up = sum(b for n, b in cl.net.link_bytes.items() if ":vpc_up" in n)
+        return cl, sum(b for n, b in cl.net.link_bytes.items() if ":vpc_up" in n)
+
+    def test_cross_dc_single_seed(self):
+        # exactly one replica's worth of bytes crosses the DC boundary;
+        # with codec="raw" the wire bytes are the weight bytes bit-for-bit
+        _, vpc_up = self._cross_dc_wan_bytes(wan_codec="raw")
         assert math.isclose(vpc_up, 10 * GB * 2, rel_tol=1e-6)  # 2 shards x 10 units
+
+    def test_cross_dc_single_seed_int8_wire(self):
+        # default negotiation: WAN-crossing slices carry the int8 codec,
+        # and the sim derives wire bytes from the codec's actual ratio
+        # over the shard manifest — not a hand-set scalar
+        from repro.transfer.codec import get_codec, wire_ratio
+
+        cl, vpc_up = self._cross_dc_wan_bytes()
+        ratio = wire_ratio(get_codec("int8"), [int(GB)] * 10, cl.codec_dtype)
+        assert ratio < 0.26  # ~0.2539 for float32 elements
+        assert math.isclose(vpc_up, 10 * GB * 2 * ratio, rel_tol=1e-6)
+
+    def test_tcp_compression_deprecated_alias(self):
+        # the legacy scalar still works (as a fixed-ratio codec) but warns
+        import pytest
+
+        with pytest.warns(DeprecationWarning):
+            _, vpc_up = self._cross_dc_wan_bytes(tcp_compression=0.5)
+        assert math.isclose(vpc_up, 10 * GB * 2 * 0.5, rel_tol=1e-6)
 
 
 def _fanout(n_dest, m_src, units, **kw):
