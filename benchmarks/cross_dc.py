@@ -22,12 +22,22 @@ pre-codec byte counts bit-for-bit.
 
 from __future__ import annotations
 
-import sys
+import json
 from typing import Dict, List
 
 from repro.configs.paper_workloads import WORKLOADS
 from repro.transfer.hardware import CLUSTER
 from repro.transfer.simcluster import SimCluster
+
+try:
+    from benchmarks import harness
+except ImportError:  # invoked directly: benchmarks/ itself is sys.path[0]
+    import harness
+
+#: Chrome trace-event JSON of one threaded cross-DC int8 pull
+#: (chrome://tracing / https://ui.perfetto.dev); CI uploads it as an
+#: artifact next to the ``--json`` results
+TRACE_PATH = "cross_dc_trace.json"
 
 W = WORKLOADS["9B"]
 N_STANDALONE = W.standalone_gpus // W.num_shards  # 4 replicas x 2 shards
@@ -70,7 +80,8 @@ def tensorhub_cross_dc(
     for r in rollouts:
         for s in r.shards:
             s.worker.total_stall = 0.0
-    vpc_before = {k: v for k, v in cl.net.link_bytes.items()}
+            s.worker.stall_parts.clear()
+    vpc_before = cl.link_class_bytes().get("vpc_up", 0.0)
     for t in trainers:
         t.publish(1)
     cl.run()
@@ -97,15 +108,12 @@ def tensorhub_cross_dc(
     assert all(done.values()), f"rollouts did not converge: {done}"
     names = [f"ro{i}" for i in range(N_STANDALONE)]
     per = cl.per_worker_stalls(names)
-    vpc = sum(
-        b - vpc_before.get(name, 0.0)
-        for name, b in cl.net.link_bytes.items()
-        if ":vpc_up" in name
-    )
+    vpc = cl.link_class_bytes().get("vpc_up", 0.0) - vpc_before
     return {
         "total_stall": sum(per),
         "per_gpu": sorted(round(p, 2) for p in per),
         "cross_dc_bytes": vpc,
+        "stall_parts": cl.stall_decomposition(names),
     }
 
 
@@ -147,7 +155,7 @@ def swarm_cold_fanin(*, swarm: bool) -> Dict[str, object]:
         events.append(ev)
     cl.run(until=120.0)
     assert all(e.triggered and e.error is None for e in events)
-    wan = sum(b for name, b in cl.net.link_bytes.items() if ":vpc_up" in name)
+    wan = cl.link_class_bytes().get("vpc_up", 0.0)
     return {
         "makespan_s": max(finish.values()) - t0,
         "cross_dc_bytes": wan,
@@ -190,6 +198,8 @@ def codec_parity() -> Dict[str, object]:
         }
         total = sum(v.nbytes for v in tensors.values())
         moved: Dict[str, int] = {}
+        decoded: Dict[str, int] = {}
+        classes: Dict[str, List[str]] = {}
         max_rel = 0.0
         raw_exact = False
         for codec in ("raw", "int8"):
@@ -201,11 +211,21 @@ def codec_parity() -> Dict[str, object]:
             r = hub.open("m", "r", 1, 0, datacenter="dc1")
             r.register({k: np.zeros_like(v) for k, v in tensors.items()})
             r.replicate(0)
-            moved[codec] = hub.transport.bytes_moved
+            # per-link-class byte counters, not hand-rolled arithmetic:
+            # the cross-DC pull rides the WAN TCP slice ("vpc_up"),
+            # wire bytes on the link vs bytes after decode
+            moved[codec] = int(sum(hub.transport.wire_bytes.values()))
+            decoded[codec] = int(sum(hub.transport.decoded_bytes.values()))
+            classes[codec] = sorted(hub.transport.wire_bytes)
+            assert hub.transport.bytes_moved == moved[codec]
             if codec == "raw":
-                raw_exact = moved["raw"] == total and all(
-                    np.array_equal(r.store.get(k).view(np.uint8), v.view(np.uint8))
-                    for k, v in tensors.items()
+                raw_exact = (
+                    moved["raw"] == total
+                    and decoded["raw"] == total
+                    and all(
+                        np.array_equal(r.store.get(k).view(np.uint8), v.view(np.uint8))
+                        for k, v in tensors.items()
+                    )
                 )
             else:
                 for k, v in tensors.items():
@@ -220,6 +240,47 @@ def codec_parity() -> Dict[str, object]:
         row[f"{tag}_reduction_x"] = round(moved["raw"] / moved["int8"], 2)
         row[f"{tag}_max_rel_err"] = round(max_rel, 5)
         row[f"{tag}_raw_bit_exact"] = raw_exact
+        row[f"{tag}_wire_ratio"] = moved["int8"] / decoded["int8"]
+        row[f"{tag}_link_classes"] = classes["int8"]
+    return row
+
+
+def threaded_stall_demo(trace_path: str = TRACE_PATH) -> Dict[str, object]:
+    """One real cross-DC int8 shard pull on the threaded data plane with
+    the telemetry recorder on: the per-replica pull timeline goes out as
+    Chrome trace-event JSON and the recorder's stall counters decompose
+    the replicate() wall time into plan_wait / wire / decode / verify /
+    control — the components must tile the end-to-end stall within 5%."""
+    import numpy as np
+
+    from repro.core import ReferenceServer, TensorHubClient
+    from repro.obs import Recorder, stall_breakdown, write_chrome_trace
+
+    rec = Recorder()
+    hub = TensorHubClient(
+        ReferenceServer(wan_codec="int8"), recorder=rec, window=1, chunk_bytes=None
+    )
+    rng = np.random.RandomState(1)
+    tensors = {
+        f"w{i}": (rng.randn(1 << 21) * 2).astype(np.float32) for i in range(4)
+    }  # 4 x 8 MB units
+    pub = hub.open("m", "pub", 1, 0, datacenter="dc0")
+    pub.register(tensors)
+    pub.publish(0)
+    r = hub.open("m", "r", 1, 0, datacenter="dc1")
+    r.register({k: np.zeros_like(v) for k, v in tensors.items()})
+    rec.clear()  # measure the pull only, not registration/publish
+    t0 = rec.clock()
+    r.replicate(0)
+    wall = rec.clock() - t0
+    write_chrome_trace(rec, trace_path)
+    row: Dict[str, object] = {
+        "system": "threaded-stall-demo (int8 pull)",
+        "wall_s": round(wall, 4),
+        "spans": len(rec.events),
+        "trace": trace_path,
+    }
+    row.update(harness.decomposition_cols(stall_breakdown(rec), digits=4))
     return row
 
 
@@ -231,11 +292,15 @@ def run(quick: bool = False) -> List[Dict]:
     th = tensorhub_cross_dc(offload_seeding=False)
     th_q = tensorhub_cross_dc(offload_seeding=False, wan_codec="int8")
     ucx = ucx_cross_dc()
+    th_row = {"system": "tensorhub", **_fmt(th)}
+    th_row["stall_total_s"] = round(th["total_stall"], 3)
+    th_row.update(harness.decomposition_cols(th["stall_parts"]))
     rows = [
         {"system": "ucx-tcp", **_fmt(ucx)},
-        {"system": "tensorhub", **_fmt(th)},
+        th_row,
         {"system": "tensorhub+int8-wire (beyond-paper)", **_fmt(th_q)},
         codec_parity(),
+        threaded_stall_demo(),
     ]
     if not quick:
         th_off = tensorhub_cross_dc(offload_seeding=True)
@@ -258,6 +323,9 @@ def _fmt(d: Dict) -> Dict:
         "total_stall_s": round(d["total_stall"], 2),
         "per_gpu_s": d["per_gpu"],
         "cross_dc_gb": round(d["cross_dc_bytes"] / 1e9, 1),
+        # unrounded twin of cross_dc_gb: the sim-vs-threaded codec-ratio
+        # parity check needs more precision than the display column
+        "cross_dc_bytes": d["cross_dc_bytes"],
     }
 
 
@@ -334,21 +402,61 @@ def validate(rows: List[Dict]) -> List[str]:
         f"cross-DC traffic {th['cross_dc_gb']} GB vs UCX {ucx['cross_dc_gb']} GB "
         f"({traffic:.0f}x less) -> {'OK' if traffic >= 3.5 else 'MISMATCH'}"
     )
+    # stall-time decomposition tiles the end-to-end stall in BOTH planes
+    checks.append(
+        harness.check_decomposition(
+            "sim warm transition",
+            {k: th[f"{k}_s"] for k in harness.STALL_COMPONENTS},
+            th["stall_total_s"],
+        )
+    )
+    demo = by_sys.get("threaded-stall-demo (int8 pull)")
+    if demo is not None:
+        checks.append(
+            harness.check_decomposition(
+                "threaded int8 pull",
+                {k: demo[f"{k}_s"] for k in harness.STALL_COMPONENTS},
+                demo["wall_s"],
+            )
+        )
+        checks.append(_check_trace(demo["trace"]))
+    # counter-based byte parity: the sim's codec-derived WAN reduction and
+    # the threaded plane's real wire/decoded counter ratio agree
+    if th_q is not None and parity is not None:
+        sim_ratio = th_q["cross_dc_bytes"] / th["cross_dc_bytes"]
+        thr_ratio = parity["f32_wire_ratio"]
+        dev = abs(thr_ratio - sim_ratio) / sim_ratio
+        cls_ok = parity["f32_link_classes"] == ["vpc_up"]
+        checks.append(
+            f"sim-vs-threaded int8 wire-byte parity: sim vpc_up ratio "
+            f"{sim_ratio:.4f} vs threaded wire/decoded {thr_ratio:.4f} "
+            f"({dev * 100:.2f}% apart, required < 2%; link classes "
+            f"{parity['f32_link_classes']}) -> "
+            f"{'OK' if dev < 0.02 and cls_ok else 'MISMATCH'}"
+        )
     return checks
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    rows = run(quick=quick)
-    for r in rows:
-        print(r)
-    bad = 0
-    for c in validate(rows):
-        print("  " + c)
-        bad += "MISMATCH" in c
-    if quick:
-        raise SystemExit(1 if bad else 0)
+def _check_trace(path: str) -> str:
+    """The exported trace must survive a json.loads round-trip with
+    integer, monotonically ordered timestamps (Chrome trace-event)."""
+    try:
+        with open(path) as fh:
+            data = json.loads(fh.read())
+        xs = [e for e in data["traceEvents"] if e["ph"] == "X"]
+        ok = (
+            len(xs) > 0
+            and all(isinstance(e["ts"], int) and isinstance(e["dur"], int) for e in xs)
+            and all(a["ts"] <= b["ts"] for a, b in zip(xs, xs[1:]))
+        )
+        detail = f"{len(xs)} spans"
+    except (OSError, KeyError, ValueError) as exc:
+        ok, detail = False, f"unreadable: {exc}"
+    return (
+        f"chrome trace {path}: valid JSON, monotonic integer ts ({detail}) -> "
+        f"{'OK' if ok else 'MISMATCH'}"
+    )
 
 
 if __name__ == "__main__":
-    main()
+    harness.bench_main("cross_dc", run, validate)

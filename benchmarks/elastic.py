@@ -18,12 +18,16 @@ none. ``swarm=False`` reproduces the PR 2 scheduler bit-for-bit (the
 
 from __future__ import annotations
 
-import sys
 from typing import Dict, List
 
 from repro.configs.paper_workloads import WORKLOADS
 from repro.transfer.hardware import CLUSTER
 from repro.transfer.simcluster import SimCluster
+
+try:
+    from benchmarks import harness
+except ImportError:  # invoked directly: benchmarks/ itself is sys.path[0]
+    import harness
 
 W = WORKLOADS["260B"]
 ELASTIC_COUNTS = [1, 2, 3, 6]
@@ -67,6 +71,8 @@ def tensorhub_elastic(n_elastic: int, *, swarm: bool = True) -> Dict[str, object
         "mean_stall": sum(per) / len(per),
         "max_stall": max(per),
         "cdf": sorted(round(p, 2) for p in per),
+        "stall_parts": cl.stall_decomposition(names),
+        "stall_total": sum(per),
     }
 
 
@@ -94,18 +100,19 @@ def run(quick: bool = False) -> List[Dict]:
         th = tensorhub_elastic(n)
         pr2 = tensorhub_elastic(n, swarm=False)
         ucx = ucx_elastic(n)
-        rows.append(
-            {
-                "elastic_replicas": n,
-                "tensorhub_mean_s": round(th["mean_stall"], 2),
-                "tensorhub_max_s": round(th["max_stall"], 2),
-                "pr2_mean_s": round(pr2["mean_stall"], 2),
-                "pr2_max_s": round(pr2["max_stall"], 2),
-                "ucx_mean_s": round(ucx["mean_stall"], 2),
-                "ucx_max_s": round(ucx["max_stall"], 2),
-                "speedup_mean": round(ucx["mean_stall"] / th["mean_stall"], 1),
-            }
-        )
+        row = {
+            "elastic_replicas": n,
+            "tensorhub_mean_s": round(th["mean_stall"], 2),
+            "tensorhub_max_s": round(th["max_stall"], 2),
+            "pr2_mean_s": round(pr2["mean_stall"], 2),
+            "pr2_max_s": round(pr2["max_stall"], 2),
+            "ucx_mean_s": round(ucx["mean_stall"], 2),
+            "ucx_max_s": round(ucx["max_stall"], 2),
+            "speedup_mean": round(ucx["mean_stall"] / th["mean_stall"], 1),
+            "stall_total_s": round(th["stall_total"], 3),
+        }
+        row.update(harness.decomposition_cols(th["stall_parts"]))
+        rows.append(row)
     return rows
 
 
@@ -235,21 +242,16 @@ def validate(rows: List[Dict]) -> List[str]:
         f"dynamic membership (join x4, preempt x1 over 6 steps): per-step max "
         f"stall {dyn['per_step_max']} -> {'OK' if flat else 'MISMATCH'}"
     )
+    last = rows[-1]
+    checks.append(
+        harness.check_decomposition(
+            f"{last['elastic_replicas']} elastics",
+            {k: last[f"{k}_s"] for k in harness.STALL_COMPONENTS},
+            last["stall_total_s"],
+        )
+    )
     return checks
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    rows = run(quick=quick)
-    for r in rows:
-        print(r)
-    bad = 0
-    for c in validate(rows):
-        print("  " + c)
-        bad += "MISMATCH" in c
-    if quick:
-        raise SystemExit(1 if bad else 0)
-
-
 if __name__ == "__main__":
-    main()
+    harness.bench_main("elastic", run, validate)

@@ -15,7 +15,6 @@ Two questions the tentpole must answer quantitatively:
 from __future__ import annotations
 
 import os
-import sys
 import tempfile
 import time
 from typing import Dict, List, Optional
@@ -23,6 +22,11 @@ from typing import Dict, List, Optional
 from repro.core import ReferenceServer, failover
 from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
 from repro.core.oplog import OpLog
+
+try:
+    from benchmarks import harness
+except ImportError:  # invoked directly: benchmarks/ itself is sys.path[0]
+    import harness
 
 N_UNITS = 32
 #: overhead bench uses a production-shaped manifest: a 70B-class shard
@@ -171,6 +175,7 @@ def bench_recovery(histories: List[int]) -> List[Dict]:
         rec2 = failover.recover(log)
         snap_s = time.perf_counter() - t0
         assert failover.state_digest(rec2) == failover.state_digest(s)
+        gauges = rec2.metrics()["gauges"]
         rows.append(
             {
                 "bench": "recovery",
@@ -178,6 +183,11 @@ def bench_recovery(histories: List[int]) -> List[Dict]:
                 "replay_ms": round(replay_s * 1e3, 2),
                 "snapshot_ms": round(snap_s * 1e3, 2),
                 "speedup": round(replay_s / snap_s, 1) if snap_s > 0 else float("inf"),
+                # the server's own view of the same recovery, via metrics()
+                "gauge_recovery_ms": round(
+                    gauges["failover_last_recovery_seconds"] * 1e3, 2
+                ),
+                "oplog_avg_batch": round(gauges["oplog_avg_batch"], 1),
             }
         )
     return rows
@@ -235,21 +245,19 @@ def validate(rows: List[Dict]) -> List[str]:
             f"history (required: sublinear) -> "
             f"{'OK' if ratio < hist_ratio else 'MISMATCH'}"
         )
+    # the recovered server's own gauge agrees with the external stopwatch
+    # (the gauge is set inside recover(), so it can only be <= ours)
+    gauge_ok = all(
+        0.0 < r["gauge_recovery_ms"] <= r["snapshot_ms"] * 1.01 + 0.01 for r in rec
+    )
+    checks.append(
+        f"metrics() failover_last_recovery_seconds matches the measured "
+        f"recovery ({[r['gauge_recovery_ms'] for r in rec]}ms vs "
+        f"{[r['snapshot_ms'] for r in rec]}ms) -> "
+        f"{'OK' if gauge_ok else 'MISMATCH'}"
+    )
     return checks
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    rows = run(quick=quick)
-    for r in rows:
-        print(r)
-    bad = 0
-    for c in validate(rows):
-        print("  " + c)
-        bad += "MISMATCH" in c
-    if quick:
-        raise SystemExit(1 if bad else 0)
-
-
 if __name__ == "__main__":
-    main()
+    harness.bench_main("failover", run, validate)

@@ -25,11 +25,15 @@ bound (in-progress replicas relay).
 
 from __future__ import annotations
 
-import sys
 from typing import Dict, List, Optional, Sequence
 
 from repro.transfer.hardware import CLUSTER
 from repro.transfer.simcluster import SimCluster
+
+try:
+    from benchmarks import harness
+except ImportError:  # invoked directly: benchmarks/ itself is sys.path[0]
+    import harness
 
 GB = 1e9
 SHARDS = 2
@@ -98,11 +102,14 @@ def fanout_makespan(
     assert len(finish) == n_dest, f"incomplete fan-out: {sorted(finish)}"
     makespan = max(finish.values()) - t0
     total_bytes = n_dest * sum(units) * SHARDS
+    dest_names = [d.name for d in dests]
     return {
         "makespan_s": makespan,
         "agg_gbps": total_bytes / makespan / GB,
         "multi_assignments": cl.server.stats["multi_source_assignments"],
         "work_steals": cl.server.stats["work_steals"],
+        "stall_parts": cl.stall_decomposition(dest_names),
+        "stall_total": cl.total_stall(dest_names),
     }
 
 
@@ -126,6 +133,8 @@ def run(quick: bool = False) -> List[Dict]:
             "multi": r["multi_assignments"],
             "steals": r["work_steals"],
             **{k: v for k, v in kw.items() if k in ("window", "max_sources")},
+            "stall_total_s": round(r["stall_total"], 3),
+            **harness.decomposition_cols(r["stall_parts"]),
         }
 
     # swarm=False everywhere legacy parity is asserted: these rows must
@@ -232,21 +241,17 @@ def validate(rows: List[Dict]) -> List[str]:
             f"single 16 GB tensor: sub-unit chunking x{g:.1f} faster "
             f"-> {'OK' if g >= 1.5 else 'MISMATCH'}"
         )
+    for scen in ("multi_8x4", "swarm_8x4"):
+        r = _get(rows, scen)
+        checks.append(
+            harness.check_decomposition(
+                scen,
+                {k: r[f"{k}_s"] for k in harness.STALL_COMPONENTS},
+                r["stall_total_s"],
+            )
+        )
     return checks
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    rows = run(quick=quick)
-    for r in rows:
-        print(r)
-    bad = 0
-    for c in validate(rows):
-        print("  " + c)
-        bad += "MISMATCH" in c
-    if quick:
-        raise SystemExit(1 if bad else 0)
-
-
 if __name__ == "__main__":
-    main()
+    harness.bench_main("fanout", run, validate)

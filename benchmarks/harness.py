@@ -1,0 +1,123 @@
+"""Shared benchmark harness.
+
+Every scenario benchmark (`elastic`, `cross_dc`, `swarm`, `fanout`,
+`failover`, ...) exposes ``run(quick) -> rows`` and ``validate(rows) ->
+checks``; this module owns the previously copy-pasted CLI entry, row /
+check printing, machine-readable JSON emission, and the stall-time
+decomposition reporting added by the telemetry plane.
+
+CLI (per benchmark):
+
+    PYTHONPATH=src python benchmarks/<name>.py [--quick] [--json out.json]
+
+``--json`` writes ``{"name", "rows", "checks", "mismatches",
+"elapsed_s"}`` — the same per-benchmark dict ``benchmarks/run.py --json``
+aggregates for the CI artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.obs.telemetry import STALL_COMPONENTS
+
+
+# -- stall decomposition reporting -----------------------------------------
+
+
+def decomposition_cols(parts: Dict[str, float], *, digits: int = 3) -> Dict[str, float]:
+    """Row columns for a stall decomposition: one ``<component>_s`` per
+    canonical component, rounded for display."""
+    return {f"{k}_s": round(parts.get(k, 0.0), digits) for k in STALL_COMPONENTS}
+
+
+def check_decomposition(
+    label: str, parts: Dict[str, float], total: float, *, tol: float = 0.05
+) -> str:
+    """OK/MISMATCH line asserting the five components tile the
+    end-to-end stall within ``tol`` (relative)."""
+    s = sum(parts.get(k, 0.0) for k in STALL_COMPONENTS)
+    if total <= 0.0:
+        ok = s <= 1e-9
+        rel = 0.0
+    else:
+        rel = abs(s - total) / total
+        ok = rel <= tol
+    detail = " + ".join(
+        f"{k}={parts.get(k, 0.0):.3f}" for k in STALL_COMPONENTS
+    )
+    return (
+        f"stall decomposition ({label}): {detail} = {s:.3f}s vs "
+        f"end-to-end {total:.3f}s ({rel * 100:.1f}% off, required <= "
+        f"{tol * 100:.0f}%) -> {'OK' if ok else 'MISMATCH'}"
+    )
+
+
+# -- results emission -------------------------------------------------------
+
+
+def _jsonable(v):
+    try:
+        json.dumps(v)
+        return v
+    except TypeError:
+        if isinstance(v, (list, tuple)):
+            return [_jsonable(x) for x in v]
+        if isinstance(v, dict):
+            return {str(k): _jsonable(x) for k, x in v.items()}
+        try:
+            return float(v)  # numpy scalars
+        except (TypeError, ValueError):
+            return str(v)
+
+
+def result_dict(
+    name: str, rows: List[Dict], checks: Sequence[str], elapsed_s: float
+) -> Dict:
+    return {
+        "name": name,
+        "rows": [_jsonable(r) for r in rows],
+        "checks": list(checks),
+        "mismatches": sum("MISMATCH" in c for c in checks),
+        "elapsed_s": round(elapsed_s, 2),
+    }
+
+
+def write_json(path: str, payload) -> None:
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+
+
+# -- CLI entry (the formerly copy-pasted main()) -----------------------------
+
+
+def bench_main(
+    name: str,
+    run: Callable[..., List[Dict]],
+    validate: Callable[[List[Dict]], List[str]],
+    argv: Optional[Sequence[str]] = None,
+) -> None:
+    args = list(sys.argv[1:] if argv is None else argv)
+    quick = "--quick" in args
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            raise SystemExit("--json requires a path argument")
+        json_path = args[i + 1]
+    t0 = time.time()
+    rows = run(quick=quick)
+    checks = validate(rows)
+    for r in rows:
+        print(r)
+    bad = 0
+    for c in checks:
+        print("  " + c)
+        bad += "MISMATCH" in c
+    if json_path:
+        write_json(json_path, result_dict(name, rows, checks, time.time() - t0))
+    if quick:
+        raise SystemExit(1 if bad else 0)

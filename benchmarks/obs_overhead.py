@@ -1,0 +1,306 @@
+"""Telemetry-plane overhead — the recorder must be ~free when disabled.
+
+The tentpole's contract is that the observability plane is *opt-in*: with
+the shared ``DISABLED`` recorder (the default) every hot-path call site is
+a single ``if rec.enabled`` branch, so the update path must stay within
+2% of a build with no telemetry at all. This bench measures that three
+ways:
+
+* **recorder_ops**: per-op cost of ``span``/``event``/``counter_add`` on
+  an enabled recorder, times the op count one real ``update("latest")``
+  emits. This *projected* cost is the deterministic <2% CI gate — it is
+  immune to scheduler noise.
+* **threaded_update**: end-to-end warm ``update("latest")`` cycles with
+  the recorder toggled per-cycle on a single rig, ABBA block schedule,
+  median of paired block deltas. This validates the projection in situ,
+  but on a shared box the residual noise floor is a few hundred us per
+  16 ms op, so its gate is necessarily looser.
+* **sim**: an identical ``SimCluster`` fan-out run with ``telemetry=True``
+  vs off — spans ride every flow here, so this row bounds the *enabled*
+  cost rather than the disabled one (context, loose gate).
+
+Measurement notes (hard-won): twin disabled/enabled rigs are unusable —
+within-cycle ordering alone swings the delta by +-4 ms (cache pollution
+between back-to-back 12 MB updates). A single rig with a toggled
+``rec.enabled`` still shows a ~1 ms period-2 sawtooth when payload
+tensors are regenerated every cycle (allocator churn), hence the
+pre-built ping-pong payloads. The ABBA schedule cancels linear drift
+and any residual period-2 component within each block.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ReferenceServer, TensorHubClient
+from repro.obs import Recorder
+from repro.transfer.simcluster import SimCluster
+
+try:
+    from benchmarks import harness
+except ImportError:  # invoked directly: benchmarks/ itself is sys.path[0]
+    import harness
+
+N_TENSORS = 2
+ELEMS = 1 << 19  # 2 MB per tensor, f32
+
+
+class _UpdateRig:
+    """One publisher/reader pair on its own server, cycled warm-update
+    style: roll a version, time ``update("latest")`` only. The recorder
+    stays attached for the rig's lifetime; cycles toggle ``enabled``."""
+
+    def __init__(self) -> None:
+        # window=1 / chunk_bytes=None pins the pull to the sequential
+        # data plane (no worker threads): the windowed executor's 20 ms
+        # condition-variable poll quantum swamps a sub-2% comparison
+        # with scheduler noise, while the sequential path is
+        # deterministic copy + checksum work
+        self.rec = Recorder()
+        hub = TensorHubClient(
+            ReferenceServer(), recorder=self.rec, window=1, chunk_bytes=None
+        )
+        rng = np.random.RandomState(0)
+        # two pre-built payload versions, ping-ponged between cycles:
+        # regenerating tensors each cycle churns the allocator into a
+        # period-2 latency sawtooth larger than the telemetry signal
+        self.payloads = [
+            {
+                f"w{i}": rng.randn(ELEMS).astype(np.float32)
+                for i in range(N_TENSORS)
+            }
+            for _ in range(2)
+        ]
+        self.pub = hub.open("m", "pub", 1, 0)
+        self.pub.register(self.payloads[0])
+        self.rdr = hub.open("m", "r", 1, 0)
+        self.rdr.register(
+            {f"w{i}": np.zeros(ELEMS, np.float32) for i in range(N_TENSORS)}
+        )
+        self.pub.publish(0)
+        self.rdr.replicate(0)
+        self.version = 0
+
+    def cycle_us(self, enabled: bool) -> float:
+        self.version += 1
+        self.pub.unpublish()
+        self.pub.store.register(self.payloads[self.version % 2])
+        self.pub.publish(self.version)
+        self.rec.enabled = enabled
+        t0 = time.perf_counter()
+        updated = self.rdr.update("latest")
+        dt = time.perf_counter() - t0
+        assert updated
+        self.rec.enabled = True
+        self.rec.clear()  # bound memory; keeps the recording cost live
+        return dt * 1e6
+
+
+def _abba_delta_us(rig: _UpdateRig, blocks: int) -> Dict[str, object]:
+    """Median paired enabled-minus-disabled delta over ABBA blocks
+    (disabled, enabled, enabled, disabled), plus the raw medians."""
+    deltas: List[float] = []
+    off: List[float] = []
+    on: List[float] = []
+    for _ in range(blocks):
+        ts = []
+        for flag in (False, True, True, False):
+            ts.append(rig.cycle_us(flag))
+        off.extend((ts[0], ts[3]))
+        on.extend((ts[1], ts[2]))
+        deltas.append((ts[1] + ts[2]) / 2 - (ts[0] + ts[3]) / 2)
+    return {
+        "delta_us": _median(deltas),
+        "off_us": _median(off),
+        "on_us": _median(on),
+    }
+
+
+def _recorder_op_ns(reps: int = 50_000) -> Dict[str, float]:
+    """Per-op cost (ns) of the three hot recorder primitives."""
+    rec = Recorder()
+    best: Dict[str, float] = {}
+    for _ in range(3):
+        rec.clear()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            with rec.span("s", track="t"):
+                pass
+        best["span_ns"] = min(
+            best.get("span_ns", float("inf")),
+            (time.perf_counter() - t0) / reps * 1e9,
+        )
+        rec.clear()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            rec.event("e", track="t")
+        best["event_ns"] = min(
+            best.get("event_ns", float("inf")),
+            (time.perf_counter() - t0) / reps * 1e9,
+        )
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            rec.counter_add("c", 1.0)
+        best["counter_ns"] = min(
+            best.get("counter_ns", float("inf")),
+            (time.perf_counter() - t0) / reps * 1e9,
+        )
+    rec.clear()
+    return best
+
+
+def _ops_per_update(rig: _UpdateRig) -> int:
+    """Count recorder ops one enabled update emits: recorded events
+    (spans + instants) plus counter_add calls (counted via a shadowing
+    instance-attribute wrapper, removed afterwards)."""
+    calls = [0]
+    real = rig.rec.counter_add
+
+    def counting(name, value):
+        calls[0] += 1
+        real(name, value)
+
+    rig.rec.counter_add = counting  # type: ignore[method-assign]
+    try:
+        rig.rec.enabled = True
+        rig.version += 1
+        rig.pub.unpublish()
+        rig.pub.store.register(rig.payloads[rig.version % 2])
+        rig.pub.publish(rig.version)
+        rig.rec.clear()
+        assert rig.rdr.update("latest")
+        n = len(rig.rec.events) + calls[0]
+    finally:
+        del rig.rec.counter_add
+        rig.rec.clear()
+    return n
+
+
+def _sim_wall_s() -> float:
+    """One deterministic fan-out run; wall time of the event loop. The
+    grid is sized so the wall is tens of ms — small enough for a smoke
+    job, large enough that scheduler jitter stays a small fraction."""
+    t0 = time.perf_counter()
+    cl = SimCluster(telemetry=getattr(_sim_wall_s, "telemetry", False))
+    units = [1e9] * 32
+    pubs = [cl.add_replica("m", f"pub{i}", 2, unit_bytes=units) for i in range(2)]
+    dests = [cl.add_replica("m", f"dst{i}", 2, unit_bytes=units) for i in range(8)]
+    for r in pubs + dests:
+        r.open()
+    cl.run()
+    pubs[0].publish(0)
+    cl.run()
+    for p in pubs[1:]:
+        p.replicate("latest")
+    cl.run()
+    for d in dests:
+        d.replicate("latest")
+    cl.run()
+    return time.perf_counter() - t0
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def run(quick: bool = False) -> List[Dict]:
+    blocks = 15 if quick else 40
+    sim_repeats = 3 if quick else 5
+    rig = _UpdateRig()
+    for flag in (False, True, False, True, False, True):  # warm everything
+        rig.cycle_us(flag)
+
+    ops = _ops_per_update(rig)
+    op_ns = _recorder_op_ns()
+    # every op is at most a span (the priciest primitive), so ops *
+    # span_ns upper-bounds the recording cost of one update
+    projected_us = ops * op_ns["span_ns"] / 1e3
+
+    abba = _abba_delta_us(rig, blocks)
+
+    sim_runs: Dict[bool, List[float]] = {False: [], True: []}
+    for _ in range(sim_repeats):
+        for tel in (False, True):
+            _sim_wall_s.telemetry = tel
+            sim_runs[tel].append(_sim_wall_s())
+
+    rows: List[Dict] = [
+        {
+            "bench": "recorder_ops",
+            "span_ns": round(op_ns["span_ns"], 1),
+            "event_ns": round(op_ns["event_ns"], 1),
+            "counter_ns": round(op_ns["counter_ns"], 1),
+            "ops_per_update": ops,
+            "projected_add_us": round(projected_us, 2),
+        },
+        {
+            "bench": "threaded_update",
+            "variant": "disabled",
+            "update_us": round(abba["off_us"], 1),
+            "paired_delta_us": 0.0,
+            "overhead_pct": 0.0,
+        },
+        {
+            "bench": "threaded_update",
+            "variant": "enabled",
+            "update_us": round(abba["on_us"], 1),
+            "paired_delta_us": round(abba["delta_us"], 1),
+            # the paired estimate, not the ratio of independent medians:
+            # the per-block delta cancels common-mode load
+            "overhead_pct": round(100.0 * abba["delta_us"] / abba["off_us"], 2),
+        },
+    ]
+    sim_off, sim_on = min(sim_runs[False]), min(sim_runs[True])
+    rows.append(
+        {
+            "bench": "sim_fanout",
+            "wall_off_ms": round(sim_off * 1e3, 1),
+            "wall_on_ms": round(sim_on * 1e3, 1),
+            "overhead_pct": round(100.0 * (sim_on / sim_off - 1.0), 2),
+        }
+    )
+    return rows
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    checks = []
+    ops = next(r for r in rows if r["bench"] == "recorder_ops")
+    by_var = {r["variant"]: r for r in rows if r["bench"] == "threaded_update"}
+    base_us = by_var["disabled"]["update_us"]
+    # the deterministic <2% gate: per-op recorder cost projected onto
+    # the ops one real update emits, vs the measured update time
+    proj_pct = 100.0 * ops["projected_add_us"] / base_us
+    checks.append(
+        f"recorder cost projected onto update path "
+        f"{ops['projected_add_us']}us / {base_us}us = {proj_pct:.3f}% "
+        f"({ops['ops_per_update']} ops @ {ops['span_ns']}ns; required < 2%) -> "
+        f"{'OK' if proj_pct < 2.0 else 'MISMATCH'}"
+    )
+    en = by_var["enabled"]
+    add_us = en["paired_delta_us"]
+    # in-situ tripwire, not the <2% gate (that's the projection above):
+    # the ABBA-paired noise floor on a shared box is still most of a ms
+    # per ~16 ms op, so this only catches gross regressions — e.g. real
+    # work accidentally landing on the disabled branch shows up as +ms
+    ok = en["overhead_pct"] < 5.0 or add_us < 1500.0
+    checks.append(
+        f"recorder-enabled update path end-to-end {en['overhead_pct']}% "
+        f"({add_us:+.1f}us/op paired; gross-regression tripwire, "
+        f"required < 5% or < +1500us) -> {'OK' if ok else 'MISMATCH'}"
+    )
+    sim = next(r for r in rows if r["bench"] == "sim_fanout")
+    checks.append(
+        f"sim telemetry=True wall overhead {sim['overhead_pct']}% "
+        f"(spans on every flow; required < 50%) -> "
+        f"{'OK' if sim['overhead_pct'] < 50.0 else 'MISMATCH'}"
+    )
+    return checks
+
+
+if __name__ == "__main__":
+    harness.bench_main("obs_overhead", run, validate)

@@ -27,10 +27,14 @@ Expected shape of the results:
 from __future__ import annotations
 
 import random
-import sys
 from typing import Dict, List
 
 from repro.transfer.simcluster import SimCluster
+
+try:
+    from benchmarks import harness
+except ImportError:  # invoked directly: benchmarks/ itself is sys.path[0]
+    import harness
 
 GB = 1e9
 SHARDS = 2
@@ -94,6 +98,8 @@ def swarm_fanout(
         "swarm_assignments": cl.server.stats["swarm_assignments"],
         "swarm_grows": cl.server.stats["swarm_grows"],
         "reassignments": cl.server.stats["reassignments"],
+        "stall_parts": cl.stall_decomposition(survivors),
+        "stall_total": cl.total_stall(survivors),
     }
 
 
@@ -106,20 +112,21 @@ def run(quick: bool = False) -> List[Dict]:
             for frac in preempt_rates:
                 for swarm in (False, True):
                     r = swarm_fanout(n, m_src, frac, swarm=swarm)
-                    rows.append(
-                        {
-                            "scenario": f"{n}x{m_src}_p{int(frac * 100)}",
-                            "swarm": swarm,
-                            "n_dest": n,
-                            "m_src": m_src,
-                            "preempt_frac": frac,
-                            "makespan_s": round(r["makespan_s"], 3),
-                            "survivors_done": r["survivors_done"],
-                            "quiesced": r["quiesced"],
-                            "grows": r["swarm_grows"],
-                            "reassigns": r["reassignments"],
-                        }
-                    )
+                    row = {
+                        "scenario": f"{n}x{m_src}_p{int(frac * 100)}",
+                        "swarm": swarm,
+                        "n_dest": n,
+                        "m_src": m_src,
+                        "preempt_frac": frac,
+                        "makespan_s": round(r["makespan_s"], 3),
+                        "survivors_done": r["survivors_done"],
+                        "quiesced": r["quiesced"],
+                        "grows": r["swarm_grows"],
+                        "reassigns": r["reassignments"],
+                        "stall_total_s": round(r["stall_total"], 3),
+                    }
+                    row.update(harness.decomposition_cols(r["stall_parts"]))
+                    rows.append(row)
     return rows
 
 
@@ -177,21 +184,20 @@ def validate(rows: List[Dict]) -> List[str]:
             f"(supply gate: deviation {dev * 100:.1f}%, required < 5%) -> "
             f"{'OK' if dev < 0.05 else 'MISMATCH'}"
         )
+    # stall decomposition tiles end-to-end stall on the busiest swarm cell
+    big = max(
+        (r for r in rows if r["swarm"] and r["preempt_frac"] == 0.0),
+        key=lambda r: r["n_dest"],
+    )
+    checks.append(
+        harness.check_decomposition(
+            big["scenario"],
+            {k: big[f"{k}_s"] for k in harness.STALL_COMPONENTS},
+            big["stall_total_s"],
+        )
+    )
     return checks
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    rows = run(quick=quick)
-    for r in rows:
-        print(r)
-    bad = 0
-    for c in validate(rows):
-        print("  " + c)
-        bad += "MISMATCH" in c
-    if quick:
-        raise SystemExit(1 if bad else 0)
-
-
 if __name__ == "__main__":
-    main()
+    harness.bench_main("swarm", run, validate)

@@ -31,6 +31,7 @@ from repro.core.errors import (
 )
 from repro.core.meta import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW, WorkerInfo
 from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
+from repro.obs import telemetry as obs
 from repro.transfer import checksum as checksum_lib
 from repro.transfer import codec as codec_lib
 from repro.transfer.engine import (
@@ -65,6 +66,15 @@ class _SourceLost(Exception):
 _PullTask = collections.namedtuple("_PullTask", "unit offset nbytes owner")
 
 
+def _link_class(source: str, transport: str) -> str:
+    """Link class for byte accounting, aligned with the simulator's link
+    tags: WAN-negotiated TCP slices ride the VPC gateway, offload twins
+    the PCIe bus, everything else the RDMA fabric."""
+    if source.endswith("@offload"):
+        return "pcie"
+    return "vpc_up" if transport == "tcp" else "rdma"
+
+
 #: re-exported for callers that imported it from here historically
 from repro.core.meta import dtype_from_str  # noqa: E402
 
@@ -82,10 +92,16 @@ class TensorHubClient:
         window: int = DEFAULT_WINDOW,
         chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
         failover_timeout: float = 30.0,
+        recorder: Optional[obs.Recorder] = None,
     ) -> None:
         self.server = server
         self.registry = registry or WorkerRegistry()
-        self.transport = transport or LocalTransport(self.registry)
+        #: telemetry recorder shared with the transport; disabled by
+        #: default so the hot paths stay allocation-free
+        self.recorder = obs.DISABLED if recorder is None else recorder
+        self.transport = transport or LocalTransport(
+            self.registry, recorder=self.recorder
+        )
         self.clock = clock
         #: data-plane knobs inherited by every handle opened through this
         #: client: concurrent unit fetches per shard, and the sub-unit
@@ -112,12 +128,34 @@ class TensorHubClient:
         then retries there. Retrying across the crash is safe because
         every control-plane op is idempotent under re-delivery (group ops
         return their cached result; progress reports are max-based)."""
-        while True:
-            srv = self.server
-            try:
-                return getattr(srv, method)(*args, **kwargs)
-            except ServerUnavailableError:
-                self._await_failover(srv)
+        rec = self.recorder
+        if not rec.enabled:
+            while True:
+                srv = self.server
+                try:
+                    return getattr(srv, method)(*args, **kwargs)
+                except ServerUnavailableError:
+                    self._await_failover(srv)
+        t0 = rec.clock()
+        try:
+            while True:
+                srv = self.server
+                try:
+                    return getattr(srv, method)(*args, **kwargs)
+                except ServerUnavailableError:
+                    self._await_failover(srv)
+        finally:
+            rec.counter_add(obs.CTR_CONTROL, rec.clock() - t0)
+
+    def _wait(self, timeout: float = _POLL) -> None:
+        """Park on the client condition; accounted as plan-wait stall."""
+        rec = self.recorder
+        if not rec.enabled:
+            self._cv.wait(timeout)
+            return
+        t0 = rec.clock()
+        self._cv.wait(timeout)
+        rec.counter_add(obs.CTR_PLAN_WAIT, rec.clock() - t0)
 
     def _await_failover(self, crashed: ReferenceServer) -> None:
         deadline = time.monotonic() + self.failover_timeout
@@ -127,6 +165,8 @@ class TensorHubClient:
                     "controller down and no failover server installed "
                     f"within {self.failover_timeout}s"
                 )
+            # plain cv wait: call() is already timing this parked period
+            # as control-plane stall, so don't also count it as plan-wait
             self._cv.wait(_POLL)
 
     def failover(self, new_server: ReferenceServer) -> None:
@@ -484,18 +524,28 @@ class ShardHandle:
     # -- Table 2: publish / unpublish --------------------------------------------
 
     def publish(self, version: int) -> None:
-        # publishing vouches for every registered byte: lift any watermark
-        # a previously aborted pull left on the store
-        self.store.serving_prefix = None
-        manifest = self.store.build_manifest(with_checksums=self.with_checksums)
-        op = self._next_op()
-        with self._cv:
-            self._scall(
-                "publish",
-                self.model, self.replica, self.shard_idx, version, manifest, op_id=op
-            )
-        self.current_version = version
-        self._publish_op = (version, op)
+        rec = self.client.recorder
+        sp = (
+            rec.span("publish", track=self.worker.worker_id, version=version)
+            if rec.enabled
+            else None
+        )
+        try:
+            # publishing vouches for every registered byte: lift any
+            # watermark a previously aborted pull left on the store
+            self.store.serving_prefix = None
+            manifest = self.store.build_manifest(with_checksums=self.with_checksums)
+            op = self._next_op()
+            with self._cv:
+                self._scall(
+                    "publish",
+                    self.model, self.replica, self.shard_idx, version, manifest, op_id=op
+                )
+            self.current_version = version
+            self._publish_op = (version, op)
+        finally:
+            if sp is not None:
+                sp.end()
 
     def unpublish(self) -> None:
         op = self._next_op()
@@ -531,7 +581,7 @@ class ShardHandle:
             while not self._scall("finish_unpublish", self.model, self.replica):
                 if deadline is not None and time.monotonic() > deadline:
                     raise TensorHubError(f"{self.replica}: drain timed out")
-                self._cv.wait(_POLL)
+                self.client._wait(_POLL)
 
     # -- Table 2: replicate / update ----------------------------------------------
 
@@ -540,6 +590,12 @@ class ShardHandle:
         the version exists. Returns the absolute version fetched."""
         op = self._next_op()
         deadline = None if timeout is None else time.monotonic() + timeout
+        rec = self.client.recorder
+        sp = (
+            rec.span("replicate", track=self.worker.worker_id)
+            if rec.enabled
+            else None
+        )
         try:
             with self._cv:
                 self._inflight = ("replicate", version, op, None)
@@ -552,23 +608,28 @@ class ShardHandle:
                         raise VersionUnavailableError(
                             f"{self.model} {version!r}: not published within timeout"
                         )
-                    self._cv.wait(_POLL)
+                    self.client._wait(_POLL)
                     assignment = self._scall("redeem", self.model, self.replica, op_id=op)
                 # pin the in-flight op to the RESOLVED version: "latest"
                 # may resolve differently on a recovered server, and a
                 # reassert must restore the version this pull is pulling
                 self._inflight = ("replicate", version, op, assignment.version)
+            self._note_assignment(assignment)
             self._pull(assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
             self.current_version = assignment.version
         finally:
             with self._cv:
                 self._inflight = None
+            if sp is not None:
+                sp.end()
         self.process_events()
         return assignment.version
 
     def update(self, version: object = "latest") -> bool:
         """Atomically switch to a newer version if available (Table 2)."""
         op = self._next_op()
+        rec = self.client.recorder
+        sp = None
         try:
             with self._cv:
                 self._inflight = ("update", version, op, None)
@@ -589,17 +650,36 @@ class ShardHandle:
             if not d.updated:
                 self.process_events()
                 return False
+            if rec.enabled:
+                sp = rec.span("update", track=self.worker.worker_id, version=d.version)
             if d.offload_required and d.offload_version is not None:
                 self._do_retention_offload(d.offload_version)
             self._wait_drained()
             assert d.assignment is not None
+            self._note_assignment(d.assignment)
             self._pull(d.assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
             self.current_version = d.version
         finally:
             with self._cv:
                 self._inflight = None
+            if sp is not None:
+                sp.end()
         self.process_events()
         return True
+
+    def _note_assignment(self, assignment: Assignment) -> None:
+        """Record an assignment/epoch event on this shard's timeline."""
+        rec = self.client.recorder
+        if not rec.enabled:
+            return
+        rec.event(
+            "assignment",
+            track=self.worker.worker_id,
+            version=assignment.version,
+            epoch=assignment.epoch,
+            sources=[s.source for s in assignment.sources],
+            codec=assignment.codec,
+        )
 
     # -- Table 2: list / wait / close ------------------------------------------------
 
@@ -613,7 +693,7 @@ class ShardHandle:
             while not predicate(self._scall("list_versions", self.model)):
                 if deadline is not None and time.monotonic() > deadline:
                     raise TensorHubError("wait(): predicate not satisfied within timeout")
-                self._cv.wait(_POLL)
+                self.client._wait(_POLL)
 
     def close(self) -> None:
         if self._closed:
@@ -678,7 +758,7 @@ class ShardHandle:
                     raise  # dead controller, not a dead source/handle
                 except (StaleHandleError, TensorHubError):
                     raise _SourceLost(source)
-                self._cv.wait(_POLL)
+                self.client._wait(_POLL)
 
     def _pull(
         self,
@@ -773,6 +853,14 @@ class ShardHandle:
             # buffers / lossy-decoded bytes mid-flight); now that the bytes
             # are final, upgrade it so readers chaining off us get
             # end-to-end verification back
+            rec = self.client.recorder
+            t0 = rec.clock() if rec.enabled else 0.0
+            manifest = dest_store.build_manifest(with_checksums=True)
+            if rec.enabled:
+                # checksumming the whole shard is verify work — without it
+                # the stall components would not tile the pull wall time
+                rec.counter_add(obs.CTR_VERIFY, rec.clock() - t0)
+                rec.event("manifest_upgrade", track=dest_name, version=version)
             with self._cv:
                 self._scall(
                     "put_manifest",
@@ -780,7 +868,7 @@ class ShardHandle:
                     dest_name,
                     self.shard_idx,
                     version,
-                    dest_store.build_manifest(with_checksums=True),
+                    manifest,
                 )
         complete_op = self._next_off_op() if twin else self._next_op()
         with self._cv:
@@ -863,7 +951,7 @@ class ShardHandle:
                                     f"v{version} not re-established after "
                                     "controller failover"
                                 )
-                            self._cv.wait(_POLL)
+                            self.client._wait(_POLL)
                             new = self._scall(
                                 "get_assignment", self.model, dest_name
                             )
@@ -933,13 +1021,23 @@ class ShardHandle:
         units = manifest.units
         source = assignment.source
         codec = assignment.codec
+        rec = self.client.recorder
+        track = self.worker.worker_id
+        lc = _link_class(source, assignment.transport)
         while done < len(units):
             avail = self._await_source_progress(source, version, self.shard_idx, done)
             for i in range(done, avail):
+                sp = None
+                if rec.enabled:
+                    t0 = rec.clock()
+                    sp = rec.span(
+                        "pull_unit", track=track, source=source, codec=codec,
+                        unit=units[i].name, bytes=units[i].nbytes, link_class=lc,
+                    )
                 try:
                     self.client.transport.pull_unit(
                         source, self.shard_idx, units[i], manifest.checksums[i],
-                        dest_store, codec=codec,
+                        dest_store, codec=codec, link_class=lc, track=track,
                     )
                 except TransportError:
                     if dest_store.failed:
@@ -948,8 +1046,14 @@ class ShardHandle:
                         # would evict a healthy replica cluster-wide
                         raise
                     raise _SourceLost(source)
+                finally:
+                    if sp is not None:
+                        sp.end()
+                        rec.counter_add(obs.CTR_WIRE, rec.clock() - t0)
                 done += 1
                 dest_store.serving_prefix = done  # before the server learns
+                if rec.enabled:
+                    rec.event("prefix_advance", track=track, done=done)
                 with self._cv:
                     self._scall(
                         "update_progress",
@@ -1135,7 +1239,7 @@ class ShardHandle:
                 if pick is None:
                     # nothing this source can serve yet: wait for progress
                     with self._cv:
-                        self._cv.wait(_POLL)
+                        self.client._wait(_POLL)
                     continue
                 shared["sem"].acquire()
                 try:
@@ -1172,22 +1276,47 @@ class ShardHandle:
             with shared["lock"]:
                 shared["lossy_units"].add(t.unit)
         whole = t.offset == 0 and t.nbytes == unit.nbytes
-        if whole:
-            self.client.transport.pull_unit(
-                sl.source, self.shard_idx, unit, manifest.checksums[t.unit],
-                dest_store, codec=sl.codec,
+        rec = self.client.recorder
+        track = self.worker.worker_id
+        lc = _link_class(sl.source, sl.transport)
+        sp = None
+        if rec.enabled:
+            t0 = rec.clock()
+            sp = rec.span(
+                "pull_unit" if whole else "pull_chunk",
+                track=track, source=sl.source, codec=sl.codec,
+                unit=unit.name, bytes=t.nbytes, link_class=lc,
             )
-        else:
-            payload = self.client.transport.read_unit_range(
-                sl.source, self.shard_idx, unit, t.offset, t.nbytes, codec=sl.codec
-            )
+        try:
+            if whole:
+                self.client.transport.pull_unit(
+                    sl.source, self.shard_idx, unit, manifest.checksums[t.unit],
+                    dest_store, codec=sl.codec, link_class=lc,
+                )
+            else:
+                payload = self.client.transport.read_unit_range(
+                    sl.source, self.shard_idx, unit, t.offset, t.nbytes,
+                    codec=sl.codec, link_class=lc,
+                )
+        finally:
+            if sp is not None:
+                sp.end()
+                rec.counter_add(obs.CTR_WIRE, rec.clock() - t0)
+        if not whole:
             with shared["lock"]:
                 buf = shared["staging"].get(t.unit)
                 if buf is None:
                     buf = shared["staging"][t.unit] = np.empty(
                         unit.nbytes, dtype=np.uint8
                     )
+            asm = (
+                rec.span("reassemble", track=track, unit=unit.name, bytes=t.nbytes)
+                if rec.enabled
+                else None
+            )
             buf[t.offset : t.offset + t.nbytes] = payload
+            if asm is not None:
+                asm.end()
         with shared["lock"]:
             shared["remaining"][t.unit] -= 1
             finished = shared["remaining"][t.unit] == 0
@@ -1201,7 +1330,11 @@ class ShardHandle:
             # raw (bit-exact) reassembly
             expected = 0 if unit_lossy else manifest.checksums[t.unit]
             if self.client.transport.verify_checksums and expected:
+                t0 = rec.clock() if rec.enabled else 0.0
                 got = checksum_lib.checksum(buf)
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_VERIFY, rec.clock() - t0)
+                    rec.event("verify", track=track, unit=unit.name)
                 if got != expected:
                     n_chunks = -(-unit.nbytes // (self.chunk_bytes or unit.nbytes))
                     raise ChecksumError(
@@ -1218,6 +1351,8 @@ class ShardHandle:
             new_done = shared["done"]
         if advanced:
             dest_store.serving_prefix = new_done  # before the server learns
+            if rec.enabled:
+                rec.event("prefix_advance", track=track, done=new_done)
             with self._cv:
                 self._scall(
                     "update_progress",
@@ -1278,6 +1413,9 @@ class ShardHandle:
             plan, local_manifest, use_kernel=self.device_repack
         )
         source = assignment.source
+        rec = self.client.recorder
+        track = self.worker.worker_id
+        lc = _link_class(source, assignment.transport)
         for unit, placed in executor.unit_batches(start_unit=done):
             staging = executor.make_staging(unit.index)
             for p in placed:
@@ -1285,12 +1423,17 @@ class ShardHandle:
                 self._await_source_progress(
                     source, version, iv.source_shard, iv.source_unit
                 )
+                t0 = rec.clock() if rec.enabled else 0.0
                 try:
                     payload = self.client.transport.read_interval(
-                        source, iv.source_shard, iv.tensor, iv.src_offset, iv.nbytes
+                        source, iv.source_shard, iv.tensor, iv.src_offset,
+                        iv.nbytes, link_class=lc,
                     )
                 except TransportError:
                     raise _SourceLost(source)
+                finally:
+                    if rec.enabled:
+                        rec.counter_add(obs.CTR_WIRE, rec.clock() - t0)
                 staging[p.staging_offset : p.staging_offset + iv.nbytes] = payload
                 self.intervals_pulled += 1
             dest_store.write_unit(unit, executor.repack(unit.index, staging))
@@ -1321,7 +1464,7 @@ class ShardHandle:
                     raise _SourceLost(source)
                 if avail > needed:
                     return avail
-                self._cv.wait(_POLL)
+                self.client._wait(_POLL)
 
     def _handle_source_failure(self, dest_name: str, dead_source: str) -> Assignment:
         """Report a dead source and wait for the server to re-route us."""
@@ -1330,8 +1473,14 @@ class ShardHandle:
             while True:
                 new = self._scall("get_assignment", self.model, dest_name)
                 if new is not None:
+                    rec = self.client.recorder
+                    if rec.enabled:
+                        rec.event(
+                            "epoch_bump", track=self.worker.worker_id,
+                            epoch=new.epoch, dead_source=dead_source,
+                        )
                     return new
-                self._cv.wait(_POLL)
+                self.client._wait(_POLL)
 
     # -- offload seeding (4.3.4) -----------------------------------------------------------
 
@@ -1383,7 +1532,7 @@ class ShardHandle:
             while assignment is None:
                 assignment = self._scall("get_assignment", self.model, twin)
                 if assignment is None:
-                    self._cv.wait(_POLL)
+                    self.client._wait(_POLL)
         self._pull(
             assignment,
             op_id=self._next_off_op(),

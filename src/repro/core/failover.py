@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import time
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core.errors import TensorHubError
@@ -159,6 +160,7 @@ def recover(
     committed suffix, then attach the log so new ops keep appending
     where the crashed server stopped. Clients switch over via
     ``TensorHubClient.failover`` / ``SimCluster.crash_and_recover``."""
+    t0 = time.perf_counter()
     cfg: Dict[str, Any] = dict(log.config or {})
     cfg.update(config_overrides)
     server = ReferenceServer(**cfg)
@@ -169,6 +171,9 @@ def recover(
     for rec in log.committed(after=start):
         apply_record(server, rec)
     server.attach_log(log)
+    # metrics gauge only — wall-clock values live outside the replayed
+    # state digest, so the recovered twin still digests equal
+    server.last_recovery_s = time.perf_counter() - t0
     return server
 
 

@@ -315,6 +315,12 @@ class ReferenceServer:
             "swarm_assignments": 0,
             "swarm_grows": 0,
         }
+        #: wall-clock duration of the last failover recovery that built
+        #: this server (set by ``repro.core.failover.recover``; 0.0 for a
+        #: server that never went through recovery). Exposed as a metrics
+        #: *gauge*: wall-clock values are intentionally outside the
+        #: replayed state digest / counter-equality contract.
+        self.last_recovery_s = 0.0
         #: fault tolerance: replayable op log (None = PR 3 behavior,
         #: bit-for-bit — nothing is recorded, nothing can be recovered)
         self._dead = False
@@ -1671,6 +1677,100 @@ class ReferenceServer:
             c = self._source_ceiling(st, rv)
             out[rv.replica] = full if c < 0 else min(c, full) if full else c
         return out
+
+    # -- metrics (observability surface for the future networked server) -------
+
+    def metrics(self) -> Dict[str, Dict[str, float]]:
+        """Point-in-time metrics snapshot, split by replay contract:
+
+        ``counters`` and ``state`` are derived purely from op-log-covered
+        state (``stats`` + model/replica state), so two digest-equal
+        servers — e.g. the original and its crash-recovered twin — report
+        identical values. ``gauges`` carry wall-clock and log-transport
+        values (failover recovery duration, op-log batching) that are
+        intentionally exempt from that equality.
+
+        Deliberately NOT guarded by the liveness check: scraping a
+        crashed controller's last-known metrics is exactly how its death
+        gets diagnosed."""
+        counters: Dict[str, float] = {k: float(v) for k, v in self.stats.items()}
+        state: Dict[str, float] = {
+            "models": float(len(self._models)),
+            "replicas_in_progress": 0.0,
+            "replicas_published": 0.0,
+            "replicas_draining": 0.0,
+            "replicas_registered": 0.0,
+            "replicas_failed": 0.0,
+            "availability_units": 0.0,
+            "plan_epochs": 0.0,
+            "pending_replicates": 0.0,
+        }
+        by_status = {
+            IN_PROGRESS: "replicas_in_progress",
+            PUBLISHED: "replicas_published",
+            DRAINING: "replicas_draining",
+        }
+        for st in self._models.values():
+            state["pending_replicates"] += len(st.pending)
+            for info in st.replicas.values():
+                if info.failed:
+                    state["replicas_failed"] += 1
+                elif info.registered:
+                    state["replicas_registered"] += 1
+            for version, vmap in st.versions.items():
+                for rv in vmap.values():
+                    key = by_status.get(rv.status)
+                    if key is not None:  # per-version replica states
+                        state[key] += 1
+                    state["plan_epochs"] += rv.assign_epoch
+                    # availability depth of the latest version: how many
+                    # servable units the swarm planner can draw on
+                    if version == st.latest:
+                        info = st.replicas.get(rv.replica)
+                        if info is None or info.failed:
+                            continue
+                        if rv.status not in (PUBLISHED, IN_PROGRESS):
+                            continue
+                        m = self._replica_manifest(st, version, rv.replica, 0)
+                        full = m.num_units if m is not None else 0
+                        c = self._source_ceiling(st, rv)
+                        state["availability_units"] += (
+                            full if c < 0 else min(c, full) if full else c
+                        )
+        gauges: Dict[str, float] = {
+            "failover_last_recovery_seconds": float(self.last_recovery_s),
+        }
+        log = self._log
+        if log is not None:
+            records = sum(1 for _ in log.committed())
+            flushes = log.flushes
+            gauges["oplog_committed_records"] = float(records)
+            gauges["oplog_flushes"] = float(flushes)
+            gauges["oplog_group_commit"] = float(log.group_commit)
+            # avg records per durable flush: direct (in-memory) mode
+            # commits record-at-a-time without flushing
+            gauges["oplog_avg_batch"] = (
+                records / flushes if flushes else (1.0 if records else 0.0)
+            )
+        return {"counters": counters, "state": state, "gauges": gauges}
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of :meth:`metrics` (the scrape
+        format the future networked server will serve on /metrics)."""
+        m = self.metrics()
+        lines: List[str] = []
+        for section, ptype in (
+            ("counters", "counter"),
+            ("state", "gauge"),
+            ("gauges", "gauge"),
+        ):
+            for name in sorted(m[section]):
+                val = m[section][name]
+                full = f"tensorhub_{name}"
+                lines.append(f"# TYPE {full} {ptype}")
+                text = f"{val:.6f}".rstrip("0").rstrip(".") if val % 1 else str(int(val))
+                lines.append(f"{full} {text}")
+        return "\n".join(lines) + "\n"
 
     def _swarm_pool(
         self, st: ModelState, version: int, dest: ReplicaInfo, start: int

@@ -1,0 +1,30 @@
+"""Transfer telemetry plane (observability).
+
+``telemetry`` — the low-overhead recorder (spans / counters /
+histograms), clock-injected so the same instrumentation runs under
+``time.monotonic`` (threaded data plane) and ``SimEnv`` virtual time
+(simulator). ``export`` — Chrome trace-event JSON (Perfetto-viewable)
+and a textual timeline renderer.
+"""
+
+from repro.obs.telemetry import (
+    DISABLED,
+    STALL_COMPONENTS,
+    Recorder,
+    stall_breakdown,
+)
+from repro.obs.export import (
+    chrome_trace_events,
+    render_timeline,
+    write_chrome_trace,
+)
+
+__all__ = [
+    "DISABLED",
+    "STALL_COMPONENTS",
+    "Recorder",
+    "chrome_trace_events",
+    "render_timeline",
+    "stall_breakdown",
+    "write_chrome_trace",
+]

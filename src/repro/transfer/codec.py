@@ -393,3 +393,11 @@ def assignment_lossy(assignment) -> bool:
     bytes then differ from the publisher's, so the destination must
     (re)register its own manifest checksums."""
     return any(not get_codec(n).lossless for n in slice_codecs(assignment))
+
+
+def codec_attrs(name: str) -> dict:
+    """Span attributes describing a negotiated codec — attached to flow
+    and pull spans by both data planes so traces carry the wire format
+    alongside bytes/source/link-class."""
+    c = get_codec(name)
+    return {"codec": c.name, "lossless": c.lossless}

@@ -33,6 +33,7 @@ from repro.core.meta import (  # noqa: F401  (DEFAULT_* re-exported)
     TransferUnit,
     build_units,
 )
+from repro.obs import telemetry as obs
 from repro.transfer import checksum as checksum_lib
 from repro.transfer import codec as codec_lib
 
@@ -327,10 +328,34 @@ class WorkerRegistry:
 class LocalTransport:
     """Real byte-copy transport between in-process stores."""
 
-    def __init__(self, registry: WorkerRegistry, *, verify_checksums: bool = True) -> None:
+    def __init__(
+        self,
+        registry: WorkerRegistry,
+        *,
+        verify_checksums: bool = True,
+        recorder: Optional[obs.Recorder] = None,
+    ) -> None:
         self.registry = registry
         self.verify_checksums = verify_checksums
+        self.recorder = obs.DISABLED if recorder is None else recorder
         self.bytes_moved = 0
+        # Per-link-class byte accounting, mirroring the simulator's link
+        # tags ("rdma" intra-DC, "vpc_up" WAN, "pcie" offload): wire
+        # bytes are what the NIC carried (post-codec), decoded bytes the
+        # payload delivered. Always on — the cross-DC benchmarks assert
+        # sim-vs-threaded parity from these counters.
+        self.wire_bytes: Dict[str, int] = {}
+        self.decoded_bytes: Dict[str, int] = {}
+        self._acct_lock = threading.Lock()
+
+    def _account(self, link_class: str, wire_nbytes: int, decoded_nbytes: int) -> None:
+        # windowed pulls share one transport across span-worker threads
+        with self._acct_lock:
+            self.bytes_moved += wire_nbytes
+            self.wire_bytes[link_class] = self.wire_bytes.get(link_class, 0) + wire_nbytes
+            self.decoded_bytes[link_class] = (
+                self.decoded_bytes.get(link_class, 0) + decoded_nbytes
+            )
 
     def pull_unit(
         self,
@@ -340,6 +365,8 @@ class LocalTransport:
         expected_checksum: int,
         dst_store: WorkerStore,
         codec: str = "raw",
+        link_class: str = "rdma",
+        track: Optional[str] = None,
     ) -> None:
         """Pull one whole transfer unit through the negotiated wire codec.
 
@@ -354,18 +381,25 @@ class LocalTransport:
         bytes, i.e. what the NIC actually carried."""
         src = self.registry.get(src_replica, shard_idx)
         cdc = codec_lib.get_codec(codec)
+        rec = self.recorder
         if codec == "raw":
             payload = src.read_unit(unit).copy()  # the wire copy
             if self.verify_checksums and expected_checksum:
+                t0 = rec.clock() if rec.enabled else 0.0
                 got = checksum_lib.checksum(payload)
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_VERIFY, rec.clock() - t0)
+                    if track is not None:
+                        rec.event("verify", track=track, unit=unit.name)
                 if got != expected_checksum:
                     raise ChecksumError(
                         f"unit {unit.name} from {src_replica}/shard{shard_idx}: "
                         f"checksum {got:#x} != expected {expected_checksum:#x}"
                     )
             dst_store.write_unit(unit, payload)
-            self.bytes_moved += unit.nbytes
+            self._account(link_class, unit.nbytes, unit.nbytes)
             return
+        t0 = rec.clock() if rec.enabled else 0.0
         wire = cdc.encode(src.read_unit(unit), src.unit_dtype(unit))
         # decode ONCE (deterministic, and it validates the wire framing);
         # the source's advertised checksum is folded over these decoded
@@ -373,12 +407,24 @@ class LocalTransport:
         # destination's decode — so the comparison still runs over two
         # distinct buffers, without paying a second dequantize
         decoded_src = cdc.decode(wire)
+        if rec.enabled:
+            rec.counter_add(obs.CTR_DECODE, rec.clock() - t0)
+            if track is not None:
+                rec.event("decode", track=track, unit=unit.name, codec=codec,
+                          wire_bytes=wire.nbytes)
+        t0 = rec.clock() if rec.enabled else 0.0
         expected = (
             checksum_lib.checksum(decoded_src) if self.verify_checksums else 0
         )
+        t_verify = (rec.clock() - t0) if rec.enabled else 0.0
         payload = decoded_src.copy()  # the wire copy, decoded at the dest
         if self.verify_checksums:
+            t0 = rec.clock() if rec.enabled else 0.0
             got = checksum_lib.checksum(payload)
+            if rec.enabled:
+                rec.counter_add(obs.CTR_VERIFY, t_verify + (rec.clock() - t0))
+                if track is not None:
+                    rec.event("verify", track=track, unit=unit.name)
             if got != expected:
                 raise ChecksumError(
                     f"unit {unit.name} ({codec}) from "
@@ -386,7 +432,7 @@ class LocalTransport:
                     f"{got:#x} != expected {expected:#x}"
                 )
         dst_store.write_unit(unit, payload)
-        self.bytes_moved += wire.nbytes
+        self._account(link_class, wire.nbytes, unit.nbytes)
 
     def read_unit_range(
         self,
@@ -396,6 +442,7 @@ class LocalTransport:
         offset: int,
         nbytes: int,
         codec: str = "raw",
+        link_class: str = "rdma",
     ) -> np.ndarray:
         """Pull one byte sub-range of a transfer unit (sub-unit chunking).
 
@@ -429,18 +476,24 @@ class LocalTransport:
                 f"exceeds unit of {full.nbytes}B"
             )
         view = full[offset : offset + nbytes]
+        rec = self.recorder
         if codec == "raw":
+            t0 = rec.clock() if rec.enabled else 0.0
             expected = checksum_lib.checksum(view) if self.verify_checksums else 0
+            t_verify = (rec.clock() - t0) if rec.enabled else 0.0
             payload = view.copy()  # the wire copy
             if self.verify_checksums:
+                t0 = rec.clock() if rec.enabled else 0.0
                 got = checksum_lib.checksum(payload)
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_VERIFY, t_verify + (rec.clock() - t0))
                 if got != expected:
                     raise ChecksumError(
                         f"chunk {unit.name}[{offset}:{offset + nbytes}] from "
                         f"{src_replica}/shard{shard_idx}: checksum {got:#x} != "
                         f"expected {expected:#x}"
                     )
-            self.bytes_moved += nbytes
+            self._account(link_class, nbytes, nbytes)
             return payload
         cdc = codec_lib.get_codec(codec)
         dtype = src.unit_dtype(unit)
@@ -451,23 +504,31 @@ class LocalTransport:
                 f"to the {codec} codec's {rb}B row granularity — the "
                 "reassembled unit would diverge from an unchunked transfer"
             )
+        t0 = rec.clock() if rec.enabled else 0.0
         wire = cdc.encode(view, dtype)
         # single decode (see pull_unit): checksum the decoded bytes at the
         # source, copy models the wire + destination decode
         decoded_src = cdc.decode(wire)
+        if rec.enabled:
+            rec.counter_add(obs.CTR_DECODE, rec.clock() - t0)
+        t0 = rec.clock() if rec.enabled else 0.0
         expected = (
             checksum_lib.checksum(decoded_src) if self.verify_checksums else 0
         )
+        t_verify = (rec.clock() - t0) if rec.enabled else 0.0
         payload = decoded_src.copy()  # the wire copy, decoded at the dest
         if self.verify_checksums:
+            t0 = rec.clock() if rec.enabled else 0.0
             got = checksum_lib.checksum(payload)
+            if rec.enabled:
+                rec.counter_add(obs.CTR_VERIFY, t_verify + (rec.clock() - t0))
             if got != expected:
                 raise ChecksumError(
                     f"chunk {unit.name}[{offset}:{offset + nbytes}] ({codec}) "
                     f"from {src_replica}/shard{shard_idx}: decoded checksum "
                     f"{got:#x} != expected {expected:#x}"
                 )
-        self.bytes_moved += wire.nbytes
+        self._account(link_class, wire.nbytes, nbytes)
         return payload
 
     def read_interval(
@@ -478,6 +539,7 @@ class LocalTransport:
         offset: int,
         nbytes: int,
         codec: str = "raw",
+        link_class: str = "rdma",
     ) -> np.ndarray:
         """Pull one striped byte range of a reshard plan.
 
@@ -498,15 +560,21 @@ class LocalTransport:
             )
         src = self.registry.get(src_replica, src_shard)
         view = src.read_range(tensor, offset, nbytes)
+        rec = self.recorder
+        t0 = rec.clock() if rec.enabled else 0.0
         expected = checksum_lib.checksum(view) if self.verify_checksums else 0
+        t_verify = (rec.clock() - t0) if rec.enabled else 0.0
         payload = view.copy()  # the wire copy
         if self.verify_checksums:
+            t0 = rec.clock() if rec.enabled else 0.0
             got = checksum_lib.checksum(payload)
+            if rec.enabled:
+                rec.counter_add(obs.CTR_VERIFY, t_verify + (rec.clock() - t0))
             if got != expected:
                 raise ChecksumError(
                     f"interval {tensor}[{offset}:{offset + nbytes}] from "
                     f"{src_replica}/shard{src_shard}: checksum {got:#x} != "
                     f"expected {expected:#x}"
                 )
-        self.bytes_moved += nbytes
+        self._account(link_class, nbytes, nbytes)
         return payload

@@ -26,6 +26,7 @@ from repro.core.errors import StaleHandleError, TensorHubError
 from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
 from repro.core.oplog import OpLog
 from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
+from repro.obs import telemetry as obs
 from repro.transfer import codec as codec_lib
 from repro.transfer.engine import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW
 from repro.transfer.hardware import CLUSTER, ClusterHW
@@ -149,6 +150,13 @@ class SimWorker:
     alive: bool = True
     total_stall: float = 0.0
     _stall_since: Optional[float] = None
+    #: stall decomposition: total_stall split into the canonical
+    #: plan_wait / wire / decode / verify / control components
+    #: (repro.obs.telemetry.STALL_COMPONENTS). The shard attributes
+    #: control-latency yields and flow time observed inside each stalled
+    #: window; the residual is plan-wait. Components sum exactly to
+    #: total_stall (decode/verify are instantaneous in the fluid model).
+    stall_parts: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def stall_begin(self, now: float) -> None:
         if self._stall_since is None:
@@ -158,6 +166,15 @@ class SimWorker:
         if self._stall_since is not None:
             self.total_stall += now - self._stall_since
             self._stall_since = None
+
+    def stall_attribute(self, total: float, ctrl: float, wire: float) -> None:
+        """Fold one stalled window's decomposition into ``stall_parts``."""
+        parts = self.stall_parts
+        parts["control"] = parts.get("control", 0.0) + ctrl
+        parts["wire"] = parts.get("wire", 0.0) + wire
+        parts["plan_wait"] = (
+            parts.get("plan_wait", 0.0) + max(0.0, total - ctrl - wire)
+        )
 
 
 class SimCluster:
@@ -181,6 +198,7 @@ class SimCluster:
         wan_codec: Optional[str] = None,
         codec_dtype: str = "float32",
         log: Optional[OpLog] = None,
+        telemetry: bool = False,
     ) -> None:
         #: DEPRECATED — ``tcp_compression`` was a hand-set cross-DC
         #: wire-byte scalar whose docstring claimed the int8 ratio while
@@ -232,6 +250,14 @@ class SimCluster:
         self.tcp_streams = max(1, tcp_streams)
         self.env = SimEnv()
         self.net = SimNetwork(self.env)
+        #: telemetry recorder on the simulator's virtual clock; stays the
+        #: shared disabled singleton unless ``telemetry=True`` so the hot
+        #: generator paths record nothing by default. Stall-time
+        #: decomposition (stall_parts) is always maintained — it is pure
+        #: float accounting on windows the stall counters already track.
+        self.recorder = (
+            obs.Recorder(clock=lambda: self.env.now) if telemetry else obs.DISABLED
+        )
         self.hw = hw
         self.control_latency = (
             hw.control_latency if control_latency is None else control_latency
@@ -443,6 +469,35 @@ class SimCluster:
     def per_worker_stalls(self, replicas: Sequence[str]) -> List[float]:
         return [s.worker.total_stall for n in replicas for s in self.replicas[n].shards]
 
+    def stall_decomposition(
+        self, replicas: Optional[Sequence[str]] = None
+    ) -> Dict[str, float]:
+        """Aggregate stall decomposition over the given replicas (all by
+        default): total stall split into the canonical plan_wait / wire /
+        decode / verify / control components. Components sum exactly to
+        :meth:`total_stall` for the same replica set."""
+        names = self.replicas.keys() if replicas is None else replicas
+        out = {k: 0.0 for k in obs.STALL_COMPONENTS}
+        for n in names:
+            for s in self.replicas[n].shards:
+                for k, v in s.worker.stall_parts.items():
+                    out[k] += v
+        return out
+
+    def link_class_bytes(self) -> Dict[str, float]:
+        """Wire bytes moved per link class ("up"/"down" RDMA NICs,
+        "vpc_up"/"vpc_down" WAN gateways, "pcie" offload lanes),
+        aggregated from the fluid network's per-link byte counters. The
+        threaded plane exposes matching classes on
+        ``LocalTransport.wire_bytes`` ("vpc_up"/"pcie"/"rdma") —
+        benchmarks assert sim-vs-threaded WAN parity from these counters
+        instead of recomputing bytes by hand."""
+        out: Dict[str, float] = {}
+        for tag, b in self.net.link_bytes.items():
+            cls = tag.rsplit(":", 1)[-1]
+            out[cls] = out.get(cls, 0.0) + b
+        return out
+
     def run(self, until: float = math.inf) -> float:
         return self.env.run(until)
 
@@ -458,6 +513,15 @@ class SimShard:
         self._op = itertools.count()
         self._off_op = itertools.count(1_000_000)
         self._seeding: set = set()
+        # stall decomposition accounting (pure observation: no events are
+        # created or reordered). _ctrl_spent accumulates control-latency
+        # yields; the wire tracker maintains the union of this shard's
+        # in-flight flow intervals so overlapping windowed flows are not
+        # double-counted.
+        self._ctrl_spent = 0.0
+        self._wire_active = 0
+        self._wire_since = 0.0
+        self._wire_spent = 0.0
 
     # plumbing ------------------------------------------------------------------
 
@@ -474,7 +538,40 @@ class SimShard:
         return self.rep.cluster.hw
 
     def _ctrl(self) -> SimEvent:
+        # the caller always yields this event immediately, so crediting
+        # the latency at creation time keeps the control-time ledger
+        # aligned with the stall windows that bracket it
+        self._ctrl_spent += self.rep.cluster.control_latency
         return self.env.timeout(self.rep.cluster.control_latency)
+
+    # stall-decomposition ledger (see SimWorker.stall_parts) ----------------
+
+    def _wire_begin(self) -> None:
+        if self._wire_active == 0:
+            self._wire_since = self.env.now
+        self._wire_active += 1
+
+    def _wire_end(self) -> None:
+        self._wire_active -= 1
+        if self._wire_active == 0:
+            self._wire_spent += self.env.now - self._wire_since
+
+    def _wire_snapshot(self) -> float:
+        """Wire-time ledger including any currently open interval."""
+        if self._wire_active > 0:
+            return self._wire_spent + (self.env.now - self._wire_since)
+        return self._wire_spent
+
+    def _stall_mark(self) -> Tuple[float, float, float]:
+        return (self.env.now, self._ctrl_spent, self._wire_snapshot())
+
+    def _stall_account(self, mark: Tuple[float, float, float]) -> None:
+        t0, c0, w0 = mark
+        self.worker.stall_attribute(
+            self.env.now - t0,
+            self._ctrl_spent - c0,
+            self._wire_snapshot() - w0,
+        )
 
     # Table-2 ops (generators) -----------------------------------------------------
 
@@ -506,6 +603,9 @@ class SimShard:
             self.rep.manifest_for(self.idx),
             op_id=next(self._op),
         )
+        rec = self.rep.cluster.recorder
+        if rec.enabled:
+            rec.event("publish", track=self.worker.worker_id, version=version)
         self.env.key_notify(("progress", self.rep.name, self.idx))
 
     def g_unpublish(self) -> Generator:
@@ -518,8 +618,10 @@ class SimShard:
         yield from self._g_wait_drained()
 
     def g_replicate(self, spec, *, stall: bool = True) -> Generator:
+        mark = None
         if stall:
             self.worker.stall_begin(self.env.now)
+            mark = self._stall_mark()
         op = next(self._op)
         yield self._ctrl()
         assignment = self.server.begin_replicate(
@@ -528,9 +630,18 @@ class SimShard:
         while assignment is None:
             yield self.env.state_wait()
             assignment = self.server.redeem(self.rep.model, self.rep.name, op_id=op)
+        rec = self.rep.cluster.recorder
+        if rec.enabled:
+            rec.event(
+                "assignment", track=self.worker.worker_id,
+                version=assignment.version, epoch=assignment.epoch,
+                sources=[s.source for s in assignment.sources],
+                codec=assignment.codec,
+            )
         yield from self._g_pull(assignment, dest=self.rep.name)
         if stall:
             self.worker.stall_end(self.env.now)
+            self._stall_account(mark)
         return assignment.version
 
     def g_update(self, spec="latest", *, stall: bool = True) -> Generator:
@@ -551,15 +662,26 @@ class SimShard:
                 self.env.process(self._g_seed_pull(d.seed_version))
         if not d.updated:
             return False
+        mark = None
         if stall:
             self.worker.stall_begin(self.env.now)
+            mark = self._stall_mark()
         if d.offload_required and d.offload_version is not None:
             yield from self._g_offload_copy(d.offload_version)
         yield from self._g_wait_drained()
         assert d.assignment is not None
+        rec = self.rep.cluster.recorder
+        if rec.enabled:
+            rec.event(
+                "assignment", track=self.worker.worker_id,
+                version=d.assignment.version, epoch=d.assignment.epoch,
+                sources=[s.source for s in d.assignment.sources],
+                codec=d.assignment.codec,
+            )
         yield from self._g_pull(d.assignment, dest=self.rep.name)
         if stall:
             self.worker.stall_end(self.env.now)
+            self._stall_account(mark)
         return True
 
     # internals ---------------------------------------------------------------------
@@ -568,11 +690,34 @@ class SimShard:
         while not self.server.finish_unpublish(self.rep.model, self.rep.name):
             yield self.env.state_wait()
 
+    def _g_timed_flow(self, ev, name, source, nbytes, codec, transport) -> Generator:
+        """Yield a flow event under the wire ledger (and a span when the
+        cluster recorder is enabled). Pure observation: the event passes
+        through unchanged, so scheduling and byte accounting are
+        bit-identical to yielding the flow directly."""
+        rec = self.rep.cluster.recorder
+        sp = None
+        if rec.enabled:
+            sp = rec.span(
+                name, track=self.worker.worker_id, source=source,
+                bytes=nbytes, codec=codec, transport=transport,
+            )
+        self._wire_begin()
+        try:
+            yield ev
+        finally:
+            self._wire_end()
+            if sp is not None:
+                sp.end()
+
     def _g_offload_copy(self, version: int) -> Generator:
         """Retention offload: GPU -> CPU over PCIe, then publish_offload."""
         nbytes = self.rep.manifest_for(self.idx).total_bytes
-        yield self.rep.cluster.net.flow(
-            nbytes, [self.worker.pcie], tag=f"{self.rep.name}/s{self.idx}:offload"
+        yield from self._g_timed_flow(
+            self.rep.cluster.net.flow(
+                nbytes, [self.worker.pcie], tag=f"{self.rep.name}/s{self.idx}:offload"
+            ),
+            "offload_copy", self.rep.name, nbytes, "raw", "pcie",
         )
         yield self._ctrl()
         self.server.publish_offload(
@@ -740,9 +885,12 @@ class SimShard:
             )
             for i in range(done, avail):
                 try:
-                    yield self._flow_for_bytes(
-                        source, self.idx, units[i].nbytes, transport, dest,
-                        codec=codec,
+                    yield from self._g_timed_flow(
+                        self._flow_for_bytes(
+                            source, self.idx, units[i].nbytes, transport, dest,
+                            codec=codec,
+                        ),
+                        "flow", source, units[i].nbytes, codec, transport,
                     )
                 except FlowKilled:
                     if self.dead:
@@ -752,6 +900,9 @@ class SimShard:
                 self.server.update_progress(
                     self.rep.model, dest, self.idx, version, done
                 )
+                rec = self.rep.cluster.recorder
+                if rec.enabled:
+                    rec.event("prefix_advance", track=self.worker.worker_id, done=done)
                 env.key_notify(("progress", dest, self.idx))
 
     def _build_tasks(
@@ -938,9 +1089,12 @@ class SimShard:
                 slots.release()
                 return
             try:
-                yield self._flow_for_bytes(
-                    sl.source, self.idx, t.nbytes, sl.transport, dest,
-                    codec=sl.codec,
+                yield from self._g_timed_flow(
+                    self._flow_for_bytes(
+                        sl.source, self.idx, t.nbytes, sl.transport, dest,
+                        codec=sl.codec,
+                    ),
+                    "flow", sl.source, t.nbytes, sl.codec, sl.transport,
                 )
             except FlowKilled:
                 slots.release()
@@ -1033,8 +1187,11 @@ class SimShard:
                     source, version, iv.source_shard, iv.source_unit
                 )
                 try:
-                    yield self._flow_for_bytes(
-                        source, iv.source_shard, iv.nbytes, transport, dest
+                    yield from self._g_timed_flow(
+                        self._flow_for_bytes(
+                            source, iv.source_shard, iv.nbytes, transport, dest
+                        ),
+                        "interval_flow", source, iv.nbytes, "raw", transport,
                     )
                 except FlowKilled:
                     if self.dead:
