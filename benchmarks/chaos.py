@@ -1,0 +1,325 @@
+"""Chaos sweep — gray-failure resilience across both data planes.
+
+Runs a deterministic, seeded fault schedule (``repro.transfer.faults``)
+against the same trainer -> rollout-A -> rollout-B pipeline on the sim
+plane (virtual time, fluid flows) and a publisher -> peer -> destination
+pull on the threaded plane (real bytes through ``LocalTransport``), for
+each gray-fault kind: straggler (slow source), flaky (transient read
+errors), corrupt (byte flips caught by checksums), and hang (reads
+stall until detection).
+
+Validates the self-healing contract:
+
+* every pull completes; on the threaded plane the delivered bytes are
+  identical to the published tensors (the corruption oracle);
+* single-source straggling inflates rollout-B's stall at most 2x over
+  the fault-free single-source baseline (deadline detection + source
+  quarantine re-route, not a full-transfer hang);
+* transient-only schedules evict **zero** replicas — suspect sources
+  are quarantined with probation, never removed;
+* corrupt sources are quarantined on first checksum-verified evidence;
+* identical seed => identical per-worker stall decomposition on the sim
+  plane (the bit-for-bit replay the fault plan promises).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks import harness
+from repro.core import ReferenceServer, TensorHubClient
+from repro.obs import telemetry as obs
+from repro.transfer.faults import (
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+    ThreadedFaultInjector,
+)
+from repro.transfer.simcluster import SimCluster
+
+GB = 1e9
+SEED = 7
+
+#: sim-plane healing knobs, scaled to the scenario's ~0.04 s healthy
+#: unit fetch: deadline a few fetches out, quick backoff, early hedging
+SIM_POLICY = RetryPolicy(
+    fail_detect=0.1,
+    retry_limit=4,
+    retry_backoff=0.02,
+    hedge_threshold=3.0,
+    hedge_min_samples=2,
+)
+
+#: threaded-plane knobs against the wall clock (reads are ~sub-ms)
+THREADED_POLICY = RetryPolicy(
+    fail_detect=0.25,
+    retry_limit=5,
+    retry_backoff=0.01,
+    hedge_threshold=4.0,
+    hedge_min_samples=2,
+)
+
+#: fault kind -> spec against the gray source ("ra" on the sim plane,
+#: "peer" on the threaded plane). slow/hang degrade only the serving
+#: ("up") direction on the sim plane so rollout-A's own warm-up pull
+#: stays healthy — the gray node serves badly but reads fine.
+SIM_FAULTS = {
+    "baseline": (),
+    "straggler": (FaultSpec("slow", "ra", severity=0.05, direction="up"),),
+    "flaky": (FaultSpec("flaky", "ra", severity=0.25),),
+    "corrupt": (FaultSpec("corrupt", "ra", severity=1.0),),
+    "hang": (FaultSpec("hang", "ra", direction="up"),),
+}
+
+#: the threaded scheduler prefers the shallow publisher, so the gray
+#: faults target "pub" — healing must quarantine it and re-route the
+#: destination onto the healthy warmed-up peer
+THREADED_FAULTS = {
+    "baseline": (),
+    "straggler": (FaultSpec("slow", "pub", stall=0.02),),
+    "flaky": (FaultSpec("flaky", "pub", severity=0.65),),
+    "corrupt": (FaultSpec("corrupt", "pub", severity=1.0),),
+    "hang": (FaultSpec("hang", "pub", duration=1.0),),
+}
+
+SCENARIOS = ("baseline", "straggler", "flaky", "corrupt", "hang")
+
+
+def _heal_counters(counters: Dict[str, float]) -> Dict[str, int]:
+    return {
+        "retries": int(counters.get(obs.CTR_RETRIES, 0)),
+        "hedges": int(counters.get(obs.CTR_HEDGES, 0)),
+        "corrupt_rejects": int(counters.get(obs.CTR_CORRUPT_REJECTS, 0)),
+        "deadline_reports": int(counters.get(obs.CTR_DEADLINE_REPORTS, 0)),
+    }
+
+
+# -- sim plane ---------------------------------------------------------------
+
+
+def _sim_once(
+    kind: str, *, units_per_shard: int, max_sources: int
+) -> Tuple[Dict[str, object], List]:
+    """One seeded sim run; returns (row, per-worker stall decomposition)."""
+    cl = SimCluster(
+        retry_policy=SIM_POLICY,
+        telemetry=True,
+        max_sources=max_sources,
+        quarantine_threshold=2,
+        quarantine_probation=5.0,
+    )
+    units = [GB] * units_per_shard
+    tr = cl.add_replica("m", "trainer", 2, unit_bytes=units)
+    ra = cl.add_replica("m", "ra", 2, unit_bytes=units)
+    rb = cl.add_replica("m", "rb", 2, unit_bytes=units)
+    tr.open(), ra.open(), rb.open()
+    cl.run()
+    tr.publish(0)
+    cl.run()
+    cl.install_faults(FaultPlan(seed=SEED, faults=SIM_FAULTS[kind]))
+    t0 = cl.env.now
+    # A pulls from the trainer; B is scheduled onto A (pipeline), so B
+    # reads through the gray source and must heal around it
+    ra.replicate("latest")
+    done_b = rb.replicate("latest")
+    cl.run()
+    completed = bool(done_b.triggered) and done_b.error is None
+    decomp = [
+        (wid, tuple(sorted(w.stall_parts.items())), round(w.total_stall, 12))
+        for (wid, w) in sorted(
+            ((f"{r}/{i}", w) for (r, i), w in cl._workers.items())  # noqa: SLF001
+        )
+    ]
+    row = {
+        "plane": "sim",
+        "scenario": kind,
+        "sources": max_sources,
+        "completed": completed,
+        "b_stall_s": round(max(s.worker.total_stall for s in rb.shards), 3),
+        "wall_s": round(cl.env.now - t0, 3),
+        "quarantines": cl.server.stats["quarantines"],
+        "evictions": cl.server.stats["evictions"],
+        **_heal_counters(cl.recorder.counters),
+    }
+    return row, decomp
+
+
+def sim_scenario(
+    kind: str, *, units_per_shard: int, max_sources: int = 4
+) -> Dict[str, object]:
+    """Run the scenario twice from the same seed; identical per-worker
+    stall decomposition is the sim plane's determinism oracle."""
+    row, decomp1 = _sim_once(
+        kind, units_per_shard=units_per_shard, max_sources=max_sources
+    )
+    _, decomp2 = _sim_once(
+        kind, units_per_shard=units_per_shard, max_sources=max_sources
+    )
+    row["deterministic"] = decomp1 == decomp2
+    return row
+
+
+# -- threaded plane ----------------------------------------------------------
+
+
+def _run_group(handles, fn) -> None:
+    errs: List[BaseException] = []
+
+    def wrap(h):
+        try:
+            fn(h)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=wrap, args=(h,)) for h in handles]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    if errs:
+        raise errs[0]
+
+
+def threaded_scenario(kind: str, *, n_tensors: int) -> Dict[str, object]:
+    def mk(seed: float):
+        return {
+            f"w{i}": np.full((64, 32), seed + i, dtype=np.float32)
+            for i in range(n_tensors)
+        }
+
+    server = ReferenceServer(quarantine_threshold=2, quarantine_probation=60.0)
+    rec = obs.Recorder()
+    inj = ThreadedFaultInjector(FaultPlan(seed=SEED, faults=THREADED_FAULTS[kind]))
+    # the publisher and peer warm up through a fault-free transport; the
+    # destination pulls through a second client (same worker registry)
+    # whose transport carries the gray-fault injector
+    clean = TensorHubClient(server)
+    hub = TensorHubClient(
+        server,
+        registry=clean.registry,
+        recorder=rec,
+        retry_policy=THREADED_POLICY,
+        faults=inj,
+    )
+    pubs = [clean.open("m", "pub", 2, i) for i in range(2)]
+    for h in pubs:
+        h.register(mk(3.0))
+    _run_group(pubs, lambda h: h.publish(0))
+    # healthy alternate: the peer replicates fault-free and stands by as
+    # the re-route target once the gray publisher is quarantined
+    peers = [clean.open("m", "peer", 2, i) for i in range(2)]
+    for h in peers:
+        h.register(mk(0.0))
+    _run_group(peers, lambda h: h.replicate("latest"))
+    dests = [hub.open("m", "dest", 2, i) for i in range(2)]
+    for h in dests:
+        h.register(mk(0.0))
+    inj.arm()
+    t0 = hub.clock()
+    err: Optional[BaseException] = None
+    try:
+        _run_group(dests, lambda h: h.replicate("latest"))
+    except BaseException as e:  # noqa: BLE001
+        err = e
+    wall = hub.clock() - t0
+    inj.release()  # drain any reader threads still blocked in a hang
+    want = mk(3.0)
+    bytes_ok = err is None and all(
+        np.array_equal(h.store.get(k), v) for h in dests for k, v in want.items()
+    )
+    return {
+        "plane": "threaded",
+        "scenario": kind,
+        "completed": err is None,
+        "bytes_ok": bytes_ok,
+        "wall_s": round(wall, 3),
+        "quarantines": server.stats["quarantines"],
+        "evictions": server.stats["evictions"],
+        **_heal_counters(rec.counters),
+    }
+
+
+# -- sweep -------------------------------------------------------------------
+
+
+def run(quick: bool = False) -> List[Dict]:
+    units = 4 if quick else 8
+    n_tensors = 4 if quick else 6
+    rows: List[Dict] = []
+    for kind in SCENARIOS:
+        rows.append(sim_scenario(kind, units_per_shard=units))
+    # single-source straggler pair: quarantine re-route must bound the
+    # stall at <=2x the fault-free single-source transfer
+    rows.append(
+        sim_scenario("baseline", units_per_shard=units, max_sources=1)
+    )
+    rows.append(
+        sim_scenario("straggler", units_per_shard=units, max_sources=1)
+    )
+    for kind in SCENARIOS:
+        rows.append(threaded_scenario(kind, n_tensors=n_tensors))
+    return rows
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    checks = []
+    sim1 = {
+        r["scenario"]: r
+        for r in rows
+        if r["plane"] == "sim" and r["sources"] == 1
+    }
+    thr = {r["scenario"]: r for r in rows if r["plane"] == "threaded"}
+
+    done = all(r["completed"] for r in rows)
+    checks.append(
+        f"every pull completes under faults ({len(rows)} runs) "
+        f"-> {'OK' if done else 'MISMATCH'}"
+    )
+    identical = all(r["bytes_ok"] for r in thr.values())
+    checks.append(
+        "threaded bytes identical to published (corruption oracle) "
+        f"-> {'OK' if identical else 'MISMATCH'}"
+    )
+    ratio = sim1["straggler"]["b_stall_s"] / max(
+        sim1["baseline"]["b_stall_s"], 1e-9
+    )
+    checks.append(
+        f"single-source straggler stall x{ratio:.2f} of fault-free "
+        f"(<=2x via quarantine re-route) -> {'OK' if ratio <= 2.0 else 'MISMATCH'}"
+    )
+    evict = sum(r["evictions"] for r in rows)
+    checks.append(
+        f"transient-only schedules evict zero replicas ({evict} evictions) "
+        f"-> {'OK' if evict == 0 else 'MISMATCH'}"
+    )
+    quar = all(
+        d["corrupt"]["quarantines"] >= 1 and d["corrupt"]["corrupt_rejects"] >= 1
+        for d in ({r["scenario"]: r for r in rows if r["plane"] == "sim"}, thr)
+    )
+    checks.append(
+        "corrupt source quarantined on checksum evidence (both planes) "
+        f"-> {'OK' if quar else 'MISMATCH'}"
+    )
+    det = all(r["deterministic"] for r in rows if r["plane"] == "sim")
+    checks.append(
+        "identical seed => identical sim stall decomposition "
+        f"-> {'OK' if det else 'MISMATCH'}"
+    )
+    healed = (
+        thr["flaky"]["retries"] >= 1
+        and {r["scenario"]: r for r in rows if r["plane"] == "sim"}["flaky"][
+            "retries"
+        ]
+        >= 1
+    )
+    checks.append(
+        f"flaky reads healed by bounded retries -> {'OK' if healed else 'MISMATCH'}"
+    )
+    return checks
+
+
+if __name__ == "__main__":
+    harness.bench_main("chaos", run, validate)

@@ -11,12 +11,13 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks import baselines
+from benchmarks import baselines, harness
 from repro.transfer.simcluster import SimCluster
 
 GB = 1e9
 #: tensors are 50 MB each (5.1.1); shard size = count x 50 MB
 SHARD_GBS = [1, 5, 10, 25, 50]
+SHARD_GBS_QUICK = [1, 10, 50]
 
 
 def tensorhub_latency(shard_gb: float) -> float:
@@ -39,9 +40,9 @@ def tensorhub_latency(shard_gb: float) -> float:
     return cl.env.now - t0
 
 
-def run() -> List[Dict]:
+def run(quick: bool = False) -> List[Dict]:
     rows = []
-    for gb in SHARD_GBS:
+    for gb in (SHARD_GBS_QUICK if quick else SHARD_GBS):
         nbytes = gb * GB
         th = tensorhub_latency(gb)
         nccl = baselines.nccl_transfer_time(nbytes, total_gpus=16)
@@ -86,13 +87,5 @@ def validate(rows: List[Dict]) -> List[str]:
     return checks
 
 
-def main() -> None:
-    rows = run()
-    for r in rows:
-        print(r)
-    for c in validate(rows):
-        print("  " + c)
-
-
 if __name__ == "__main__":
-    main()
+    harness.bench_main("micro_bandwidth", run, validate)

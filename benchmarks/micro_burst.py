@@ -11,10 +11,12 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from benchmarks import harness
 from repro.transfer.simcluster import SimCluster
 
 GB = 1e9
 GROUPS = [1, 2, 4, 8]
+GROUPS_QUICK = [1, 2, 8]
 SHARD_GB = 50
 
 
@@ -37,9 +39,9 @@ def burst_stall(n_groups: int, *, pipeline: bool) -> Dict[str, float]:
     return {"total": sum(per), "max": max(per), "mean": sum(per) / len(per)}
 
 
-def run() -> List[Dict]:
+def run(quick: bool = False) -> List[Dict]:
     rows = []
-    for n in GROUPS:
+    for n in (GROUPS_QUICK if quick else GROUPS):
         with_p = burst_stall(n, pipeline=True)
         without = burst_stall(n, pipeline=False)
         ideal = SHARD_GB * GB / 25e9 * n * 8
@@ -73,13 +75,5 @@ def validate(rows: List[Dict]) -> List[str]:
     return checks
 
 
-def main() -> None:
-    rows = run()
-    for r in rows:
-        print(r)
-    for c in validate(rows):
-        print("  " + c)
-
-
 if __name__ == "__main__":
-    main()
+    harness.bench_main("micro_burst", run, validate)

@@ -1,9 +1,10 @@
 """Fig 7c — transparent failure masking: trainer -> rollout-A -> rollout-B
 pipeline; rollout-A is killed mid-transfer; rollout-B must complete by
-re-routing to the trainer, delayed only by the RDMA detection timeout.
+re-routing to the trainer, delayed only by the read-failure detection
+timeout (``RetryPolicy.fail_detect``, default = the RDMA timeout).
 
 Validates: B always completes; for kill times within the transfer window
-the total time is ~(kill point + 4s detection + remaining transfer); kills
+the total time is ~(kill point + detection + remaining transfer); kills
 after ~2.2s leave B unaffected.
 """
 
@@ -11,11 +12,18 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from benchmarks import harness
+from repro.transfer.faults import DEFAULT_RETRY_POLICY
 from repro.transfer.simcluster import SimCluster
 
 GB = 1e9
 SHARD_GB = 50
 KILL_AT = [0.1, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0]
+KILL_AT_QUICK = [0.5, 1.5, 3.0]
+
+#: reader-side failure-detection timeout the sim's kill_flows applies
+#: (previously a hard-coded 4 s here, drifting from the actual knob)
+DETECT = DEFAULT_RETRY_POLICY.fail_detect
 
 
 def failure_run(kill_at: float) -> Dict[str, float]:
@@ -39,8 +47,8 @@ def failure_run(kill_at: float) -> Dict[str, float]:
     return {"kill_at": kill_at, "b_time_s": cl.env.now - t0, "b_stall_s": b_stall}
 
 
-def run() -> List[Dict]:
-    return [failure_run(k) for k in KILL_AT]
+def run(quick: bool = False) -> List[Dict]:
+    return [failure_run(k) for k in (KILL_AT_QUICK if quick else KILL_AT)]
 
 
 def validate(rows: List[Dict]) -> List[str]:
@@ -53,20 +61,15 @@ def validate(rows: List[Dict]) -> List[str]:
             checks.append(f"kill@{k}s after transfer done: B unaffected "
                           f"({r['b_stall_s']:.2f}s) -> {'OK' if ok else 'MISMATCH'}")
         else:
-            # B re-reads from the trainer after ~4s detection
-            ok = r["b_stall_s"] >= k + 4.0 - 0.2 and r["b_stall_s"] < base + k + 4.5
+            # B re-reads from the trainer after the detection timeout
+            ok = (
+                r["b_stall_s"] >= k + DETECT - 0.2
+                and r["b_stall_s"] < base + k + DETECT + 0.5
+            )
             checks.append(f"kill@{k}s: B completes in {r['b_stall_s']:.2f}s "
-                          f"(detection ~4s) -> {'OK' if ok else 'MISMATCH'}")
+                          f"(detection ~{DETECT:.0f}s) -> {'OK' if ok else 'MISMATCH'}")
     return checks
 
 
-def main() -> None:
-    rows = run()
-    for r in rows:
-        print(r)
-    for c in validate(rows):
-        print("  " + c)
-
-
 if __name__ == "__main__":
-    main()
+    harness.bench_main("micro_failure", run, validate)

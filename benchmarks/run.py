@@ -19,6 +19,7 @@ import time
 import traceback
 
 from benchmarks import (
+    chaos,
     cross_dc,
     elastic,
     failover,
@@ -38,6 +39,7 @@ MODULES = [
     ("fig7a_bandwidth", micro_bandwidth),
     ("fig7b_burst", micro_burst),
     ("fig7c_failure", micro_failure),
+    ("chaos_sweep", chaos),
     ("fanout_scheduler", fanout),
     ("swarm_replication", swarm),
     ("failover_control_plane", failover),

@@ -40,6 +40,7 @@ from repro.transfer.engine import (
     WorkerRegistry,
     WorkerStore,
 )
+from repro.transfer.faults import DEFAULT_RETRY_POLICY, RetryPolicy
 
 _POLL = 0.02  # condition re-check period (seconds)
 
@@ -54,11 +55,15 @@ _REESTABLISH_BASE = 4_000_000  # distinct from the reassert begin: the two
 
 
 class _SourceLost(Exception):
-    """Internal: the assigned source died mid-pull; re-route and resume."""
+    """Internal: the assigned source failed us mid-pull; report with the
+    carried evidence class ("fatal" | "transient" | "corrupt"), re-route
+    and resume. Fatal evidence evicts the source (fail-stop, 4.5);
+    transient/corrupt evidence accumulates quarantine strikes instead."""
 
-    def __init__(self, source: str) -> None:
+    def __init__(self, source: str, evidence: str = "fatal") -> None:
         super().__init__(source)
         self.source = source
+        self.evidence = evidence
 
 
 #: one data-plane fetch: a whole transfer unit, or a byte sub-range of
@@ -93,14 +98,24 @@ class TensorHubClient:
         chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
         failover_timeout: float = 30.0,
         recorder: Optional[obs.Recorder] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        faults=None,
     ) -> None:
         self.server = server
         self.registry = registry or WorkerRegistry()
         #: telemetry recorder shared with the transport; disabled by
         #: default so the hot paths stay allocation-free
         self.recorder = obs.DISABLED if recorder is None else recorder
+        #: gray-failure self-healing knobs (per-read deadline, bounded
+        #: retries, hedged-read straggler threshold) shared by every handle
+        self.retry_policy = (
+            DEFAULT_RETRY_POLICY if retry_policy is None else retry_policy
+        )
+        #: ``faults`` (a ThreadedFaultInjector) only applies to the
+        #: default transport built here; an explicitly passed transport
+        #: carries its own injector (or none)
         self.transport = transport or LocalTransport(
-            self.registry, recorder=self.recorder
+            self.registry, recorder=self.recorder, faults=faults
         )
         self.clock = clock
         #: data-plane knobs inherited by every handle opened through this
@@ -797,7 +812,7 @@ class ShardHandle:
         # moment a divergent plan is detected (mirroring the reshard
         # path), and the epilogue below upgrades it to our real checksums
         # once the bytes are final.
-        pull_state = {"divergent": False}
+        pull_state = {"divergent": False, "rejects": {}}
         # swarm replication: while this pull is in flight the store serves
         # other readers exactly its completed prefix; the watermark is
         # advanced before every server progress report and lifted when the
@@ -846,7 +861,9 @@ class ShardHandle:
                     )
                 break
             except _SourceLost as e:
-                assignment = self._handle_source_failure(dest_name, e.source)
+                assignment = self._handle_source_failure(
+                    dest_name, e.source, e.evidence
+                )
         dest_store.serving_prefix = None  # fully replicated: unrestricted
         if (used_reshard or pull_state["divergent"]) and self.with_checksums:
             # our layout family was registered with zero checksums (pre-pull
@@ -897,6 +914,10 @@ class ShardHandle:
         completed: Set[int] = set()
         if pull_state is None:
             pull_state = {"divergent": False}
+        # per-destination-unit checksum-reject counts: persists across
+        # re-plans so a genuinely corrupt unit (every source serves bad
+        # bytes) aborts after retry_limit rejects instead of looping
+        rejects: Dict[int, int] = pull_state.setdefault("rejects", {})
         while done < len(units):
             slices = assignment.slices(len(units))
             if not pull_state["divergent"] and self._divergent_pull(
@@ -923,12 +944,13 @@ class ShardHandle:
                     )
             if self.window <= 1 and self.chunk_bytes is None and len(slices) == 1:
                 return self._pull_units_seq(
-                    assignment, dest_name, dest_store, done, manifest
+                    assignment, dest_name, dest_store, done, manifest, rejects
                 )
             completed -= set(range(done))
             slices = self._validated_slices(slices, version, manifest)
             outcome, done = self._pull_units_windowed(
-                assignment, slices, dest_name, dest_store, done, manifest, completed
+                assignment, slices, dest_name, dest_store, done, manifest,
+                completed, rejects,
             )
             if outcome == "replan":
                 with self._cv:
@@ -1014,6 +1036,7 @@ class ShardHandle:
         dest_store: WorkerStore,
         done: int,
         manifest,
+        rejects: Optional[Dict[int, int]] = None,
     ) -> int:
         """The pre-scheduler data plane: one whole-unit fetch at a time
         from a single source (window=1, chunking off)."""
@@ -1024,6 +1047,9 @@ class ShardHandle:
         rec = self.client.recorder
         track = self.worker.worker_id
         lc = _link_class(source, assignment.transport)
+        policy = self.client.retry_policy
+        if rejects is None:
+            rejects = {}
         while done < len(units):
             avail = self._await_source_progress(source, version, self.shard_idx, done)
             for i in range(done, avail):
@@ -1035,17 +1061,43 @@ class ShardHandle:
                         unit=units[i].name, bytes=units[i].nbytes, link_class=lc,
                     )
                 try:
-                    self.client.transport.pull_unit(
-                        source, self.shard_idx, units[i], manifest.checksums[i],
-                        dest_store, codec=codec, link_class=lc, track=track,
+                    self._retry_transient(
+                        lambda i=i: self.client.transport.pull_unit(
+                            source, self.shard_idx, units[i],
+                            manifest.checksums[i], dest_store, codec=codec,
+                            link_class=lc, track=track,
+                        ),
+                        source,
+                        unit=units[i].name,
                     )
-                except TransportError:
+                except TransportError as e:
                     if dest_store.failed:
                         # OUR store died (preemption): the write guard
                         # fired, not the source — blaming the source
                         # would evict a healthy replica cluster-wide
                         raise
-                    raise _SourceLost(source)
+                    raise _SourceLost(
+                        source,
+                        evidence="transient"
+                        if getattr(e, "transient", False)
+                        else "fatal",
+                    )
+                except ChecksumError:
+                    # corrupt bytes from this source: report the evidence
+                    # (the server quarantines it and re-plans) and resume
+                    # from the prefix instead of aborting the pull. Bounded
+                    # per unit: if every re-plan keeps rejecting the same
+                    # unit, the data is genuinely bad — propagate.
+                    rejects[i] = rejects.get(i, 0) + 1
+                    if rejects[i] > policy.retry_limit:
+                        raise
+                    if rec.enabled:
+                        rec.counter_add(obs.CTR_CORRUPT_REJECTS, 1)
+                        rec.event(
+                            "corrupt_reject", track=track, source=source,
+                            unit=units[i].name,
+                        )
+                    raise _SourceLost(source, evidence="corrupt")
                 finally:
                     if sp is not None:
                         sp.end()
@@ -1123,13 +1175,22 @@ class ShardHandle:
         done: int,
         manifest,
         completed: Set[int],
+        rejects: Optional[Dict[int, int]] = None,
     ):
         """Windowed multi-source executor: one worker thread per source
         slice, a shared semaphore capping in-flight fetches at ``window``,
         global in-order task claiming (a worker takes the lowest-indexed
         task its source's progress covers — keeps the prefix counter that
         gates downstream readers advancing at full rate), and whole-unit
-        checksum verification after chunk reassembly."""
+        checksum verification after chunk reassembly.
+
+        The span is *supervised*, not joined: a monitor thread watches
+        per-task read deadlines and the assignment epoch, so a source
+        that hangs mid-read (the gray failure a heartbeat never sees)
+        gets reported and the span drains on the resulting re-plan
+        instead of pinning the pull forever. Hung daemon workers are
+        abandoned safely — every post-read write is gated on the span's
+        stop flag and per-task completion claims."""
         version = assignment.version
         units = manifest.units
         tasks = self._build_pull_tasks(slices, manifest, done, completed)
@@ -1152,6 +1213,14 @@ class ShardHandle:
             "done": done,
             "stop": None,  # None | "replan" | BaseException
             "epoch": assignment.epoch,
+            # self-healing state --------------------------------------
+            "rejects": rejects if rejects is not None else {},
+            "taskdone": [False] * len(tasks),  # completion claims
+            "ntaskdone": 0,
+            "inflight": {},  # task idx -> (start_clock, source)
+            "durations": [],  # completed read durations (hedge baseline)
+            "hedged": set(),  # task idxs already duplicated once
+            "done_ev": threading.Event(),
         }
         workers = [
             threading.Thread(
@@ -1164,8 +1233,7 @@ class ShardHandle:
         ]
         for w in workers:
             w.start()
-        for w in workers:
-            w.join()
+        self._monitor_span(shared, dest_name, version)
         stop = shared["stop"]
         if isinstance(stop, BaseException):
             raise stop
@@ -1180,6 +1248,130 @@ class ShardHandle:
                 and not isinstance(shared["stop"], BaseException)
             ):
                 shared["stop"] = stop
+        ev = shared.get("done_ev")
+        if ev is not None:
+            ev.set()
+
+    def _monitor_span(self, shared: dict, dest_name: str, version: int) -> None:
+        """Supervise a windowed span: enforce per-read deadlines and
+        watch the assignment epoch so hung workers can't pin the span.
+
+        A read in flight longer than ``retry_policy.fail_detect`` is
+        *transient* evidence against its source — reported (rate-limited
+        per source to one report per detection window) so the server
+        strike-counts and, at the quarantine threshold, re-plans around
+        it. The epoch bump then drains the span; the hung worker thread
+        is abandoned (daemon, post-read writes stop-gated)."""
+        ev: threading.Event = shared["done_ev"]
+        tasks: List[_PullTask] = shared["tasks"]
+        policy = self.client.retry_policy
+        rec = self.client.recorder
+        track = self.worker.worker_id
+        last_report: Dict[str, float] = {}
+        while not ev.wait(_POLL):
+            now = self.client.clock()
+            hung = []
+            with shared["lock"]:
+                if shared["stop"] is not None:
+                    return
+                for ti, (started, src) in shared["inflight"].items():
+                    if shared["taskdone"][ti]:
+                        continue
+                    if now - started >= policy.fail_detect:
+                        prev = last_report.get(src)
+                        if prev is None or now - prev >= policy.fail_detect:
+                            last_report[src] = now
+                            hung.append((src, tasks[ti].unit))
+            for src, unit in hung:
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_DEADLINE_REPORTS, 1)
+                    rec.event(
+                        "read_deadline", track=track, source=src, unit=unit,
+                    )
+                self._report_suspect(dest_name, src, "transient")
+            try:
+                with self._cv:
+                    ep = self._scall(
+                        "assignment_epoch", self.model, dest_name, version
+                    )
+            except ServerUnavailableError:
+                raise  # dead controller, not a dead source/handle
+            except (StaleHandleError, TensorHubError):
+                continue  # workers surface dest eviction themselves
+            if ep != shared["epoch"]:
+                self._span_stop(shared, "replan")
+                return
+        # done_ev set: all tasks claimed complete, or a worker stopped us
+
+    def _report_suspect(self, dest_name: str, source: str, evidence: str) -> None:
+        """Report non-fatal evidence against a source without waiting for
+        a re-route (the monitor keeps polling the epoch instead)."""
+        try:
+            with self._cv:
+                self._scall(
+                    "report_transfer_failure",
+                    self.model, dest_name, source, evidence,
+                    self.client.clock(),
+                )
+        except ServerUnavailableError:
+            raise
+        except (StaleHandleError, TensorHubError):
+            pass  # handle churn mid-report: the epoch poll handles it
+
+    def _retry_transient(self, fn, source: str, *, unit=None):
+        """Run a transport read, retrying transient failures with
+        exponential backoff up to ``retry_policy.retry_limit`` attempts
+        before letting the error escalate to the failure reporter."""
+        policy = self.client.retry_policy
+        rec = self.client.recorder
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except TransportError as e:
+                if not getattr(e, "transient", False) or attempt >= policy.retry_limit:
+                    raise
+                attempt += 1
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_RETRIES, 1)
+                    rec.event(
+                        "retry", track=self.worker.worker_id,
+                        source=source, unit=unit, attempt=attempt,
+                    )
+                time.sleep(policy.backoff(attempt))
+
+    def _hedge_pick(self, shared: dict, sl: SourceSlice, avail: int):
+        """Pick a straggling in-flight task worth duplicating onto this
+        (idle) source: oldest read exceeding ``hedge_threshold`` × the
+        median completed-read duration, owned by a different source, not
+        already hedged, and within this source's served prefix. Both
+        copies race; the first to finish claims the task, the loser's
+        byte-identical result is discarded."""
+        policy = self.client.retry_policy
+        with shared["lock"]:
+            if shared["stop"] is not None:
+                return None
+            durs = shared["durations"]
+            if len(durs) < policy.hedge_min_samples:
+                return None
+            med = sorted(durs)[len(durs) // 2]
+            threshold = policy.hedge_threshold * max(med, 1e-6)
+            now = self.client.clock()
+            tasks: List[_PullTask] = shared["tasks"]
+            pick = None
+            oldest = None
+            for ti, (started, src) in shared["inflight"].items():
+                if src == sl.source or ti in shared["hedged"]:
+                    continue
+                if shared["taskdone"][ti] or tasks[ti].unit >= avail:
+                    continue
+                age = now - started
+                if age >= threshold and (oldest is None or age > oldest):
+                    oldest = age
+                    pick = ti
+            if pick is not None:
+                shared["hedged"].add(pick)
+            return pick
 
     def _span_worker(
         self,
@@ -1192,10 +1384,15 @@ class ShardHandle:
     ) -> None:
         tasks: List[_PullTask] = shared["tasks"]
         claimed: List[bool] = shared["claimed"]
+        rec = self.client.recorder
+        policy = self.client.retry_policy
         try:
             while True:
                 with shared["lock"]:
-                    if shared["stop"] is not None or shared["unclaimed"] == 0:
+                    if (
+                        shared["stop"] is not None
+                        or shared["ntaskdone"] == len(tasks)
+                    ):
                         return
                 with self._cv:
                     try:
@@ -1227,6 +1424,7 @@ class ShardHandle:
                     self._span_stop(shared, "replan")
                     return
                 pick = None
+                hedged = False
                 with shared["lock"]:
                     while shared["scan"] < len(tasks) and claimed[shared["scan"]]:
                         shared["scan"] += 1
@@ -1237,6 +1435,20 @@ class ShardHandle:
                             shared["unclaimed"] -= 1
                             break
                 if pick is None:
+                    # nothing unclaimed this source can serve: duplicate
+                    # the slowest foreign in-flight read instead of idling
+                    # (bounds single-source straggling at roughly the
+                    # healthy source's speed)
+                    pick = self._hedge_pick(shared, sl, avail)
+                    if pick is not None:
+                        hedged = True
+                        if rec.enabled:
+                            rec.counter_add(obs.CTR_HEDGES, 1)
+                            rec.event(
+                                "hedge", track=self.worker.worker_id,
+                                source=sl.source, unit=tasks[pick].unit,
+                            )
+                if pick is None:
                     # nothing this source can serve yet: wait for progress
                     with self._cv:
                         self.client._wait(_POLL)
@@ -1245,22 +1457,59 @@ class ShardHandle:
                 try:
                     if shared["stop"] is not None:
                         return  # abandoned claim; the re-plan re-lists it
-                    self._fetch_task(
-                        tasks[pick], sl, shared, dest_name, dest_store, manifest, version
-                    )
+                    try:
+                        self._retry_transient(
+                            lambda: self._fetch_task(
+                                pick, tasks[pick], sl, shared, dest_name,
+                                dest_store, manifest, version,
+                            ),
+                            sl.source,
+                            unit=tasks[pick].unit,
+                        )
+                    except ChecksumError:
+                        # corrupt bytes: report, bounded per unit — if
+                        # every re-plan keeps rejecting this unit the
+                        # data is genuinely bad and the error propagates
+                        u = tasks[pick].unit
+                        with shared["lock"]:
+                            n = shared["rejects"].get(u, 0) + 1
+                            shared["rejects"][u] = n
+                        if n > policy.retry_limit:
+                            raise
+                        if rec.enabled:
+                            rec.counter_add(obs.CTR_CORRUPT_REJECTS, 1)
+                            rec.event(
+                                "corrupt_reject", track=self.worker.worker_id,
+                                source=sl.source, unit=u,
+                            )
+                        self._span_stop(
+                            shared, _SourceLost(sl.source, evidence="corrupt")
+                        )
+                        return
                 finally:
                     shared["sem"].release()
+                if hedged:
+                    continue  # twin may still hold the claim; keep going
         except TransportError as e:
             if dest_store.failed:
                 # our own store died (dest preemption), not the source
                 self._span_stop(shared, e)
             else:
-                self._span_stop(shared, _SourceLost(sl.source))
+                self._span_stop(
+                    shared,
+                    _SourceLost(
+                        sl.source,
+                        evidence="transient"
+                        if getattr(e, "transient", False)
+                        else "fatal",
+                    ),
+                )
         except BaseException as e:  # noqa: BLE001 — relayed to the caller
             self._span_stop(shared, e)
 
     def _fetch_task(
         self,
+        ti: int,
         t: _PullTask,
         sl: SourceSlice,
         shared: dict,
@@ -1279,6 +1528,11 @@ class ShardHandle:
         rec = self.client.recorder
         track = self.worker.worker_id
         lc = _link_class(sl.source, sl.transport)
+        started = self.client.clock()
+        with shared["lock"]:
+            if shared["stop"] is not None or shared["taskdone"][ti]:
+                return  # span drained / hedge twin already won
+            shared["inflight"][ti] = (started, sl.source)
         sp = None
         if rec.enabled:
             t0 = rec.clock()
@@ -1302,6 +1556,20 @@ class ShardHandle:
             if sp is not None:
                 sp.end()
                 rec.counter_add(obs.CTR_WIRE, rec.clock() - t0)
+            with shared["lock"]:
+                cur = shared["inflight"].get(ti)
+                if cur is not None and cur[1] == sl.source:
+                    del shared["inflight"][ti]
+        alldone = False
+        with shared["lock"]:
+            if shared["stop"] is not None:
+                return  # span drained while we were on the wire
+            if shared["taskdone"][ti]:
+                return  # hedge twin won the race; identical bytes, drop
+            shared["taskdone"][ti] = True
+            shared["ntaskdone"] += 1
+            alldone = shared["ntaskdone"] == len(shared["tasks"])
+            shared["durations"].append(self.client.clock() - started)
         if not whole:
             with shared["lock"]:
                 buf = shared["staging"].get(t.unit)
@@ -1323,6 +1591,8 @@ class ShardHandle:
             buf = shared["staging"].pop(t.unit, None) if finished else None
             unit_lossy = t.unit in shared["lossy_units"]
         if not finished:
+            if alldone:
+                shared["done_ev"].set()
             return
         if buf is not None:  # chunked unit: verify end-to-end, then absorb
             # lossy-coded chunks were each verified over their decoded
@@ -1344,13 +1614,20 @@ class ShardHandle:
             dest_store.write_unit(unit, buf)
         advanced = False
         with shared["lock"]:
-            shared["completed"].add(t.unit)
-            while shared["done"] in shared["completed"]:
-                shared["done"] += 1
-                advanced = True
-            new_done = shared["done"]
+            if shared["stop"] is None:  # a drained span re-lists the unit
+                shared["completed"].add(t.unit)
+                while shared["done"] in shared["completed"]:
+                    shared["done"] += 1
+                    advanced = True
+                new_done = shared["done"]
+                if advanced:
+                    # monotone advance before the server learns; max()
+                    # because a hedged span can finish units out of the
+                    # order their prefix updates land
+                    sp_cur = dest_store.serving_prefix
+                    if sp_cur is not None:
+                        dest_store.serving_prefix = max(sp_cur, new_done)
         if advanced:
-            dest_store.serving_prefix = new_done  # before the server learns
             if rec.enabled:
                 rec.event("prefix_advance", track=track, done=new_done)
             with self._cv:
@@ -1358,6 +1635,8 @@ class ShardHandle:
                     "update_progress",
                     self.model, dest_name, self.shard_idx, version, new_done,
                 )
+        if alldone:
+            shared["done_ev"].set()
 
     def _pull_resharded_span(
         self,
@@ -1425,12 +1704,21 @@ class ShardHandle:
                 )
                 t0 = rec.clock() if rec.enabled else 0.0
                 try:
-                    payload = self.client.transport.read_interval(
-                        source, iv.source_shard, iv.tensor, iv.src_offset,
-                        iv.nbytes, link_class=lc,
+                    payload = self._retry_transient(
+                        lambda iv=iv: self.client.transport.read_interval(
+                            source, iv.source_shard, iv.tensor, iv.src_offset,
+                            iv.nbytes, link_class=lc,
+                        ),
+                        source,
+                        unit=iv.tensor,
                     )
-                except TransportError:
-                    raise _SourceLost(source)
+                except TransportError as e:
+                    raise _SourceLost(
+                        source,
+                        evidence="transient"
+                        if getattr(e, "transient", False)
+                        else "fatal",
+                    )
                 finally:
                     if rec.enabled:
                         rec.counter_add(obs.CTR_WIRE, rec.clock() - t0)
@@ -1466,10 +1754,21 @@ class ShardHandle:
                     return avail
                 self.client._wait(_POLL)
 
-    def _handle_source_failure(self, dest_name: str, dead_source: str) -> Assignment:
-        """Report a dead source and wait for the server to re-route us."""
+    def _handle_source_failure(
+        self, dest_name: str, dead_source: str, evidence: str = "fatal"
+    ) -> Assignment:
+        """Report a failed source and wait for the server to re-route us.
+
+        ``evidence`` classifies what we saw: ``"fatal"`` evicts the
+        source, ``"transient"``/``"corrupt"`` strike-count it toward
+        quarantine (the server re-plans around a quarantined source but
+        keeps it registered)."""
         with self._cv:
-            self._scall("report_transfer_failure", self.model, dest_name, dead_source)
+            self._scall(
+                "report_transfer_failure",
+                self.model, dest_name, dead_source, evidence,
+                self.client.clock(),
+            )
             while True:
                 new = self._scall("get_assignment", self.model, dest_name)
                 if new is not None:

@@ -59,3 +59,19 @@ class ServerUnavailableError(TensorHubError):
 
 class ChecksumError(TensorHubError):
     """End-to-end checksum mismatch after a transfer (4.6)."""
+
+
+class TransportError(TensorHubError):
+    """A data-plane read or write failed.
+
+    ``transient`` carries the evidence class the control plane's failure
+    classifier needs: ``False`` (default) means the peer is gone for good
+    — a dead store, an unregistered shard — and warrants eviction;
+    ``True`` means the read merely flaked (injected gray fault, timed-out
+    wire read) and should be retried/strike-counted, never escalated
+    straight to a cluster-wide eviction of a possibly healthy replica.
+    """
+
+    def __init__(self, message: str = "", *, transient: bool = False) -> None:
+        super().__init__(message)
+        self.transient = transient

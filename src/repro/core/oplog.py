@@ -52,7 +52,12 @@ OP_SCHEMAS: Dict[str, tuple] = {
     "heartbeat": ("model", "replica", "shard_idx", "now"),
     "tick": ("now",),
     "fail_replica": ("model", "replica", "reason"),
-    "report_transfer_failure": ("model", "dest_replica", "source_replica"),
+    # evidence/now were appended for gray-failure classification; records
+    # logged before that carry 3 args and replay with the server defaults
+    # (zip() in kwargs() stops at the shorter tuple)
+    "report_transfer_failure": (
+        "model", "dest_replica", "source_replica", "evidence", "now",
+    ),
     "publish": ("model", "replica", "shard_idx", "version", "manifest", "op_id"),
     "publish_offload": (
         "model", "replica", "shard_idx", "version", "manifest", "op_id",

@@ -127,6 +127,14 @@ class ReplicaInfo:
     draining: Dict[int, bool] = dataclasses.field(default_factory=dict)
     registered: Set[int] = dataclasses.field(default_factory=set)
     failed: bool = False
+    #: gray-failure classifier state (4.5 extension): strikes accumulate
+    #: from transient/corrupt transfer-failure evidence; at the quarantine
+    #: threshold the replica is benched as a *source* (still alive, still
+    #: registered, still a pull destination) until the probation deadline.
+    #: Wire-registered dataclass fields, so the op log digest and failover
+    #: replay carry them automatically.
+    suspect_strikes: int = 0
+    quarantined_until: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -263,6 +271,8 @@ class ReferenceServer:
         chunk_hint: Optional[float] = None,
         swarm: bool = True,
         wan_codec: str = "int8",
+        quarantine_threshold: int = 3,
+        quarantine_probation: float = 30.0,
         log: Optional[OpLog] = None,
     ) -> None:
         self._models: Dict[str, ModelState] = {}
@@ -298,6 +308,12 @@ class ReferenceServer:
         #: requires pipeline replication (a partial replica serving its
         #: prefix *is* a pipeline relay) and ``max_sources > 1``.
         self._swarm = swarm
+        #: gray-failure classifier: transient evidence accumulates strikes
+        #: per source; at the threshold the source is quarantined (benched
+        #: from planning, not evicted) for the probation window. Corrupt
+        #: evidence quarantines immediately. See report_transfer_failure.
+        self._quarantine_threshold = max(1, quarantine_threshold)
+        self._quarantine_probation = quarantine_probation
         self._events: Dict[str, List[Event]] = {}
         self._watchers: List[Callable[[], None]] = []
         self._seq = 0
@@ -314,6 +330,10 @@ class ReferenceServer:
             "work_steals": 0,
             "swarm_assignments": 0,
             "swarm_grows": 0,
+            "transient_reports": 0,
+            "corrupt_reports": 0,
+            "quarantines": 0,
+            "probation_lifts": 0,
         }
         #: wall-clock duration of the last failover recovery that built
         #: this server (set by ``repro.core.failover.recover``; 0.0 for a
@@ -344,6 +364,8 @@ class ReferenceServer:
             "chunk_hint": self._chunk_hint,
             "swarm": self._swarm,
             "wan_codec": self._wan_codec,
+            "quarantine_threshold": self._quarantine_threshold,
+            "quarantine_probation": self._quarantine_probation,
         }
 
     @property
@@ -512,13 +534,24 @@ class ReferenceServer:
         info.last_heartbeat[shard_idx] = now
 
     def tick(self, now: float) -> List[str]:
-        """Expire heartbeats; returns names of replicas evicted this tick."""
+        """Expire heartbeats and lift expired quarantines; returns names
+        of replicas evicted this tick."""
         self._check_alive()
         self._record("tick", now)
-        if self._heartbeat_timeout is None:
-            return []
-        evicted = []
+        evicted: List[str] = []
+        lifted = False
         for st in self._models.values():
+            # probation: an expired quarantine rejoins the source pools one
+            # strike short of the threshold — a single further transient
+            # report re-quarantines it (probation, not a clean slate)
+            for info in st.replicas.values():
+                if info.quarantined_until is not None and now >= info.quarantined_until:
+                    info.quarantined_until = None
+                    info.suspect_strikes = self._quarantine_threshold - 1
+                    self.stats["probation_lifts"] += 1
+                    lifted = True
+            if self._heartbeat_timeout is None:
+                continue
             for name, info in list(st.replicas.items()):
                 if info.failed or not info.open_shards:
                     continue
@@ -529,7 +562,7 @@ class ReferenceServer:
                 if stale:
                     self._fail_replica(st, name, reason="heartbeat timeout")
                     evicted.append(name)
-        if evicted:
+        if evicted or lifted:
             self._bump()
         return evicted
 
@@ -543,15 +576,54 @@ class ReferenceServer:
             self._bump()
 
     def report_transfer_failure(
-        self, model: str, dest_replica: str, source_replica: str
+        self,
+        model: str,
+        dest_replica: str,
+        source_replica: str,
+        evidence: str = "fatal",
+        now: float = 0.0,
     ) -> None:
-        """A reader detected its source died mid-transfer (4.5): mark the
-        source failed and reassign; the reader resumes from its progress."""
+        """A reader reported trouble with its source mid-transfer (4.5).
+
+        ``evidence`` classifies the report instead of treating every one
+        as a death sentence:
+
+        * ``"fatal"`` — the source is gone (dead store, stale handle):
+          evict and reassign, the original fail-stop behavior.
+        * ``"transient"`` — the read flaked or timed out: one strike.
+          At ``quarantine_threshold`` strikes the source is *quarantined*
+          — benched from source planning for ``quarantine_probation``
+          seconds but neither evicted nor unregistered, so a gray-but-
+          alive replica keeps its data and its pull-destination role.
+        * ``"corrupt"`` — checksum-rejected bytes: quarantined
+          immediately (a full threshold of strikes at once).
+
+        The reader resumes from its progress either way; ``_reassign``
+        re-plans any in-progress pull whose plan touches the suspect."""
         self._check_alive()
-        self._record("report_transfer_failure", model, dest_replica, source_replica)
+        self._record(
+            "report_transfer_failure", model, dest_replica, source_replica,
+            evidence, now,
+        )
         st = self._model(model)
-        if source_replica in st.replicas and not st.replicas[source_replica].failed:
-            self._fail_replica(st, source_replica, reason="reported by reader")
+        info = st.replicas.get(source_replica)
+        if evidence == "fatal":
+            if info is not None and not info.failed:
+                self._fail_replica(st, source_replica, reason="reported by reader")
+        elif info is not None and not info.failed:
+            if evidence == "corrupt":
+                self.stats["corrupt_reports"] += 1
+                info.suspect_strikes += self._quarantine_threshold
+            else:
+                self.stats["transient_reports"] += 1
+                info.suspect_strikes += 1
+            if info.suspect_strikes >= self._quarantine_threshold:
+                until = now + self._quarantine_probation
+                if info.quarantined_until is None:
+                    self.stats["quarantines"] += 1
+                    info.quarantined_until = until
+                else:
+                    info.quarantined_until = max(info.quarantined_until, until)
         self._reassign(st, dest_replica)
         self._bump()
 
@@ -1393,8 +1465,16 @@ class ReferenceServer:
 
     # -- scheduling (4.3.1) -----------------------------------------------------
 
+    def _is_quarantined(self, info: Optional[ReplicaInfo]) -> bool:
+        return info is not None and info.quarantined_until is not None
+
     def _source_candidates(
-        self, st: ModelState, version: int, dest: ReplicaInfo
+        self,
+        st: ModelState,
+        version: int,
+        dest: ReplicaInfo,
+        *,
+        include_quarantined: bool = False,
     ) -> List[ReplicaVersionState]:
         vmap = st.versions.get(version, {})
         out = []
@@ -1407,6 +1487,8 @@ class ReferenceServer:
                 continue
             info = st.replicas.get(rv.replica)
             if info is None or info.failed:
+                continue
+            if not include_quarantined and self._is_quarantined(info):
                 continue
             if rv.status == IN_PROGRESS and self._chain_reaches(
                 vmap, rv.replica, dest.name
@@ -1425,6 +1507,13 @@ class ReferenceServer:
         self, st: ModelState, version: int, dest: ReplicaInfo
     ) -> Optional[ReplicaVersionState]:
         cands = self._source_candidates(st, version, dest)
+        if not cands:
+            # every live candidate is quarantined: a suspect source still
+            # beats no source — without the fallback a transient-only
+            # fault schedule could starve readers of their only replica
+            cands = self._source_candidates(
+                st, version, dest, include_quarantined=True
+            )
         if not cands:
             return None
         local = [c for c in cands if st.replicas[c.replica].datacenter == dest.datacenter]
@@ -1585,7 +1674,7 @@ class ReferenceServer:
             if rv.kind != KIND_GPU:
                 continue
             info = st.replicas.get(rv.replica)
-            if info is None or info.failed:
+            if info is None or info.failed or self._is_quarantined(info):
                 continue
             if info.num_shards != dest.num_shards:
                 continue
@@ -1799,7 +1888,7 @@ class ReferenceServer:
             if rv.status not in (PUBLISHED, IN_PROGRESS):
                 continue
             info = st.replicas.get(rv.replica)
-            if info is None or info.failed:
+            if info is None or info.failed or self._is_quarantined(info):
                 continue
             if info.num_shards != dest.num_shards:
                 continue
@@ -2323,13 +2412,22 @@ class ReferenceServer:
                 planned = {s for s, _, _ in rv.plan}
                 if rv.source is not None:
                     planned.add(rv.source)
-                if planned and all(s in vmap for s in planned):
+                healthy = all(
+                    s in vmap and not self._is_quarantined(st.replicas.get(s))
+                    for s in planned
+                )
+                if planned and healthy:
                     continue  # every plan source still alive; nothing to do
                 # re-partition the uncompleted tail across the survivors
                 start = min(rv.progress.values()) if rv.progress else 0
                 plan = self._plan_assignment(st, rinfo, version, start=start)
                 if plan is None:
                     continue  # graceful: reader keeps polling, may error out
+                if list(plan) == list(rv.plan):
+                    # quarantine fallback landed on the identical plan (the
+                    # suspect is the only source): bumping the epoch would
+                    # drain the reader's window for nothing
+                    continue
                 self._install_plan(st, version, rv, rinfo, plan)
                 self.stats["reassignments"] += 1
 

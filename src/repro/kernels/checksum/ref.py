@@ -19,6 +19,12 @@ def checksum_ref(words: jax.Array) -> jax.Array:
 
 
 def fold64(pair) -> int:
-    """Combine (s1, s2) into the 64-bit value the transfer layer compares."""
+    """Combine (s1, s2) into the 64-bit value the transfer layer compares.
+
+    A zero fold remaps to the transfer layer's ZERO_STANDIN: checksum 0
+    is its "verification disabled" sentinel, so no real payload may
+    produce it (mirrors ``repro.transfer.checksum.checksum``)."""
+    from repro.transfer.checksum import ZERO_STANDIN
+
     s1, s2 = int(pair[0]), int(pair[1])
-    return (s2 << 32) | s1
+    return ((s2 << 32) | s1) or ZERO_STANDIN

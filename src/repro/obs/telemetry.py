@@ -38,6 +38,14 @@ CTR_DECODE = "stall/decode"
 CTR_VERIFY = "stall/verify"
 CTR_CONTROL = "stall/control"
 
+# Gray-failure self-healing counters (event counts, not seconds): each
+# increment pairs with a span event of the same name carrying the
+# source/unit involved.
+CTR_RETRIES = "heal/retries"
+CTR_HEDGES = "heal/hedges"
+CTR_CORRUPT_REJECTS = "heal/corrupt_rejects"
+CTR_DEADLINE_REPORTS = "heal/deadline_reports"
+
 
 class _NullSpan:
     """Shared no-op span; returned by a disabled recorder."""

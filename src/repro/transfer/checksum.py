@@ -9,6 +9,11 @@ over 32-bit words:
     checksum = (s2 << 32) | s1
 
 The position weight catches reordering/offset bugs that a plain sum misses.
+A non-empty buffer whose fold lands on exactly 0 is remapped to
+:data:`ZERO_STANDIN`: the transfer layer uses checksum 0 as the
+"verification disabled" sentinel (divergent-manifest pulls), and a
+colliding real payload — e.g. symmetric constant data whose weighted
+sums cancel — must not silently disarm end-to-end verification.
 All arithmetic is mod-2^32, so the *same* value is computed by
 
 * this NumPy implementation (host side, used by the real transport),
@@ -22,6 +27,11 @@ from __future__ import annotations
 import numpy as np
 
 _MASK32 = np.uint64(0xFFFFFFFF)
+
+#: stand-in for a non-empty buffer folding to exactly 0 — any fixed
+#: non-zero value works (the induced collision class is the same
+#: ~2^-64 as the fold itself); shared with ``kernels.checksum.fold64``
+ZERO_STANDIN = 0x5EED_0000_0000_5EED
 
 
 def _as_words(buf: bytes | bytearray | memoryview | np.ndarray) -> np.ndarray:
@@ -45,7 +55,7 @@ def checksum(buf: bytes | bytearray | memoryview | np.ndarray) -> int:
     weights = (idx & np.uint64(0xFFFF)) + np.uint64(1)
     s1 = int(words.sum() & _MASK32)
     s2 = int((words * weights).sum() & _MASK32)
-    return (s2 << 32) | s1
+    return ((s2 << 32) | s1) or ZERO_STANDIN
 
 
 def combine(chunks: list[int]) -> int:

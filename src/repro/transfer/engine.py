@@ -24,7 +24,13 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.errors import ChecksumError, NotRegisteredError, TensorHubError
+from repro.core.errors import (  # noqa: F401  (TransportError re-exported:
+    # it lived here before joining the error taxonomy in core.errors)
+    ChecksumError,
+    NotRegisteredError,
+    TensorHubError,
+    TransportError,
+)
 from repro.core.meta import (  # noqa: F401  (DEFAULT_* re-exported)
     DEFAULT_CHUNK_BYTES,
     DEFAULT_WINDOW,
@@ -40,12 +46,6 @@ from repro.transfer import codec as codec_lib
 #: per-tensor layout descriptor: (global_shape, offset) — see
 #: ``repro.resharding`` for the format
 LayoutEntry = Tuple[Tuple[int, ...], Tuple[int, ...]]
-
-
-
-class TransportError(TensorHubError):
-    """The peer died or the channel broke mid-transfer; the reader reports
-    to the server and is re-routed (4.5)."""
 
 
 def tensor_meta(
@@ -334,10 +334,15 @@ class LocalTransport:
         *,
         verify_checksums: bool = True,
         recorder: Optional[obs.Recorder] = None,
+        faults=None,
     ) -> None:
         self.registry = registry
         self.verify_checksums = verify_checksums
         self.recorder = obs.DISABLED if recorder is None else recorder
+        #: optional gray-fault injector (``repro.transfer.faults``):
+        #: consulted at the top of every read (hang/slow/flaky) and on
+        #: served payloads ahead of verification (corrupt byte-flips)
+        self.faults = faults
         self.bytes_moved = 0
         # Per-link-class byte accounting, mirroring the simulator's link
         # tags ("rdma" intra-DC, "vpc_up" WAN, "pcie" offload): wire
@@ -347,6 +352,16 @@ class LocalTransport:
         self.wire_bytes: Dict[str, int] = {}
         self.decoded_bytes: Dict[str, int] = {}
         self._acct_lock = threading.Lock()
+
+    def _fault_read(self, src_replica: str, shard_idx: int) -> None:
+        if self.faults is not None:
+            self.faults.before_read(src_replica, shard_idx)
+
+    def _fault_flip(self, src_replica: str, payload: np.ndarray, verified: bool) -> None:
+        # only flip bytes a checksum will catch: an unverified flip would
+        # silently propagate instead of exercising the reject path
+        if verified and self.faults is not None and self.faults.corrupts(src_replica):
+            self.faults.flip(payload)
 
     def _account(self, link_class: str, wire_nbytes: int, decoded_nbytes: int) -> None:
         # windowed pulls share one transport across span-worker threads
@@ -380,10 +395,16 @@ class LocalTransport:
         contract as :meth:`read_interval`. ``bytes_moved`` counts wire
         bytes, i.e. what the NIC actually carried."""
         src = self.registry.get(src_replica, shard_idx)
+        self._fault_read(src_replica, shard_idx)
         cdc = codec_lib.get_codec(codec)
         rec = self.recorder
         if codec == "raw":
             payload = src.read_unit(unit).copy()  # the wire copy
+            self._fault_flip(
+                src_replica,
+                payload,
+                self.verify_checksums and bool(expected_checksum),
+            )
             if self.verify_checksums and expected_checksum:
                 t0 = rec.clock() if rec.enabled else 0.0
                 got = checksum_lib.checksum(payload)
@@ -418,6 +439,7 @@ class LocalTransport:
         )
         t_verify = (rec.clock() - t0) if rec.enabled else 0.0
         payload = decoded_src.copy()  # the wire copy, decoded at the dest
+        self._fault_flip(src_replica, payload, self.verify_checksums)
         if self.verify_checksums:
             t0 = rec.clock() if rec.enabled else 0.0
             got = checksum_lib.checksum(payload)
@@ -466,6 +488,7 @@ class LocalTransport:
         checksums alone would not catch it — they are computed at read
         time and would happily cover garbage)."""
         src = self.registry.get(src_replica, shard_idx)
+        self._fault_read(src_replica, shard_idx)
         full = src.read_unit(unit)
         # a zero-length tail chunk (offset == nbytes == end of unit) is a
         # valid no-op read; negative lengths and any byte past the unit
@@ -482,6 +505,7 @@ class LocalTransport:
             expected = checksum_lib.checksum(view) if self.verify_checksums else 0
             t_verify = (rec.clock() - t0) if rec.enabled else 0.0
             payload = view.copy()  # the wire copy
+            self._fault_flip(src_replica, payload, self.verify_checksums)
             if self.verify_checksums:
                 t0 = rec.clock() if rec.enabled else 0.0
                 got = checksum_lib.checksum(payload)
@@ -517,6 +541,7 @@ class LocalTransport:
         )
         t_verify = (rec.clock() - t0) if rec.enabled else 0.0
         payload = decoded_src.copy()  # the wire copy, decoded at the dest
+        self._fault_flip(src_replica, payload, self.verify_checksums)
         if self.verify_checksums:
             t0 = rec.clock() if rec.enabled else 0.0
             got = checksum_lib.checksum(payload)
@@ -559,12 +584,14 @@ class LocalTransport:
                 f"codec {codec!r} for {tensor}[{offset}:{offset + nbytes}]"
             )
         src = self.registry.get(src_replica, src_shard)
+        self._fault_read(src_replica, src_shard)
         view = src.read_range(tensor, offset, nbytes)
         rec = self.recorder
         t0 = rec.clock() if rec.enabled else 0.0
         expected = checksum_lib.checksum(view) if self.verify_checksums else 0
         t_verify = (rec.clock() - t0) if rec.enabled else 0.0
         payload = view.copy()  # the wire copy
+        self._fault_flip(src_replica, payload, self.verify_checksums)
         if self.verify_checksums:
             t0 = rec.clock() if rec.enabled else 0.0
             got = checksum_lib.checksum(payload)

@@ -29,6 +29,12 @@ from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_
 from repro.obs import telemetry as obs
 from repro.transfer import codec as codec_lib
 from repro.transfer.engine import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW
+from repro.transfer.faults import (
+    DEFAULT_RETRY_POLICY,
+    FaultPlan,
+    RetryPolicy,
+    SimFaultInjector,
+)
 from repro.transfer.hardware import CLUSTER, ClusterHW
 from repro.transfer.simnet import FlowKilled, Link, SimEnv, SimEvent, SimNetwork
 
@@ -40,11 +46,15 @@ class PreemptedError(Exception):
 
 
 class _SimSourceLost(Exception):
-    """Internal: assigned source died mid-pull; re-route and resume."""
+    """Internal: assigned source failed us mid-pull; re-route and resume.
+    ``evidence`` mirrors the threaded client's classes ("fatal" |
+    "transient" | "corrupt") and is forwarded to
+    ``report_transfer_failure`` for strike-counting vs eviction."""
 
-    def __init__(self, source: str) -> None:
+    def __init__(self, source: str, evidence: str = "fatal") -> None:
         super().__init__(source)
         self.source = source
+        self.evidence = evidence
 
 
 class _SimReplan(Exception):
@@ -199,6 +209,10 @@ class SimCluster:
         codec_dtype: str = "float32",
         log: Optional[OpLog] = None,
         telemetry: bool = False,
+        retry_policy: Optional[RetryPolicy] = None,
+        faults: Optional[FaultPlan] = None,
+        quarantine_threshold: int = 3,
+        quarantine_probation: float = 30.0,
     ) -> None:
         #: DEPRECATED — ``tcp_compression`` was a hand-set cross-DC
         #: wire-byte scalar whose docstring claimed the int8 ratio while
@@ -283,6 +297,10 @@ class SimCluster:
             # the sim derives fluid wire bytes from the negotiated
             # codec's size formula per manifest (codec_ratio below)
             wan_codec=wan_codec,
+            # gray-failure classifier: transient/corrupt evidence
+            # strike-counts toward source quarantine instead of eviction
+            quarantine_threshold=quarantine_threshold,
+            quarantine_probation=quarantine_probation,
             # fault tolerance: replayable op log; crash_and_recover()
             # rebuilds a bit-identical controller from it mid-run
             log=log,
@@ -292,6 +310,18 @@ class SimCluster:
         self._workers: Dict[Tuple[str, int], SimWorker] = {}
         self._node_seq = itertools.count()
         self.replicas: Dict[str, "SimReplica"] = {}
+        #: self-healing knobs (per-read deadline, retry backoff, hedging)
+        self.retry_policy = (
+            DEFAULT_RETRY_POLICY if retry_policy is None else retry_policy
+        )
+        #: hedged reads + read-deadline watchdogs are gated off unless the
+        #: caller opted in (a fault plan or an explicit policy): they add
+        #: wakeup events that would perturb the calibrated healthy-path
+        #: benchmark timings
+        self._hedging = retry_policy is not None or faults is not None
+        self.faults: Optional[SimFaultInjector] = None
+        if faults is not None:
+            self.install_faults(faults)
 
     # -- topology -----------------------------------------------------------------
 
@@ -411,6 +441,16 @@ class SimCluster:
         self.env.state_notify()
         return new
 
+    def install_faults(self, plan: FaultPlan) -> "SimFaultInjector":
+        """Arm a deterministic gray-fault schedule on this cluster (and
+        enable the self-healing machinery — hedged reads, read-deadline
+        watchdogs — that a faulted run is meant to exercise)."""
+        inj = SimFaultInjector(self, plan)
+        inj.install()
+        self.faults = inj
+        self._hedging = True
+        return inj
+
     def kill_replica(self, name: str) -> None:
         """Spot preemption / node failure: immediate, no grace (5.3)."""
         rep = self.replicas.get(name)
@@ -418,10 +458,11 @@ class SimCluster:
             for s in rep.shards:
                 s.worker.alive = False
                 s.dead = True
-        # flows from/to the victim die; readers notice after the RDMA timeout
+        # flows from/to the victim die; readers notice after the per-read
+        # deadline (retry_policy.fail_detect, default = the RDMA timeout)
         self.net.kill_flows(
             lambda f: f.tag.startswith(f"{name}/") or f"->{name}/" in f.tag,
-            notice_delay=self.hw.rdma_fail_detect,
+            notice_delay=self.retry_policy.fail_detect,
         )
         # the server learns via missed heartbeats
         self.env.schedule(self.hw.heartbeat_timeout, lambda: self._server_fail(name))
@@ -767,9 +808,23 @@ class SimShard:
                 codec, self.rep.manifest_for(self.idx)
             )
         tag = f"{src_replica}/s{src_shard}->{dest_name}/s{self.idx}"
-        return cluster.net.flow(
+        ev = cluster.net.flow(
             nbytes, links, rate_cap=cap, latency=hw.unit_latency, tag=tag
         )
+        if cluster.faults is not None and cluster.faults.flaky_hit(
+            src_replica, self.env.now
+        ):
+            # injected flake: the flow starts, then dies almost at once
+            # with a *transient* kill (the endpoint is fine — the reader
+            # backs off and retries). Scheduled past the flow's start
+            # latency so kill_flows sees it attached.
+            self.env.schedule(
+                hw.unit_latency * 2,
+                lambda: cluster.net.kill_flows(
+                    lambda f: f.event is ev, transient=True
+                ),
+            )
+        return ev
 
     def _g_pull(self, assignment: Assignment, *, dest: str) -> Generator:
         """The pipeline-replication read loop (4.3.3) in virtual time.
@@ -784,17 +839,20 @@ class SimShard:
         """
         version = assignment.version
         completed: set = set()  # out-of-order completions, kept across re-plans
+        rejects: Dict[int, int] = {}  # unit -> checksum rejects, across re-plans
         while True:
             try:
                 if assignment.resharded:
                     yield from self._g_pull_resharded(assignment, dest)
                 else:
-                    yield from self._g_pull_units(assignment, dest, completed)
+                    yield from self._g_pull_units(
+                        assignment, dest, completed, rejects
+                    )
                 break
             except _SimReplan:
                 assignment = yield from self._g_refetch(dest)
             except _SimSourceLost as e:
-                assignment = yield from self._g_reroute(dest, e.source)
+                assignment = yield from self._g_reroute(dest, e.source, e.evidence)
         yield self._ctrl()
         self.server.complete_replicate(
             self.rep.model,
@@ -843,12 +901,18 @@ class SimShard:
         return window, chunk
 
     def _g_pull_units(
-        self, assignment: Assignment, dest: str, completed: Optional[set] = None
+        self,
+        assignment: Assignment,
+        dest: str,
+        completed: Optional[set] = None,
+        rejects: Optional[Dict[int, int]] = None,
     ) -> Generator:
         version = assignment.version
         units = self.rep.manifest_for(self.idx).units
         if completed is None:
             completed = set()
+        if rejects is None:
+            rejects = {}
         while True:
             done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
             if done >= len(units):
@@ -859,16 +923,22 @@ class SimShard:
             slices = assignment.slices(len(units))
             window, chunk = self._plane_knobs(slices)
             if window <= 1 and chunk is None and len(slices) == 1:
-                yield from self._g_pull_units_seq(assignment, dest)
+                yield from self._g_pull_units_seq(assignment, dest, rejects)
                 return
             yield from self._g_pull_units_windowed(
-                assignment, dest, slices, done, window, chunk, completed
+                assignment, dest, slices, done, window, chunk, completed, rejects
             )
 
-    def _g_pull_units_seq(self, assignment: Assignment, dest: str) -> Generator:
+    def _g_pull_units_seq(
+        self,
+        assignment: Assignment,
+        dest: str,
+        rejects: Optional[Dict[int, int]] = None,
+    ) -> Generator:
         """The pre-scheduler data plane: one whole-unit flow at a time from
         a single source. Kept verbatim as the window=1/chunking-off
-        reference path (benchmarks compare against it bit-for-bit)."""
+        reference path (benchmarks compare against it bit-for-bit; the
+        retry/corrupt branches are reachable only with faults armed)."""
         env = self.env
         version = assignment.version
         manifest = self.rep.manifest_for(self.idx)
@@ -876,6 +946,10 @@ class SimShard:
         source = assignment.source
         transport = assignment.transport
         codec = assignment.codec
+        cl = self.rep.cluster
+        policy = cl.retry_policy
+        if rejects is None:
+            rejects = {}
         done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
         while done < len(units):
             if self.dead:
@@ -884,18 +958,41 @@ class SimShard:
                 source, version, self.idx, done
             )
             for i in range(done, avail):
-                try:
-                    yield from self._g_timed_flow(
-                        self._flow_for_bytes(
-                            source, self.idx, units[i].nbytes, transport, dest,
-                            codec=codec,
-                        ),
-                        "flow", source, units[i].nbytes, codec, transport,
-                    )
-                except FlowKilled:
-                    if self.dead:
-                        raise PreemptedError(self.worker.worker_id)
-                    raise _SimSourceLost(source)
+                attempt = 0
+                while True:
+                    try:
+                        yield from self._g_timed_flow(
+                            self._flow_for_bytes(
+                                source, self.idx, units[i].nbytes, transport,
+                                dest, codec=codec,
+                            ),
+                            "flow", source, units[i].nbytes, codec, transport,
+                        )
+                        break
+                    except FlowKilled as e:
+                        if self.dead:
+                            raise PreemptedError(self.worker.worker_id)
+                        if not e.transient or attempt >= policy.retry_limit:
+                            raise _SimSourceLost(
+                                source,
+                                evidence="transient" if e.transient else "fatal",
+                            )
+                        attempt += 1
+                        yield env.timeout(policy.backoff(attempt))
+                if cl.faults is not None and cl.faults.corrupt_hit(
+                    source, env.now
+                ):
+                    # injected corruption: the destination-side checksum
+                    # rejects the unit; report and re-plan rather than
+                    # abort, bounded per unit (see the threaded plane)
+                    rejects[i] = rejects.get(i, 0) + 1
+                    if rejects[i] > policy.retry_limit:
+                        raise TensorHubError(
+                            f"unit {units[i].name}: {rejects[i]} checksum "
+                            "rejects across re-plans; data is corrupt at "
+                            "every source"
+                        )
+                    raise _SimSourceLost(source, evidence="corrupt")
                 done += 1
                 self.server.update_progress(
                     self.rep.model, dest, self.idx, version, done
@@ -951,6 +1048,7 @@ class SimShard:
         window: int,
         chunk: Optional[float],
         completed: set,
+        rejects: Optional[Dict[int, int]] = None,
     ) -> Generator:
         """Windowed multi-source pull: one worker process per source slice,
         a shared slot pool capping in-flight flows at ``window`` per shard,
@@ -984,6 +1082,14 @@ class SimShard:
             "scan": 0,  # first possibly-unclaimed task index
             "stop": None,  # None | "replan" | BaseException
             "epoch": assignment.epoch,
+            # self-healing state --------------------------------------
+            "rejects": rejects if rejects is not None else {},
+            "taskdone": [False] * len(tasks),  # completion claims
+            "ntaskdone": 0,
+            "inflight": {},  # task idx -> (start, source, worker idx)
+            "durations": [],  # completed flow durations (hedge baseline)
+            "hedged": set(),  # task idxs already duplicated once
+            "finished": False,  # parent's signal to the watchdog
         }
         ctl = ("ctl", dest, self.idx)
         slots = _SimSlots(env, window)
@@ -993,6 +1099,10 @@ class SimShard:
             )
             for k, sl in enumerate(slices)
         ]
+        if self.rep.cluster._hedging:
+            # faulted/healing runs only: per-read deadline watchdog (adds
+            # timer events, so gated off the calibrated healthy paths)
+            env.process(self._g_span_watchdog(state, dest, version, ctl))
         done_ev = SimEvent(env)
         pending = len(children)
 
@@ -1008,6 +1118,7 @@ class SimShard:
         for c in children:
             c.add_callback(on_child)
         yield done_ev
+        state["finished"] = True
         if self.dead:
             raise PreemptedError(self.worker.worker_id)
         stop = state["stop"]
@@ -1027,8 +1138,13 @@ class SimShard:
         ctl: tuple,
     ) -> Generator:
         env = self.env
+        cl = self.rep.cluster
+        policy = cl.retry_policy
+        hedging = cl._hedging
+        rec = cl.recorder
         tasks: List[_Task] = state["tasks"]
         claimed: List[bool] = state["claimed"]
+        taskdone: List[bool] = state["taskdone"]
         while True:
             if state["stop"] is not None:
                 return
@@ -1044,7 +1160,7 @@ class SimShard:
                     state["stop"] = "replan"
                     env.key_notify(ctl)
                 return
-            if state["unclaimed"] == 0:
+            if state["ntaskdone"] == len(tasks):
                 return
             try:
                 avail = self.server.shard_progress(
@@ -1068,40 +1184,135 @@ class SimShard:
             while state["scan"] < len(tasks) and claimed[state["scan"]]:
                 state["scan"] += 1
             pick = None
+            hedged = False
             for i in range(state["scan"], len(tasks)):
                 if not claimed[i] and tasks[i].unit < avail:
                     pick = i
                     break
+            if pick is None and hedging:
+                # idle with no unclaimed work: duplicate the slowest
+                # foreign in-flight flow instead (bounds single-source
+                # straggling at roughly the healthy source's speed; the
+                # first copy to finish claims the task)
+                pick = self._sim_hedge_pick(state, sl, avail, policy)
+                if pick is not None:
+                    hedged = True
+                    if rec.enabled:
+                        rec.counter_add(obs.CTR_HEDGES, 1)
+                        rec.event(
+                            "hedge", track=self.worker.worker_id,
+                            source=sl.source, unit=tasks[pick].unit,
+                        )
             if pick is None:
                 # nothing this source can serve yet: wait for its progress
-                yield env.any_of(
+                # (plus, when hedging, a timer for the next straggler
+                # becoming hedge-eligible — a stuck flow notifies nothing)
+                waits = [
                     env.key_wait(("progress", sl.source, self.idx)),
                     env.key_wait(ctl),
-                )
+                ]
+                if hedging:
+                    delay = self._sim_hedge_delay(state, sl, policy)
+                    if delay is not None:
+                        waits.append(env.timeout(delay))
+                yield env.any_of(*waits)
                 continue
-            claimed[pick] = True
-            state["unclaimed"] -= 1
-            if state["unclaimed"] == 0:
-                env.key_notify(ctl)  # wake gated siblings so they can exit
+            if not hedged:
+                claimed[pick] = True
+                state["unclaimed"] -= 1
+                if state["unclaimed"] == 0:
+                    env.key_notify(ctl)  # wake gated siblings so they can exit
             t = tasks[pick]
             yield slots.acquire()
-            if state["stop"] is not None:
+            if state["stop"] is not None or taskdone[pick]:
                 slots.release()
-                return
+                if state["stop"] is not None:
+                    return
+                continue  # hedge twin finished while we queued for a slot
+            started = env.now
+            state["inflight"][pick] = (started, sl.source, k)
+            attempt = 0
+            failed = None
+            delivered = False
             try:
-                yield from self._g_timed_flow(
-                    self._flow_for_bytes(
-                        sl.source, self.idx, t.nbytes, sl.transport, dest,
-                        codec=sl.codec,
-                    ),
-                    "flow", sl.source, t.nbytes, sl.codec, sl.transport,
-                )
-            except FlowKilled:
+                while True:
+                    try:
+                        yield from self._g_timed_flow(
+                            self._flow_for_bytes(
+                                sl.source, self.idx, t.nbytes, sl.transport,
+                                dest, codec=sl.codec,
+                            ),
+                            "flow", sl.source, t.nbytes, sl.codec, sl.transport,
+                        )
+                        delivered = True
+                        break
+                    except FlowKilled as e:
+                        if self.dead:
+                            raise PreemptedError(self.worker.worker_id)
+                        if e.transient and (
+                            state["stop"] is not None or taskdone[pick]
+                        ):
+                            break  # span drained / hedge twin won: abandon
+                        if not e.transient or attempt >= policy.retry_limit:
+                            failed = _SimSourceLost(
+                                sl.source,
+                                evidence="transient" if e.transient else "fatal",
+                            )
+                            break
+                        attempt += 1
+                        if rec.enabled:
+                            rec.counter_add(obs.CTR_RETRIES, 1)
+                            rec.event(
+                                "retry", track=self.worker.worker_id,
+                                source=sl.source, unit=t.unit, attempt=attempt,
+                            )
+                        yield env.timeout(policy.backoff(attempt))
+                        if state["stop"] is not None or taskdone[pick]:
+                            break  # abandoned mid-retry; drop the attempt
+            finally:
+                cur = state["inflight"].get(pick)
+                if cur is not None and cur[2] == k:
+                    del state["inflight"][pick]
                 slots.release()
-                if self.dead:
-                    raise PreemptedError(self.worker.worker_id)
-                raise _SimSourceLost(sl.source)
-            slots.release()
+            if failed is not None:
+                raise failed
+            if not delivered:
+                # flow abandoned mid-kill/retry: nothing arrived
+                if state["stop"] is not None:
+                    return
+                continue  # hedge twin won while we were backing off
+            if taskdone[pick]:
+                continue  # hedge twin won the race; identical bytes, drop
+            if cl.faults is not None and cl.faults.corrupt_hit(sl.source, env.now):
+                # injected corruption: the destination-side checksum
+                # rejects the unit; report + re-plan, bounded per unit
+                u = t.unit
+                state["rejects"][u] = state["rejects"].get(u, 0) + 1
+                if state["rejects"][u] > policy.retry_limit:
+                    raise TensorHubError(
+                        f"unit {u}: {state['rejects'][u]} checksum rejects "
+                        "across re-plans; data is corrupt at every source"
+                    )
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_CORRUPT_REJECTS, 1)
+                    rec.event(
+                        "corrupt_reject", track=self.worker.worker_id,
+                        source=sl.source, unit=u,
+                    )
+                raise _SimSourceLost(sl.source, evidence="corrupt")
+            taskdone[pick] = True
+            state["ntaskdone"] += 1
+            state["durations"].append(env.now - started)
+            if state["ntaskdone"] == len(tasks):
+                env.key_notify(ctl)  # wake hedging siblings so they can exit
+                if hedging and state["inflight"]:
+                    # a hedge twin finished last: losers still crawling on
+                    # a straggler would pin the span (the parent joins all
+                    # workers) — kill their flows with a transient notice
+                    cl.net.kill_flows(
+                        lambda f: f.tag.endswith(f"->{dest}/s{self.idx}"),
+                        transient=True,
+                    )
             rem = state["remaining"][t.unit] - 1
             state["remaining"][t.unit] = rem
             if rem == 0:
@@ -1115,6 +1326,114 @@ class SimShard:
                         self.rep.model, dest, self.idx, version, state["done"]
                     )
                     env.key_notify(("progress", dest, self.idx))
+
+    def _sim_hedge_pick(
+        self, state: dict, sl: SourceSlice, avail: int, policy: RetryPolicy
+    ) -> Optional[int]:
+        """Oldest in-flight task worth duplicating onto this idle source:
+        running longer than ``hedge_threshold`` x the median completed
+        flow, owned by a different source, not already hedged, and within
+        this source's served prefix."""
+        durs = state["durations"]
+        if len(durs) < policy.hedge_min_samples:
+            return None
+        med = sorted(durs)[len(durs) // 2]
+        threshold = policy.hedge_threshold * max(med, 1e-9)
+        now = self.env.now
+        tasks: List[_Task] = state["tasks"]
+        pick = None
+        oldest = None
+        for ti, (started, src, _k) in state["inflight"].items():
+            if src == sl.source or ti in state["hedged"]:
+                continue
+            if state["taskdone"][ti] or tasks[ti].unit >= avail:
+                continue
+            age = now - started
+            if age >= threshold and (oldest is None or age > oldest):
+                oldest = age
+                pick = ti
+        if pick is not None:
+            state["hedged"].add(pick)
+        return pick
+
+    def _sim_hedge_delay(
+        self, state: dict, sl: SourceSlice, policy: RetryPolicy
+    ) -> Optional[float]:
+        """Virtual-time delay until the next foreign in-flight flow could
+        become hedge-eligible (None when nothing qualifies — then the
+        keyed progress/ctl wakeups suffice)."""
+        durs = state["durations"]
+        if len(durs) < policy.hedge_min_samples:
+            return None
+        med = sorted(durs)[len(durs) // 2]
+        threshold = policy.hedge_threshold * max(med, 1e-9)
+        now = self.env.now
+        best = None
+        for ti, (started, src, _k) in state["inflight"].items():
+            if src == sl.source or ti in state["hedged"] or state["taskdone"][ti]:
+                continue
+            wait = (started + threshold) - now
+            if best is None or wait < best:
+                best = wait
+        if best is None:
+            return None
+        return max(best, self.hw.unit_latency)
+
+    def _g_span_watchdog(
+        self, state: dict, dest: str, version: int, ctl: tuple
+    ) -> Generator:
+        """Per-read deadline enforcement for one windowed span (faulted /
+        healing runs only). A flow in flight past ``fail_detect`` is
+        *transient* evidence against its source — reported (rate-limited
+        per source) so the server strike-counts toward quarantine. When
+        the resulting re-plan bumps the epoch, the watchdog drains the
+        span and transiently kills its inbound flows so workers blocked
+        on a hung (zero-bandwidth) flow wake up and exit."""
+        env = self.env
+        cl = self.rep.cluster
+        policy = cl.retry_policy
+        rec = cl.recorder
+        last_report: Dict[str, float] = {}
+        tick = max(policy.fail_detect / 2.0, cl.hw.unit_latency)
+        while True:
+            yield env.timeout(tick)
+            if state["finished"] or state["stop"] is not None or self.dead:
+                return
+            now = env.now
+            overdue: List[str] = []
+            for ti, (started, src, _k) in list(state["inflight"].items()):
+                if state["taskdone"][ti]:
+                    continue
+                if now - started >= policy.fail_detect:
+                    prev = last_report.get(src)
+                    if prev is None or now - prev >= policy.fail_detect:
+                        last_report[src] = now
+                        overdue.append(src)
+            for src in overdue:
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_DEADLINE_REPORTS, 1)
+                    rec.event(
+                        "read_deadline", track=self.worker.worker_id, source=src
+                    )
+                try:
+                    self.server.report_transfer_failure(
+                        self.rep.model, dest, src, "transient", now
+                    )
+                except (StaleHandleError, TensorHubError):
+                    return  # dest state gone; workers unwind on their own
+            try:
+                ep = self.server.assignment_epoch(self.rep.model, dest, version)
+            except (StaleHandleError, TensorHubError):
+                return
+            if ep != state["epoch"]:
+                if state["stop"] is None:
+                    state["stop"] = "replan"
+                    env.key_notify(ctl)
+                cl.net.kill_flows(
+                    lambda f: f.tag.endswith(f"->{dest}/s{self.idx}"),
+                    transient=True,
+                )
+                return
 
     def _g_refetch(self, dest: str) -> Generator:
         """Re-fetch the (re-partitioned) assignment after a plan epoch
@@ -1201,11 +1520,15 @@ class SimShard:
             self.server.update_progress(self.rep.model, dest, self.idx, version, done)
             env.key_notify(("progress", dest, self.idx))
 
-    def _g_reroute(self, dest: str, dead_source: str) -> Generator:
+    def _g_reroute(
+        self, dest: str, dead_source: str, evidence: str = "fatal"
+    ) -> Generator:
         if self.dead:
             raise PreemptedError(self.worker.worker_id)
         yield self._ctrl()
-        self.server.report_transfer_failure(self.rep.model, dest, dead_source)
+        self.server.report_transfer_failure(
+            self.rep.model, dest, dead_source, evidence, self.env.now
+        )
         while True:
             new = self.server.get_assignment(self.rep.model, dest)
             if new is not None:

@@ -27,13 +27,23 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
-from typing import Callable, Dict, Generator, Iterable, List, Optional, Set, Tuple
+from typing import Callable, Dict, Generator, Iterable, List, Optional, Tuple
 
 Process = Generator
 
 
 class FlowKilled(Exception):
-    """The flow's src/dst vanished; delivered after the detection delay."""
+    """The flow's src/dst vanished; delivered after the detection delay.
+
+    ``transient`` marks an injected gray failure (flaky read): the
+    endpoint is still alive and a retry is expected to succeed, so the
+    reader backs off and re-issues instead of reporting a dead source.
+    """
+
+    def __init__(self, tag: str = "", transient: bool = False) -> None:
+        super().__init__(tag)
+        self.tag = tag
+        self.transient = transient
 
 
 class SimEvent:
@@ -261,7 +271,10 @@ class Link:
     def __init__(self, name: str, capacity: float) -> None:
         self.name = name
         self.capacity = capacity
-        self.flows: Set["Flow"] = set()
+        # insertion-ordered set: Flow hashes by id, so a real set would
+        # iterate in a different order every process/run — float
+        # accumulation order must be reproducible for bit-identical replay
+        self.flows: Dict["Flow", None] = {}
 
     def __repr__(self) -> str:
         return f"Link({self.name}, {self.capacity/1e9:.1f} GB/s, {len(self.flows)} flows)"
@@ -296,7 +309,8 @@ class SimNetwork:
     def __init__(self, env: SimEnv) -> None:
         self.env = env
         self._links: Dict[str, Link] = {}
-        self._flows: Set[Flow] = set()
+        #: insertion-ordered (see Link.flows): deterministic iteration
+        self._flows: Dict[Flow, None] = {}
         self._last_advance = 0.0
         #: earliest pending completion tick (de-dup: re-scheduling on every
         #: reallocation without it turns interacting windowed flows into a
@@ -343,24 +357,33 @@ class SimNetwork:
             if fl.dead:
                 return
             self._advance_to_now()
-            self._flows.add(fl)
+            self._flows[fl] = None
             for lk in fl.links:
-                lk.flows.add(fl)
+                lk.flows[fl] = None
             self._reallocate()
 
         self.env.schedule(latency, start)
         return ev
 
-    def kill_flows(self, pred: Callable[[Flow], bool], *, notice_delay: float = 0.0) -> int:
+    def kill_flows(
+        self,
+        pred: Callable[[Flow], bool],
+        *,
+        notice_delay: float = 0.0,
+        transient: bool = False,
+    ) -> int:
         """Abort flows matching pred; waiters get FlowKilled after
-        notice_delay (the reader-side failure-detection timeout, 5.1.3)."""
+        notice_delay (the reader-side failure-detection timeout, 5.1.3).
+        ``transient`` flags the kill as a retryable gray fault rather
+        than a dead endpoint."""
         victims = [f for f in self._flows if pred(f)]
         self._advance_to_now()
         for fl in victims:
             self._detach(fl)
             fl.dead = True
             self.env.schedule(
-                notice_delay, (lambda f=fl: f.event.fail(FlowKilled(f.tag)))
+                notice_delay,
+                (lambda f=fl: f.event.fail(FlowKilled(f.tag, transient=transient))),
             )
         if victims:
             self._reallocate()
@@ -369,9 +392,9 @@ class SimNetwork:
     # -- fluid model ---------------------------------------------------------------------
 
     def _detach(self, fl: Flow) -> None:
-        self._flows.discard(fl)
+        self._flows.pop(fl, None)
         for lk in fl.links:
-            lk.flows.discard(fl)
+            lk.flows.pop(fl, None)
 
     def _advance_to_now(self) -> bool:
         """Credit every active flow with rate * elapsed. Returns True when
@@ -403,7 +426,7 @@ class SimNetwork:
         flows = list(self._flows)
         if not flows:
             return
-        unfixed: Set[Flow] = set(flows)
+        unfixed: Dict[Flow, None] = dict.fromkeys(flows)
         cap: Dict[Link, float] = {}
         for fl in flows:
             for lk in fl.links:
@@ -422,7 +445,7 @@ class SimNetwork:
             if capped:
                 for f in capped:
                     f.rate = f.rate_cap
-                    unfixed.discard(f)
+                    unfixed.pop(f, None)
                     for lk in f.links:
                         cap[lk] = max(cap[lk] - f.rate_cap, 0.0)
                 continue
@@ -434,7 +457,7 @@ class SimNetwork:
                 if n and abs(c / n - best_share) < 1e-12:
                     for f in [f for f in lk.flows if f in unfixed]:
                         f.rate = best_share
-                        unfixed.discard(f)
+                        unfixed.pop(f, None)
                         for l2 in f.links:
                             cap[l2] = max(cap[l2] - best_share, 0.0)
         self._schedule_next_completion()

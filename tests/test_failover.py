@@ -179,11 +179,23 @@ def _random_trace(server: ReferenceServer, rng: random.Random, n_ops: int) -> No
             server.poll_events(f"{name}/s0")
         elif kind == "heartbeat":
             server.heartbeat("m", name, 0, now=rng.random() * 10)
+        elif kind == "suspect":
+            # gray-failure evidence: strikes, quarantines and probation
+            # windows are part of the replayed state
+            server.report_transfer_failure(
+                "m",
+                name,
+                rng.choice([n for n in names if n != name]),
+                rng.choice(["transient", "transient", "corrupt", "fatal"]),
+                now=rng.random() * 10,
+            )
+        elif kind == "tick":
+            server.tick(rng.random() * 20)
 
     kinds = [
         "open", "open", "publish", "publish", "replicate", "replicate",
         "update", "progress", "progress", "complete", "unpublish",
-        "fail", "events", "heartbeat",
+        "fail", "events", "heartbeat", "suspect", "suspect", "tick",
     ]
     for _ in range(n_ops):
         try:

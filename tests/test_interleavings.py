@@ -333,3 +333,95 @@ def test_random_progress_bumps_against_planner():
                     pos = b
                     assert src in vmap, f"seed {seed}: dead source {src} in plan"
                 assert pos in (n_units, -1), f"seed {seed}: plan does not tile: {rv.plan}"
+
+
+@pytest.mark.timeout(120)
+def test_heartbeat_eviction_races_inflight_pull():
+    """Gray failure: a slow-but-alive publisher stops heartbeating and is
+    evicted by ``tick`` while a destination is mid-pull FROM it. The
+    eviction must not wedge or corrupt the pull — the reader re-plans
+    onto the healthy peer and converges to bit-identical payloads."""
+    from repro.transfer.faults import FaultPlan, FaultSpec, RetryPolicy
+    from repro.transfer.faults import ThreadedFaultInjector
+
+    def tensors(tag: float):
+        # 4 MB each — above the tiny-tensor compaction cutoff, so each
+        # tensor is its own transfer unit and the pull spans many reads
+        # (a wide window for the eviction to land inside)
+        return {
+            f"w{i}": np.full((1024, 1024), tag + i, dtype=np.float32)
+            for i in range(3)
+        }
+
+    server = ReferenceServer(heartbeat_timeout=1.0)
+    # slow reads from pub stretch the pull; fail_detect is kept far above
+    # the stall so the *eviction*, not deadline quarantine, is the event
+    # under test
+    inj = ThreadedFaultInjector(
+        FaultPlan(seed=13, faults=(FaultSpec("slow", "pub", stall=0.05),))
+    )
+    policy = RetryPolicy(
+        fail_detect=30.0, retry_limit=4, retry_backoff=0.01,
+        hedge_threshold=1e9, hedge_min_samples=1 << 30,
+    )
+    clean = TensorHubClient(server, chunk_bytes=1 << 20)
+    hub = TensorHubClient(
+        server,
+        registry=clean.registry,
+        chunk_bytes=1 << 20,
+        retry_policy=policy,
+        faults=inj,
+    )
+    pubs = [clean.open("m", "pub", 2, i) for i in range(2)]
+    for h in pubs:
+        h.register(tensors(5.0))
+    run_threads(pubs, lambda h: h.publish(0))
+    peers = [clean.open("m", "peer", 2, i) for i in range(2)]
+    for h in peers:
+        h.register(tensors(0.0))
+    run_threads(peers, lambda h: h.replicate(0))
+
+    dests = [hub.open("m", "dest", 2, i) for i in range(2)]
+    for h in dests:
+        h.register(tensors(0.0))
+    inj.arm()
+
+    def evict_pub_mid_pull():
+        time.sleep(0.08)  # land inside the slowed multi-unit pull
+        with hub._cv:  # noqa: SLF001 — failure injection
+            # survivors heartbeat, the gray publisher does not: the tick
+            # evicts exactly pub while dest is reading from it
+            for survivor in ("peer", "dest"):
+                for shard in range(2):
+                    server.heartbeat("m", survivor, shard, now=2.0)
+            assert server.tick(2.0) == ["pub"]
+            hub._cv.notify_all()
+
+    kt = threading.Thread(target=evict_pub_mid_pull, daemon=True)
+    kt.start()
+    run_threads(dests, lambda h: h.replicate(0))
+    kt.join(timeout=10)
+    inj.release()
+    assert server.stats["evictions"] == 1
+    want = tensors(5.0)
+    for h in dests:
+        for name, arr in want.items():
+            assert np.array_equal(h.store.get(name), arr), (h.shard_idx, name)
+
+
+def run_threads(handles, fn):
+    errs = []
+
+    def wrap(h):
+        try:
+            fn(h)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=wrap, args=(h,)) for h in handles]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=90)
+    if errs:
+        raise errs[0]
