@@ -563,6 +563,13 @@ class ShardHandle:
                 sp.end()
 
     def unpublish(self) -> None:
+        # snapshot the retiring version as the delta base BEFORE telling
+        # the server: once unpublish lands, the server may negotiate
+        # residuals against this replica's prior version, and the
+        # snapshot must already exist when the first delta read arrives
+        v = self.current_version
+        if v is not None:
+            self.store.snapshot_base(v)
         op = self._next_op()
         with self._cv:
             res = self._scall(
@@ -642,6 +649,7 @@ class ShardHandle:
 
     def update(self, version: object = "latest") -> bool:
         """Atomically switch to a newer version if available (Table 2)."""
+        prev = self.current_version
         op = self._next_op()
         rec = self.client.recorder
         sp = None
@@ -670,6 +678,13 @@ class ShardHandle:
             if d.offload_required and d.offload_version is not None:
                 self._do_retention_offload(d.offload_version)
             self._wait_drained()
+            # the buffers still hold the retiring version: snapshot them
+            # as the delta base (this replica may later SERVE residuals
+            # to a peer updating from the same prior version; the pull
+            # below also decodes incoming residuals against these bytes,
+            # still live in the buffers until each unit is overwritten)
+            if prev is not None:
+                self.store.snapshot_base(prev)
             assert d.assignment is not None
             self._note_assignment(d.assignment)
             self._pull(d.assignment, op_id=op, dest_name=self.replica, dest_store=self.store)
@@ -1082,12 +1097,17 @@ class ShardHandle:
                         if getattr(e, "transient", False)
                         else "fatal",
                     )
-                except ChecksumError:
+                except (ChecksumError, codec_lib.CodecError):
                     # corrupt bytes from this source: report the evidence
                     # (the server quarantines it and re-plans) and resume
                     # from the prefix instead of aborting the pull. Bounded
                     # per unit: if every re-plan keeps rejecting the same
-                    # unit, the data is genuinely bad — propagate.
+                    # unit, the data is genuinely bad — propagate. A
+                    # CodecError is a torn/misframed wire frame — the
+                    # decode-failure twin of a checksum mismatch; it routes
+                    # through the same healing (StaleBaseError never
+                    # reaches here: the transport resolves delta-base
+                    # staleness internally, it is not source corruption).
                     rejects[i] = rejects.get(i, 0) + 1
                     if rejects[i] > policy.retry_limit:
                         raise
@@ -1466,10 +1486,13 @@ class ShardHandle:
                             sl.source,
                             unit=tasks[pick].unit,
                         )
-                    except ChecksumError:
-                        # corrupt bytes: report, bounded per unit — if
-                        # every re-plan keeps rejecting this unit the
-                        # data is genuinely bad and the error propagates
+                    except (ChecksumError, codec_lib.CodecError):
+                        # corrupt bytes OR a torn/misframed wire frame
+                        # (CodecError from decode): report, bounded per
+                        # unit — if every re-plan keeps rejecting this
+                        # unit the data is genuinely bad and the error
+                        # propagates. Delta-base staleness never lands
+                        # here; the transport handles it internally.
                         u = tasks[pick].unit
                         with shared["lock"]:
                             n = shared["rejects"].get(u, 0) + 1
@@ -1548,9 +1571,17 @@ class ShardHandle:
                     dest_store, codec=sl.codec, link_class=lc,
                 )
             else:
+                dbase = None
+                if getattr(codec_lib.get_codec(sl.codec), "needs_base", False):
+                    # delta chunk: hand the transport the destination's
+                    # held bytes for this exact range (the base buffers
+                    # stay intact until the reassembled unit is absorbed)
+                    held = self.client.transport._dest_base(dest_store, unit)
+                    if held is not None and held.nbytes == unit.nbytes:
+                        dbase = held[t.offset : t.offset + t.nbytes]
                 payload = self.client.transport.read_unit_range(
                     sl.source, self.shard_idx, unit, t.offset, t.nbytes,
-                    codec=sl.codec, link_class=lc,
+                    codec=sl.codec, link_class=lc, dest_base=dbase,
                 )
         finally:
             if sp is not None:

@@ -135,6 +135,13 @@ class ReplicaInfo:
     #: replay carry them automatically.
     suspect_strikes: int = 0
     quarantined_until: Optional[float] = None
+    #: delta-transfer bookkeeping: the most recent version this replica
+    #: fully held before retiring it (set at unpublish / update start).
+    #: A destination with ``prior_version == v`` still holds v's bytes
+    #: (and its store snapshotted them), so a source whose own
+    #: ``prior_version`` matches can serve int8 residuals instead of the
+    #: full payload. Wire-registered, so failover replay carries it.
+    prior_version: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -271,6 +278,7 @@ class ReferenceServer:
         chunk_hint: Optional[float] = None,
         swarm: bool = True,
         wan_codec: str = "int8",
+        wan_delta: bool = True,
         quarantine_threshold: int = 3,
         quarantine_probation: float = 30.0,
         log: Optional[OpLog] = None,
@@ -300,6 +308,16 @@ class ReferenceServer:
 
         get_codec(wan_codec)
         self._wan_codec = wan_codec
+        #: delta negotiation: when a WAN-crossing slice's source and
+        #: destination both retired the same prior version (tracked on
+        #: ``ReplicaInfo.prior_version``), negotiate
+        #: ``delta:<wan_codec>`` — the source ships int8 residuals
+        #: against the base both sides still hold. Only meaningful for
+        #: base codecs the delta framing supports; other wan_codecs
+        #: (e.g. ``fixed:<r>``) silently negotiate plain.
+        self._wan_delta = bool(wan_delta)
+        if self._wan_delta and wan_codec in ("raw", "int8"):
+            get_codec(f"delta:{wan_codec}")
         #: swarm replication: admit *in-progress* replicas into the
         #: multi-source pool for the prefix of units they have completed
         #: (unit-granular availability map). ``swarm=False`` reproduces
@@ -334,6 +352,12 @@ class ReferenceServer:
             "corrupt_reports": 0,
             "quarantines": 0,
             "probation_lifts": 0,
+            # delta negotiation: logged assignments that carried at least
+            # one delta slice / degraded a would-be-codec slice to raw at
+            # plan time (aliased source layout — the resharded interval
+            # path is raw-only)
+            "delta_assignments": 0,
+            "codec_degrades": 0,
         }
         #: wall-clock duration of the last failover recovery that built
         #: this server (set by ``repro.core.failover.recover``; 0.0 for a
@@ -364,6 +388,7 @@ class ReferenceServer:
             "chunk_hint": self._chunk_hint,
             "swarm": self._swarm,
             "wan_codec": self._wan_codec,
+            "wan_delta": self._wan_delta,
             "quarantine_threshold": self._quarantine_threshold,
             "quarantine_probation": self._quarantine_probation,
         }
@@ -1339,6 +1364,10 @@ class ReferenceServer:
         # hide from the scheduler immediately; mutation must wait for drain
         rv.status = DRAINING
         info.current_version = None
+        # delta bookkeeping: this replica just retired v and its store
+        # snapshots the bytes — it can serve/receive residuals against v
+        # until it next completes a different version
+        info.prior_version = v
         if rv.refcount == 0 and not offload_required:
             self._drop_replica_version(st, info.name, v)
             return UnpublishResult(offload_required=False, drained=True)
@@ -1557,11 +1586,17 @@ class ReferenceServer:
         dest: ReplicaInfo,
         plan: Optional[List[Tuple[str, int, int]]] = None,
         epoch: int = 0,
+        record_stats: bool = False,
     ) -> Assignment:
         cross = self._cross_dc(st, src, dest)
         vmap = st.versions.get(version, {})
+        # stats are only recorded on the LOGGED path (_assign): the
+        # unlogged rebuild paths (get_assignment, redeem) re-derive the
+        # same plan, and server.stats sits inside the failover state
+        # digest — bumping it off-log would break replay equality.
+        tally = {"degrade": False, "delta": False}
 
-        def codec_for(is_cross: bool, source_shards: int) -> str:
+        def codec_for(is_cross: bool, source_shards: int, source_name: str) -> str:
             # per-link negotiation: WAN-crossing slices carry the WAN
             # codec; intra-DC stays raw. Mismatched shard counts run the
             # resharded interval-read path, which is raw-only in this
@@ -1569,7 +1604,35 @@ class ReferenceServer:
             # so the planes also reject non-raw resharded assignments.
             if not is_cross or source_shards != dest.num_shards:
                 return "raw"
-            return self._wan_codec
+            # aliased layout: same shard count but a different unit
+            # slicing also runs the resharded interval-read path —
+            # degrade to raw at PLAN time, not mid-flight (the guard in
+            # the transports would otherwise raise a CodecError after
+            # the flow had already started)
+            sm = st.replica_manifests.get(version, {}).get((source_name, 0))
+            fam = st.manifests.get(version, {}).get((dest.num_shards, 0))
+            if sm is not None and fam is not None and not sm.same_layout(fam):
+                tally["degrade"] = True
+                return "raw"
+            codec = self._wan_codec
+            # delta negotiation: both endpoints retired the same prior
+            # version, so the source can ship int8 residuals against the
+            # base the destination still holds. Any endpoint that cannot
+            # (fresh destination, GC'd base, re-plan/steal/failover
+            # reassert onto a snapshot-less source) negotiates — or falls
+            # back on the wire to — the plain base codec.
+            s_info = st.replicas.get(source_name)
+            if (
+                self._wan_delta
+                and codec in ("raw", "int8")
+                and dest.prior_version is not None
+                and dest.prior_version < version
+                and s_info is not None
+                and s_info.prior_version == dest.prior_version
+            ):
+                tally["delta"] = True
+                return f"delta:{codec}"
+            return codec
 
         slices = []
         for name, a, b in plan or []:
@@ -1588,11 +1651,11 @@ class ReferenceServer:
                     seeding=s_cross,
                     source_shards=s_shards,
                     ceiling=self._source_ceiling(st, s_rv),
-                    codec=codec_for(s_cross, s_shards),
+                    codec=codec_for(s_cross, s_shards, name),
                 )
             )
         src_shards = st.replicas[src.replica].num_shards
-        return Assignment(
+        assignment = Assignment(
             version=version,
             source=src.replica,
             source_kind=src.kind,
@@ -1602,8 +1665,16 @@ class ReferenceServer:
             dest_shards=dest.num_shards,
             sources=tuple(slices),
             epoch=epoch,
-            codec=slices[0].codec if slices else codec_for(cross, src_shards),
+            codec=slices[0].codec
+            if slices
+            else codec_for(cross, src_shards, src.replica),
         )
+        if record_stats:
+            if tally["degrade"]:
+                self.stats["codec_degrades"] += 1
+            if tally["delta"]:
+                self.stats["delta_assignments"] += 1
+        return assignment
 
     # -- multi-source planning (windowed data plane) ----------------------------
 
@@ -2237,7 +2308,7 @@ class ReferenceServer:
             self._acquire_source(st, vmap[name], dest)
         primary = vmap[plan[0][0]]
         assignment = self._make_assignment(
-            st, version, primary, dest=dest, plan=plan
+            st, version, primary, dest=dest, plan=plan, record_stats=True
         )
         self._install_replica_version(
             st,

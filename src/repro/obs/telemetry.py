@@ -46,6 +46,11 @@ CTR_HEDGES = "heal/hedges"
 CTR_CORRUPT_REJECTS = "heal/corrupt_rejects"
 CTR_DEADLINE_REPORTS = "heal/deadline_reports"
 
+# Delta-transfer fallbacks: a delta frame met a stale/evicted base at
+# the destination and the unit was transparently re-shipped through the
+# base codec (event count; pairs with a "delta_stale_fallback" event).
+CTR_DELTA_STALE = "heal/delta_stale_fallbacks"
+
 
 class _NullSpan:
     """Shared no-op span; returned by a disabled recorder."""

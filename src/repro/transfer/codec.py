@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.errors import TensorHubError
 from repro.core.meta import TensorMeta, TransferUnit, dtype_from_str
+from repro.transfer.checksum import checksum as _buf_checksum
 
 #: default row length (elements) of the ``int8`` wire codec: f32 scales
 #: per 256 elements cost 4/256 extra bytes/element, i.e. a wire ratio of
@@ -72,11 +73,27 @@ _MAGIC = 0x38515754  # "TWQ8"
 _VERSION = 1
 _FLAG_PASSTHROUGH = 1
 
+#: delta wire header: magic u32, version u8, flags u8, dtype code u8,
+#: reserved u8, row_len u32, orig_nbytes u64, base digest u64. The digest
+#: is the Fletcher checksum of the exact base bytes the residuals were
+#: computed against, so a stale or GC'd base fails loudly at decode
+#: instead of being silently summed into garbage.
+_D_HDR = struct.Struct("<IBBBBIQQ")
+_D_MAGIC = 0x38445754  # "TWD8"
+_D_VERSION = 1
+
 
 class CodecError(TensorHubError):
     """Malformed or inconsistent wire bytes (failed the wire-level
     scale/shape integrity check), or a codec misuse the data plane must
     refuse rather than corrupt bytes."""
+
+
+class StaleBaseError(CodecError):
+    """A delta frame's base-version digest does not match the bytes the
+    destination holds (base evicted, GC'd, or never present). The
+    transport catches this and transparently falls back to the base
+    codec — it must never surface as source-corruption evidence."""
 
 
 class WireCodec:
@@ -92,6 +109,10 @@ class WireCodec:
     #: lossless codecs decode to the exact source bytes, so publish-time
     #: manifest checksums remain valid on the decoded payload
     lossless: bool = True
+    #: codecs that encode residuals against a held base version; the
+    #: transport passes ``base=`` (source snapshot on encode, destination
+    #: held bytes on decode) only when this is set
+    needs_base: bool = False
 
     def encode(self, payload: np.ndarray, dtype: Optional[str]) -> np.ndarray:
         """Flat uint8 payload -> flat uint8 wire bytes."""
@@ -281,6 +302,247 @@ class Int8Codec(WireCodec):
         return 1
 
 
+class DeltaCodec(WireCodec):
+    """Version-delta codec: int8-quantized residuals of v(n+1) against
+    the destination's held v(n), ``delta:<base_codec>`` on the wire.
+
+    The source encodes against its own snapshot of the base version,
+    round-tripped through the base codec first so the residual is
+    computed against the *exact bytes the destination holds* (an
+    int8-seeded destination holds ``decode(encode(v_n))``, not ``v_n``).
+    Rows whose payload bits are identical to the base snapshot — the
+    common case for correlated RL weight versions — ship as a single bit
+    in a kept-row bitmap; only changed rows carry (scale, q) residuals on
+    the ``kernels/quant`` row grid. A skipped row decodes bit-exact from
+    the destination's held bytes, so a delta pull of an unchanged row is
+    byte-identical to what a fresh base-codec pull would have delivered.
+
+    The frame header carries a digest of the base bytes; decode raises
+    :class:`StaleBaseError` on mismatch (base evicted / GC'd / diverged)
+    and the transport re-fetches via the base codec. Every fallback frame
+    (no base at encode time, non-finite payload/base, unknown dtype) is a
+    plain int8-framed wire — quantized for base ``int8``, tagged bit-exact
+    passthrough for base ``raw`` — so decode sniffs the magic and never
+    needs out-of-band signalling.
+    """
+
+    lossless = False  # kept rows carry quantized residuals
+    needs_base = True
+
+    def __init__(self, base_name: str, row_len: int = INT8_ROW_LEN) -> None:
+        if base_name not in ("raw", "int8"):
+            raise ValueError(
+                f"delta base codec must be 'raw' or 'int8', got {base_name!r}"
+            )
+        self.base_name = base_name
+        self.name = f"delta:{base_name}"
+        self.row_len = row_len
+        self._int8 = Int8Codec(row_len)
+
+    # -- fallback framing (always int8-framed so decode can sniff) ---------
+
+    def _fallback(self, flat: np.ndarray, dtype: Optional[str]) -> np.ndarray:
+        if self.base_name == "int8":
+            return self._int8.encode(flat, dtype)
+        # base 'raw' must stay bit-exact: tagged passthrough frame
+        hdr = _HDR.pack(
+            _MAGIC, _VERSION, _FLAG_PASSTHROUGH, 0, 0, self.row_len, flat.nbytes
+        )
+        return np.concatenate([np.frombuffer(hdr, np.uint8), flat])
+
+    def _base_estimate(
+        self, base_flat: np.ndarray, dtype: Optional[str]
+    ) -> np.ndarray:
+        """The destination's held bytes, reconstructed source-side: the
+        base-codec round-trip of the source's base snapshot."""
+        if self.base_name == "raw":
+            return base_flat
+        return self._int8.decode(self._int8.encode(base_flat, dtype))
+
+    # -- encode / decode ---------------------------------------------------
+
+    def encode(
+        self,
+        payload: np.ndarray,
+        dtype: Optional[str],
+        base: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        flat = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
+        npdtype = None
+        if dtype in _QUANTIZABLE:
+            npdtype = dtype_from_str(dtype)
+            if flat.nbytes % npdtype.itemsize:
+                npdtype = None
+        if npdtype is None or flat.nbytes == 0 or base is None:
+            return self._fallback(flat, dtype)
+        base_flat = np.ascontiguousarray(base).view(np.uint8).reshape(-1)
+        if base_flat.nbytes != flat.nbytes:
+            return self._fallback(flat, dtype)
+        with np.errstate(over="ignore"):
+            x = flat.view(npdtype).astype(np.float32, copy=False)
+        if not np.all(np.isfinite(x)):
+            return self._fallback(flat, dtype)
+        base_est = self._base_estimate(base_flat, dtype)
+        with np.errstate(over="ignore"):
+            b = base_est.view(npdtype).astype(np.float32, copy=False)
+        if not np.all(np.isfinite(b)):
+            return self._fallback(flat, dtype)
+        n = x.size
+        rows = -(-n // self.row_len)
+        pad = rows * self.row_len - n
+        rb = self.row_len * npdtype.itemsize
+        # publisher-unchanged rows are detected against the base SNAPSHOT
+        # (v_n's exact bytes): if v_{n+1}'s row bits equal v_n's, the
+        # destination's held row (the base-codec round-trip of v_n) is
+        # already exactly what a fresh base-codec pull of v_{n+1} would
+        # deliver, so the row ships as a single bitmap bit
+        pf = np.zeros((rows, rb), np.uint8)
+        pf.reshape(-1)[: flat.nbytes] = flat
+        bf = np.zeros((rows, rb), np.uint8)
+        bf.reshape(-1)[: flat.nbytes] = base_flat
+        bit_equal = np.all(pf == bf, axis=1)
+        if pad:
+            x = np.concatenate([x, np.zeros(pad, np.float32)])
+            b = np.concatenate([b, np.zeros(pad, np.float32)])
+        resid = (x - b).reshape(rows, self.row_len)
+        q, scales = self._int8._quant_rows(resid)
+        # rows whose residual quantizes to all-zero reconstruct exactly
+        # the base bytes — skip them too (the all-zero-residual property)
+        kept = (~bit_equal) & q.any(axis=1)
+        kept_idx = np.flatnonzero(kept)
+        q_kept = q[kept_idx].reshape(-1)
+        if pad and kept.size and kept[-1]:
+            # zero-padding elements are NOT wire bytes (compressed_bytes
+            # clamp, as in the int8 frame)
+            q_kept = q_kept[: q_kept.size - pad]
+        digest = _buf_checksum(base_est) & 0xFFFFFFFFFFFFFFFF
+        hdr = _D_HDR.pack(
+            _D_MAGIC,
+            _D_VERSION,
+            0,
+            _QUANTIZABLE[dtype],
+            0,
+            self.row_len,
+            flat.nbytes,
+            digest,
+        )
+        return np.concatenate(
+            [
+                np.frombuffer(hdr, np.uint8),
+                np.packbits(kept.astype(np.uint8)),
+                scales[kept_idx].view(np.uint8).reshape(-1),
+                q_kept.view(np.uint8),
+            ]
+        )
+
+    def decode(
+        self, wire: np.ndarray, base: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        buf = np.ascontiguousarray(wire).view(np.uint8).reshape(-1)
+        if buf.nbytes < _HDR.size:
+            raise CodecError(f"delta wire: short buffer ({buf.nbytes}B < header)")
+        (magic,) = struct.unpack("<I", buf[:4].tobytes())
+        if magic == _MAGIC:
+            # fallback frame: a plain int8-framed wire, no base required
+            return self._int8.decode(buf)
+        if buf.nbytes < _D_HDR.size:
+            raise CodecError(f"delta wire: short buffer ({buf.nbytes}B < header)")
+        magic, version, flags, dcode, _, row_len, orig_nbytes, digest = _D_HDR.unpack(
+            buf[: _D_HDR.size].tobytes()
+        )
+        if magic != _D_MAGIC or version != _D_VERSION or flags != 0:
+            raise CodecError(
+                f"delta wire: bad framing (magic {magic:#x}, version {version}, "
+                f"flags {flags})"
+            )
+        dtype = _DTYPE_FROM_CODE.get(dcode)
+        if dtype is None:
+            raise CodecError(f"delta wire: unknown dtype code {dcode}")
+        npdtype = dtype_from_str(dtype)
+        if row_len <= 0 or orig_nbytes % npdtype.itemsize or orig_nbytes == 0:
+            raise CodecError(
+                f"delta wire: inconsistent shape (row_len {row_len}, "
+                f"{orig_nbytes}B of {dtype})"
+            )
+        if base is None:
+            raise StaleBaseError(
+                "delta wire: destination holds no base version for this unit"
+            )
+        base_flat = np.ascontiguousarray(base).view(np.uint8).reshape(-1)
+        if base_flat.nbytes != orig_nbytes:
+            raise StaleBaseError(
+                f"delta wire: held base is {base_flat.nbytes}B, frame encodes "
+                f"residuals against {orig_nbytes}B"
+            )
+        if (_buf_checksum(base_flat) & 0xFFFFFFFFFFFFFFFF) != digest:
+            raise StaleBaseError(
+                "delta wire: base-version digest mismatch (base evicted, GC'd "
+                "or diverged) — refusing to sum residuals against wrong bytes"
+            )
+        n = orig_nbytes // npdtype.itemsize
+        rows = -(-n // row_len)
+        pad = rows * row_len - n
+        bitmap_nbytes = -(-rows // 8)
+        body = buf[_D_HDR.size :]
+        if body.nbytes < bitmap_nbytes:
+            raise CodecError(
+                f"delta wire: {body.nbytes}B body < {bitmap_nbytes}B kept-row bitmap"
+            )
+        kept = np.unpackbits(body[:bitmap_nbytes], count=rows).astype(bool)
+        kept_idx = np.flatnonzero(kept)
+        k = kept_idx.size
+        q_len = k * row_len - (pad if (k and kept[-1]) else 0)
+        if body.nbytes != bitmap_nbytes + 4 * k + q_len:
+            raise CodecError(
+                f"delta wire: {body.nbytes}B body != {bitmap_nbytes}B bitmap + "
+                f"{4 * k}B scales + {q_len}B q for {k} kept rows"
+            )
+        rb = row_len * npdtype.itemsize
+        out = np.zeros((rows, rb), np.uint8)
+        out.reshape(-1)[:orig_nbytes] = base_flat
+        if k:
+            scales = body[bitmap_nbytes : bitmap_nbytes + 4 * k].view(np.float32)
+            if not np.all(np.isfinite(scales)) or np.any(scales <= 0):
+                raise CodecError("delta wire: non-finite or non-positive scales")
+            q = np.zeros(k * row_len, np.int8)
+            q[:q_len] = body[bitmap_nbytes + 4 * k :].view(np.int8)
+            with np.errstate(over="ignore"):
+                b = out.view(npdtype)[kept_idx].astype(np.float32)
+            recon = b + q.reshape(k, row_len).astype(np.float32) * scales[:, None]
+            out[kept_idx] = (
+                np.ascontiguousarray(recon.astype(npdtype)).view(np.uint8)
+            )
+        return np.ascontiguousarray(out.reshape(-1)[:orig_nbytes])
+
+    # -- sizing ------------------------------------------------------------
+
+    def wire_nbytes_at(
+        self, nbytes: int, dtype: Optional[str], kept_frac: float
+    ) -> int:
+        """Predicted wire size when ``kept_frac`` of the rows changed
+        between versions (the simulator's per-manifest delta ratio)."""
+        if dtype in _QUANTIZABLE and nbytes:
+            itemsize = dtype_from_str(dtype).itemsize
+            if nbytes % itemsize == 0:
+                n = nbytes // itemsize
+                rows = -(-n // self.row_len)
+                frac = min(1.0, max(0.0, float(kept_frac)))
+                k = int(round(rows * frac))
+                return (
+                    _D_HDR.size
+                    + -(-rows // 8)
+                    + 4 * k
+                    + min(n, k * self.row_len)
+                )
+        return _HDR.size + nbytes
+
+    def wire_nbytes(self, nbytes: int, dtype: Optional[str]) -> int:
+        return self.wire_nbytes_at(nbytes, dtype, 1.0)
+
+    def row_bytes(self, dtype: Optional[str]) -> int:
+        return self._int8.row_bytes(dtype)
+
+
 class FixedRatioCodec(WireCodec):
     """Fluid-byte modeling codec: scales wire bytes by a fixed ratio.
 
@@ -319,10 +581,18 @@ _REGISTRY: Dict[str, WireCodec] = {}
 
 def get_codec(name: str) -> WireCodec:
     """Resolve a negotiated codec name (``raw``, ``int8``,
-    ``fixed:<ratio>``). Raises :class:`TensorHubError` for unknown names
-    so a bad negotiation fails at plan time, not mid-transfer."""
+    ``delta:<base>``, ``fixed:<ratio>``). Raises :class:`TensorHubError`
+    for unknown names so a bad negotiation fails at plan time, not
+    mid-transfer."""
     c = _REGISTRY.get(name)
     if c is not None:
+        return c
+    if name.startswith("delta:"):
+        try:
+            c = DeltaCodec(name[len("delta:") :])
+        except ValueError as e:
+            raise TensorHubError(f"bad delta codec {name!r}: {e}") from None
+        _REGISTRY[name] = c
         return c
     if name.startswith("fixed:"):
         try:
@@ -366,17 +636,32 @@ def unit_wire_dtype(
 
 
 def wire_ratio(
-    codec: WireCodec, unit_sizes: Iterable[int], dtype: Optional[str]
+    codec: WireCodec,
+    unit_sizes: Iterable[int],
+    dtype: Optional[str],
+    *,
+    delta_kept_frac: float = 1.0,
 ) -> float:
     """Wire-bytes / payload-bytes of one shard manifest under ``codec``
     (the simulator's fluid byte multiplier, computed from the codec's
-    actual size formula rather than a hand-set scalar)."""
+    actual size formula rather than a hand-set scalar).
+
+    ``delta_kept_frac`` models how correlated successive versions are for
+    a :class:`DeltaCodec`: the fraction of quantization rows that changed
+    between the base and the shipped version (1.0 = every row changed,
+    the codec's worst case). Ignored for non-delta codecs.
+    """
     if isinstance(codec, FixedRatioCodec):
         return codec.ratio
     sizes = [int(n) for n in unit_sizes]
     total = sum(sizes)
     if total <= 0:
         return 1.0
+    if isinstance(codec, DeltaCodec):
+        return (
+            sum(codec.wire_nbytes_at(n, dtype, delta_kept_frac) for n in sizes)
+            / total
+        )
     return sum(codec.wire_nbytes(n, dtype) for n in sizes) / total
 
 

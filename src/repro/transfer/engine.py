@@ -82,6 +82,14 @@ class WorkerStore:
         self._unit_of: Dict[str, int] = {}
         #: simulate preemption: a failed store refuses all reads
         self.failed = False
+        #: delta-transfer base snapshot: the most recent published
+        #: version's unit payloads, captured at unpublish/update time so
+        #: this worker can serve (or receive) int8 residuals against it.
+        #: Deliberately NOT cleared by ``register`` — the publisher
+        #: re-registers v(n+1) buffers between unpublish and publish, and
+        #: the snapshot of v(n) must survive that to serve residuals.
+        self._base_version: Optional[int] = None
+        self._base_units: Dict[str, np.ndarray] = {}
         #: swarm replication served-prefix watermark: while this shard is
         #: itself mid-replication, only units ``[0, serving_prefix)`` hold
         #: final bytes and may be served to swarm readers. ``None`` means
@@ -279,6 +287,42 @@ class WorkerStore:
             )
         dst.view(np.uint8).reshape(-1)[offset : offset + flat.nbytes] = flat
 
+    # -- delta-transfer base snapshots --------------------------------------------
+
+    def snapshot_base(self, version: int) -> None:
+        """Snapshot the currently registered unit payloads as the delta
+        base for ``version``. Called by the client when a published
+        version is retired (publisher unpublish) or superseded locally
+        (destination about to pull an update) — both sides of a
+        ``delta:<base>`` transfer encode/decode against these bytes.
+        Only the most recent snapshot is kept (one version of history,
+        matching the server's prior-version bookkeeping)."""
+        with self._lock:
+            self._base_version = version
+            self._base_units = {
+                u.name: self._gather_unit(u).copy() for u in self._units
+            }
+
+    @property
+    def base_version(self) -> Optional[int]:
+        return self._base_version
+
+    def base_unit(self, unit: TransferUnit) -> Optional[np.ndarray]:
+        """The snapshotted base payload for ``unit``, or ``None`` when no
+        matching snapshot exists (name or size mismatch after a model
+        change — the codec then falls back to a base-codec frame)."""
+        arr = self._base_units.get(unit.name)
+        if arr is None or arr.nbytes != unit.nbytes:
+            return None
+        return arr
+
+    def drop_base(self) -> None:
+        """Evict the delta base snapshot (GC / memory-pressure path; also
+        what tests use to model a destination whose base is gone)."""
+        with self._lock:
+            self._base_version = None
+            self._base_units = {}
+
     # -- offload ------------------------------------------------------------------
 
     def snapshot_to(self, other: "WorkerStore") -> None:
@@ -351,6 +395,11 @@ class LocalTransport:
         # sim-vs-threaded parity from these counters.
         self.wire_bytes: Dict[str, int] = {}
         self.decoded_bytes: Dict[str, int] = {}
+        #: delta transfers that hit a stale/evicted destination base and
+        #: transparently re-fetched through the base codec (the wire
+        #: carried both frames; final bytes are byte-identical to a plain
+        #: base-codec pull)
+        self.delta_stale_fallbacks = 0
         self._acct_lock = threading.Lock()
 
     def _fault_read(self, src_replica: str, shard_idx: int) -> None:
@@ -362,6 +411,26 @@ class LocalTransport:
         # silently propagate instead of exercising the reject path
         if verified and self.faults is not None and self.faults.corrupts(src_replica):
             self.faults.flip(payload)
+
+    def _fault_truncate(self, src_replica: str, wire: np.ndarray) -> np.ndarray:
+        """Torn-frame injection on codec wires: drop the frame's tail so
+        the destination's decode fails the wire-level size integrity
+        check (a CodecError, not a ChecksumError — the decode-failure
+        healing path)."""
+        if self.faults is not None and self.faults.truncates(src_replica):
+            return wire[: wire.nbytes - max(1, wire.nbytes // 4)]
+        return wire
+
+    @staticmethod
+    def _dest_base(dst_store: WorkerStore, unit: TransferUnit) -> Optional[np.ndarray]:
+        """The destination's currently-held bytes for ``unit`` — the base
+        a delta frame's residuals are summed against. ``None`` when the
+        destination has no matching buffers (fresh replica, model
+        change); the codec's digest check catches every subtler mismatch."""
+        try:
+            return dst_store._gather_unit(unit)
+        except (TensorHubError, KeyError):
+            return None
 
     def _account(self, link_class: str, wire_nbytes: int, decoded_nbytes: int) -> None:
         # windowed pulls share one transport across span-worker threads
@@ -421,18 +490,54 @@ class LocalTransport:
             self._account(link_class, unit.nbytes, unit.nbytes)
             return
         t0 = rec.clock() if rec.enabled else 0.0
-        wire = cdc.encode(src.read_unit(unit), src.unit_dtype(unit))
-        # decode ONCE (deterministic, and it validates the wire framing);
-        # the source's advertised checksum is folded over these decoded
-        # bytes, and the copy below models the wire transfer + the
-        # destination's decode — so the comparison still runs over two
-        # distinct buffers, without paying a second dequantize
-        decoded_src = cdc.decode(wire)
+        raw_payload = src.read_unit(unit)
+        dtype = src.unit_dtype(unit)
+        if getattr(cdc, "needs_base", False):
+            # delta codec: encode residuals against the SOURCE's snapshot
+            # of the base version, decode them against the DESTINATION's
+            # held bytes. A stale/evicted destination base raises
+            # StaleBaseError, handled HERE — the source is not at fault,
+            # so it must never surface as corruption evidence; the unit
+            # transparently re-ships as a base-codec frame (both frames
+            # crossed the wire, and accounting says so).
+            wire = cdc.encode(raw_payload, dtype, base=src.base_unit(unit))
+            wire = self._fault_truncate(src_replica, wire)
+            wire_nbytes = wire.nbytes
+            try:
+                decoded_src = cdc.decode(wire, base=self._dest_base(dst_store, unit))
+            except codec_lib.StaleBaseError:
+                with self._acct_lock:
+                    self.delta_stale_fallbacks += 1
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_DELTA_STALE, 1)
+                    if track is not None:
+                        rec.event(
+                            "delta_stale_fallback",
+                            track=track,
+                            unit=unit.name,
+                            codec=codec,
+                        )
+                wire = self._fault_truncate(
+                    src_replica, cdc.encode(raw_payload, dtype)
+                )
+                wire_nbytes += wire.nbytes
+                decoded_src = cdc.decode(wire)
+        else:
+            wire = cdc.encode(raw_payload, dtype)
+            wire = self._fault_truncate(src_replica, wire)
+            wire_nbytes = wire.nbytes
+            # decode ONCE (deterministic, and it validates the wire
+            # framing); the source's advertised checksum is folded over
+            # these decoded bytes, and the copy below models the wire
+            # transfer + the destination's decode — so the comparison
+            # still runs over two distinct buffers, without paying a
+            # second dequantize
+            decoded_src = cdc.decode(wire)
         if rec.enabled:
             rec.counter_add(obs.CTR_DECODE, rec.clock() - t0)
             if track is not None:
                 rec.event("decode", track=track, unit=unit.name, codec=codec,
-                          wire_bytes=wire.nbytes)
+                          wire_bytes=wire_nbytes)
         t0 = rec.clock() if rec.enabled else 0.0
         expected = (
             checksum_lib.checksum(decoded_src) if self.verify_checksums else 0
@@ -454,7 +559,7 @@ class LocalTransport:
                     f"{got:#x} != expected {expected:#x}"
                 )
         dst_store.write_unit(unit, payload)
-        self._account(link_class, wire.nbytes, unit.nbytes)
+        self._account(link_class, wire_nbytes, unit.nbytes)
 
     def read_unit_range(
         self,
@@ -465,6 +570,7 @@ class LocalTransport:
         nbytes: int,
         codec: str = "raw",
         link_class: str = "rdma",
+        dest_base: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """Pull one byte sub-range of a transfer unit (sub-unit chunking).
 
@@ -481,6 +587,13 @@ class LocalTransport:
         encoding and the reassembled unit is bit-identical to an
         unchunked transfer. The per-chunk checksum runs over the decoded
         bytes, exactly as in :meth:`pull_unit`.
+
+        For a delta codec the caller passes ``dest_base`` — the
+        destination's held bytes for this exact chunk range (the
+        transport has no destination store on this path). Row alignment
+        makes the chunk's base digest well-defined: the held chunk at a
+        row boundary is exactly the base-codec round-trip of the source
+        snapshot's chunk.
 
         The swarm served-prefix guard applies at chunk granularity too:
         ``read_unit`` below refuses units past the source's watermark, so
@@ -529,10 +642,31 @@ class LocalTransport:
                 "reassembled unit would diverge from an unchunked transfer"
             )
         t0 = rec.clock() if rec.enabled else 0.0
-        wire = cdc.encode(view, dtype)
-        # single decode (see pull_unit): checksum the decoded bytes at the
-        # source, copy models the wire + destination decode
-        decoded_src = cdc.decode(wire)
+        if getattr(cdc, "needs_base", False):
+            base_full = src.base_unit(unit)
+            base_view = (
+                None if base_full is None else base_full[offset : offset + nbytes]
+            )
+            wire = self._fault_truncate(
+                src_replica, cdc.encode(view, dtype, base=base_view)
+            )
+            wire_nbytes = wire.nbytes
+            try:
+                decoded_src = cdc.decode(wire, base=dest_base)
+            except codec_lib.StaleBaseError:
+                with self._acct_lock:
+                    self.delta_stale_fallbacks += 1
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_DELTA_STALE, 1)
+                wire = self._fault_truncate(src_replica, cdc.encode(view, dtype))
+                wire_nbytes += wire.nbytes
+                decoded_src = cdc.decode(wire)
+        else:
+            wire = self._fault_truncate(src_replica, cdc.encode(view, dtype))
+            wire_nbytes = wire.nbytes
+            # single decode (see pull_unit): checksum the decoded bytes at
+            # the source, copy models the wire + destination decode
+            decoded_src = cdc.decode(wire)
         if rec.enabled:
             rec.counter_add(obs.CTR_DECODE, rec.clock() - t0)
         t0 = rec.clock() if rec.enabled else 0.0
@@ -553,7 +687,7 @@ class LocalTransport:
                     f"from {src_replica}/shard{shard_idx}: decoded checksum "
                     f"{got:#x} != expected {expected:#x}"
                 )
-        self._account(link_class, wire.nbytes, nbytes)
+        self._account(link_class, wire_nbytes, nbytes)
         return payload
 
     def read_interval(

@@ -41,7 +41,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.transfer.hardware import CLUSTER
 
-FAULT_KINDS = ("crash", "hang", "slow", "flaky", "corrupt")
+FAULT_KINDS = ("crash", "hang", "slow", "flaky", "corrupt", "truncate")
 
 #: reserved target name addressing the reference server rather than a
 #: replica (sim plane: a scheduled crash_and_recover)
@@ -63,6 +63,12 @@ class FaultSpec:
         *transient* error with probability ``severity``.
         ``corrupt``— each read from the target is corrupted (byte flip /
         checksum reject) with probability ``severity``.
+        ``truncate``— each *codec-framed* read from the target ships a
+        torn wire frame (tail dropped) with probability ``severity``;
+        the destination's decode fails the frame-size integrity check
+        with a ``CodecError`` — the decode-failure healing path, distinct
+        from ``corrupt``'s checksum reject. Threaded plane only (the sim
+        moves no real frames); raw reads are unaffected.
     target
         Replica name, or :data:`CONTROLLER`.
     start / duration
@@ -237,6 +243,15 @@ class ThreadedFaultInjector:
     def corrupts(self, replica: str) -> bool:
         """Draw whether the current read from ``replica`` is corrupted."""
         hit = self._active("corrupt", replica)
+        if hit is None:
+            return False
+        i, spec = hit
+        return self._rngs[i].random() < spec.severity
+
+    def truncates(self, replica: str) -> bool:
+        """Draw whether the current codec-framed read from ``replica``
+        ships a torn (tail-truncated) wire frame."""
+        hit = self._active("truncate", replica)
         if hit is None:
             return False
         i, spec = hit

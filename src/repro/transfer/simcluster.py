@@ -206,6 +206,8 @@ class SimCluster:
         work_stealing: bool = True,
         swarm: bool = True,
         wan_codec: Optional[str] = None,
+        wan_delta: bool = True,
+        delta_kept_frac: float = 1.0,
         codec_dtype: str = "float32",
         log: Optional[OpLog] = None,
         telemetry: bool = False,
@@ -242,6 +244,14 @@ class SimCluster:
             wan_codec = "int8"
         #: wire codec the server negotiates for WAN-crossing slices
         self.wan_codec = wan_codec
+        #: delta negotiation knob (see ReferenceServer) and the modeled
+        #: version correlation: the fraction of quantization rows that
+        #: changed between successive versions. The sim moves no real
+        #: bytes, so the delta wire ratio is this knob fed through the
+        #: codec's exact size formula (wire_nbytes_at) — 1.0 is the
+        #: codec's worst case (every row changed).
+        self.wan_delta = bool(wan_delta)
+        self.delta_kept_frac = float(delta_kept_frac)
         #: element dtype the fluid simulator assumes when computing a
         #: codec's wire ratio (real manifests carry per-tensor dtypes;
         #: sim manifests are size-only stand-ins for float weights)
@@ -297,6 +307,7 @@ class SimCluster:
             # the sim derives fluid wire bytes from the negotiated
             # codec's size formula per manifest (codec_ratio below)
             wan_codec=wan_codec,
+            wan_delta=wan_delta,
             # gray-failure classifier: transient/corrupt evidence
             # strike-counts toward source quarantine instead of eviction
             quarantine_threshold=quarantine_threshold,
@@ -408,6 +419,9 @@ class SimCluster:
             codec_lib.get_codec(codec),
             (u.nbytes for u in manifest.units),
             self.codec_dtype,
+            # version correlation for delta codecs; fixed per cluster, so
+            # the (codec, manifest) cache key stays sufficient
+            delta_kept_frac=self.delta_kept_frac,
         )
         self._ratio_cache[key] = ratio
         weakref.finalize(manifest, self._ratio_cache.pop, key, None)

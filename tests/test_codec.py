@@ -15,8 +15,10 @@ from repro.core.meta import WorkerInfo
 from repro.core.oplog import OpLog
 from repro.transfer.codec import (
     CodecError,
+    DeltaCodec,
     FixedRatioCodec,
     Int8Codec,
+    StaleBaseError,
     get_codec,
     unit_wire_dtype,
     wire_ratio,
@@ -204,6 +206,189 @@ class TestInt8Wire:
         assert raw.encode(payload, "bfloat16") is payload
         assert raw.decode(payload) is payload
         assert raw.wire_nbytes(123, None) == 123
+
+
+class TestDeltaWire:
+    """delta:<base> framing: residual round-trips against a held base,
+    stale-base detection, fallback frames, wire sizing."""
+
+    def _versions(self, dtype, n, changed_frac=0.25, seed=5):
+        """Correlated (base, payload) pair: ``changed_frac`` of the quant
+        rows differ, the rest are bit-identical. ``held`` is what an
+        int8-seeded destination actually holds for the base version."""
+        base = _rand_bytes(dtype, n, seed=seed)
+        npd = _np_dtype(dtype)
+        x = base.view(npd).astype(np.float32)
+        rows = -(-n // 256)
+        k = int(rows * changed_frac)
+        y = x.copy()
+        if k:
+            y[: k * 256] = y[: k * 256] * 1.001 + 0.01
+        payload = np.ascontiguousarray(y.astype(npd)).view(np.uint8).reshape(-1)
+        i8 = get_codec("int8")
+        held = i8.decode(i8.encode(base, dtype))
+        return base, payload, held
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("n", [1000, 256 * 40 + 17, 100001])
+    def test_roundtrip_changed_rows(self, dtype, n):
+        c = get_codec("delta:int8")
+        base, payload, held = self._versions(dtype, n)
+        wire = c.encode(payload, dtype, base=base)
+        out = c.decode(wire, base=held)
+        assert out.nbytes == payload.nbytes
+        assert _rel_err(out, payload, dtype) < 0.01
+        # the headline property: fewer wire bytes than a plain int8 frame
+        assert wire.nbytes < get_codec("int8").wire_nbytes(payload.nbytes, dtype)
+
+    def test_skipped_rows_bit_exact_vs_int8_baseline(self):
+        """An unchanged row decodes to exactly the destination's held
+        bytes — which (int8 round-trip being idempotent) are exactly what
+        a fresh int8 pull of the new version would have delivered."""
+        c = get_codec("delta:int8")
+        i8 = get_codec("int8")
+        n = 256 * 64
+        base, payload, held = self._versions("float32", n, changed_frac=0.25)
+        out = c.decode(c.encode(payload, "float32", base=base), base=held)
+        baseline = i8.decode(i8.encode(payload, "float32"))
+        cut = (256 * 16) * 4  # first quarter of rows changed
+        assert np.array_equal(out[cut:], held[cut:])
+        assert np.array_equal(out[cut:], baseline[cut:])
+
+    def test_error_no_worse_than_int8(self):
+        c = get_codec("delta:int8")
+        i8 = get_codec("int8")
+        base, payload, held = self._versions("float32", 256 * 64)
+        out = c.decode(c.encode(payload, "float32", base=base), base=held)
+        baseline = i8.decode(i8.encode(payload, "float32"))
+        assert _rel_err(out, payload, "float32") <= (
+            _rel_err(baseline, payload, "float32") + 1e-6
+        )
+
+    def test_identical_versions_ship_bitmap_only(self):
+        c = get_codec("delta:int8")
+        base, _, held = self._versions("float32", 256 * 64, changed_frac=0.0)
+        wire = c.encode(base, "float32", base=base)
+        assert wire.nbytes == c.wire_nbytes_at(base.nbytes, "float32", 0.0)
+        assert wire.nbytes < 0.01 * get_codec("int8").wire_nbytes(
+            base.nbytes, "float32"
+        )
+        assert np.array_equal(c.decode(wire, base=held), held)
+
+    def test_zero_residual_rows_skipped(self):
+        """A row whose bits changed but that lands exactly on the bytes
+        the destination already holds (zero residual) still ships as a
+        single bitmap bit."""
+        c = get_codec("delta:int8")
+        i8 = get_codec("int8")
+        base = _rand_bytes("float32", 256 * 8, seed=3)
+        held = i8.decode(i8.encode(base, "float32"))
+        payload = base.copy()
+        payload[: 256 * 4] = held[: 256 * 4]  # row 0 moved onto the quant grid
+        wire = c.encode(payload, "float32", base=base)
+        assert wire.nbytes == c.wire_nbytes_at(base.nbytes, "float32", 0.0)
+        assert np.array_equal(c.decode(wire, base=held), held)
+
+    def test_non_finite_payload_falls_back_bit_exact(self):
+        c = get_codec("delta:int8")
+        base, payload, _ = self._versions("float32", 1000)
+        poisoned = payload.view(np.float32).copy()
+        poisoned[137] = np.nan
+        pb = poisoned.view(np.uint8).reshape(-1)
+        wire = c.encode(pb, "float32", base=base)
+        # fallback frames decode without a base (int8 passthrough)
+        assert np.array_equal(c.decode(wire), pb)
+
+    def test_no_base_encode_falls_back(self):
+        ci = get_codec("delta:int8")
+        i8 = get_codec("int8")
+        base, payload, _ = self._versions("float32", 1000)
+        wire = ci.encode(payload, "float32")  # destination is fresh
+        assert np.array_equal(ci.decode(wire), i8.decode(i8.encode(payload, "float32")))
+        # a raw-based delta must keep raw's bit-identity guarantee
+        cr = get_codec("delta:raw")
+        wire = cr.encode(payload, "float32")
+        assert np.array_equal(cr.decode(wire), payload)
+
+    def test_delta_raw_roundtrip(self):
+        c = get_codec("delta:raw")
+        base, payload, _ = self._versions("float32", 256 * 40 + 17)
+        wire = c.encode(payload, "float32", base=base)
+        out = c.decode(wire, base=base)  # raw destination holds exact bytes
+        assert wire.nbytes < payload.nbytes
+        assert _rel_err(out, payload, "float32") < 0.01
+        cut = (-(-(256 * 40 + 17) // 256) // 4) * 256 * 4
+        assert np.array_equal(out[cut:], base[cut:])
+
+    def test_stale_base_rejected(self):
+        c = get_codec("delta:int8")
+        base, payload, held = self._versions("float32", 256 * 16)
+        wire = c.encode(payload, "float32", base=base)
+        with pytest.raises(StaleBaseError):
+            c.decode(wire)  # base evicted
+        with pytest.raises(StaleBaseError):
+            c.decode(wire, base=held[:-4])  # wrong size
+        with pytest.raises(StaleBaseError):
+            c.decode(wire, base=np.zeros_like(held))  # digest mismatch
+        # StaleBaseError is a CodecError: undistinguishing callers degrade
+        assert issubclass(StaleBaseError, CodecError)
+
+    def test_truncated_delta_frame_not_stale(self):
+        """A torn frame with a perfectly good base is wire corruption
+        (corrupt evidence, quarantine), never a stale-base fallback."""
+        c = get_codec("delta:int8")
+        base, payload, held = self._versions("float32", 256 * 16)
+        wire = c.encode(payload, "float32", base=base)
+        for cut in (wire.nbytes - 3, 20, 7):
+            with pytest.raises(CodecError) as ei:
+                c.decode(wire[:cut], base=held)
+            assert not isinstance(ei.value, StaleBaseError)
+
+    def test_chunked_delta_rows_match_whole(self):
+        """Row-aligned sub-range encodes (the chunked-unit path) decode to
+        exactly the rows of the whole-payload encoding."""
+        c = get_codec("delta:int8")
+        i8 = get_codec("int8")
+        base, payload, _ = self._versions("float32", 256 * 52)
+        held = i8.decode(i8.encode(base, "float32"))
+        whole = c.decode(c.encode(payload, "float32", base=base), base=held)
+        rb = c.row_bytes("float32")
+        for per in (rb, 13 * rb):
+            parts, off = [], 0
+            while off < payload.nbytes:
+                step = min(per, payload.nbytes - off)
+                w = c.encode(payload[off : off + step], "float32", base=base[off : off + step])
+                parts.append(c.decode(w, base=held[off : off + step]))
+                off += step
+            assert np.array_equal(np.concatenate(parts), whole)
+
+    def test_registry_and_attrs(self):
+        c = get_codec("delta:int8")
+        assert isinstance(c, DeltaCodec) and c.name == "delta:int8"
+        assert c.needs_base and not c.lossless
+        assert c.row_bytes("float32") == get_codec("int8").row_bytes("float32")
+        assert get_codec("delta:raw").name == "delta:raw"
+        assert not get_codec("int8").needs_base  # baseless codecs unchanged
+        with pytest.raises(TensorHubError):
+            get_codec("delta:fixed:0.5")
+        with pytest.raises(TensorHubError):
+            get_codec("delta:nope")
+
+    def test_wire_sizing_model(self):
+        c = get_codec("delta:int8")
+        n = 4 << 20
+        sizes = [c.wire_nbytes_at(n, "float32", f) for f in (0.0, 0.25, 0.5, 1.0)]
+        assert sizes == sorted(sizes)
+        i8 = get_codec("int8").wire_nbytes(n, "float32")
+        assert sizes[1] < 0.3 * i8  # 25% changed rows -> ~4x fewer bytes
+        assert sizes[3] >= i8  # all rows kept: digest+bitmap overhead
+        assert c.wire_nbytes(n, "float32") == sizes[3]
+        # the sim's per-manifest ratio follows the same model
+        r_delta = wire_ratio(c, [n] * 4, "float32", delta_kept_frac=0.25)
+        r_int8 = wire_ratio(get_codec("int8"), [n] * 4, "float32")
+        assert r_delta < 0.3 * r_int8
+        # non-quantizable payloads ride as tagged passthrough
+        assert c.wire_nbytes_at(999, None, 0.25) == 999 + 20
 
 
 class TestQuantOpsWireBytes:
@@ -463,6 +648,106 @@ class TestNegotiation:
         a = recovered.begin_replicate("m", "r", 0, 0, op_id=0)
         assert a.codec == "raw"
 
+    def _seed_correlated(self, s):
+        """pub (dc0) retires v0 and publishes v1 after r (dc1) fully
+        replicated v0 — the correlated-update shape delta targets."""
+        self._open(s, "pub", "dc0")
+        self._publish(s, "pub", version=0)
+        self._open(s, "r", "dc1")
+        s.begin_replicate("m", "r", 0, 0, op_id=0)
+        s.update_progress("m", "r", 0, 0, 4)
+        s.complete_replicate("m", "r", 0, 0, op_id=1)
+        s.unpublish("m", "pub", 0, op_id=10)
+        self._publish(s, "pub", version=1)
+
+    def test_update_negotiates_delta(self):
+        s = ReferenceServer()
+        self._seed_correlated(s)
+        d = s.begin_update("m", "r", 0, "latest", op_id=2)
+        assert d.updated and d.assignment.codec == "delta:int8"
+        assert all(sl.codec == "delta:int8" for sl in d.assignment.slices(4))
+        assert s.stats["delta_assignments"] == 1
+
+    def test_fresh_dest_negotiates_plain(self):
+        s = ReferenceServer()
+        self._seed_correlated(s)
+        self._open(s, "fresh", "dc1")
+        a = s.begin_replicate("m", "fresh", 0, "latest", op_id=0)
+        assert a.codec == "int8"  # no prior version to diff against
+
+    def test_wan_delta_disabled(self):
+        s = ReferenceServer(wan_delta=False)
+        assert s.config()["wan_delta"] is False
+        self._seed_correlated(s)
+        d = s.begin_update("m", "r", 0, "latest", op_id=2)
+        assert d.updated and d.assignment.codec == "int8"
+        assert s.stats["delta_assignments"] == 0
+
+    def test_prior_version_mismatch_negotiates_plain(self):
+        """Source retired v1 while dest still holds v0: residuals against
+        the wrong base are never negotiated."""
+        s = ReferenceServer()
+        self._seed_correlated(s)
+        s.unpublish("m", "pub", 0, op_id=20)
+        self._publish(s, "pub", version=2)
+        d = s.begin_update("m", "r", 0, "latest", op_id=2)
+        assert d.updated and d.assignment.version == 2
+        assert d.assignment.codec == "int8"
+
+    def test_non_delta_capable_wan_codec_skips_delta(self):
+        s = ReferenceServer(wan_codec="fixed:0.5")
+        self._seed_correlated(s)
+        d = s.begin_update("m", "r", 0, "latest", op_id=2)
+        assert d.updated and d.assignment.codec == "fixed:0.5"
+
+    def test_aliased_layout_degrades_to_raw_at_plan_time(self):
+        """Regression: a same-shard-count source slicing its units along
+        different boundaries used to be negotiated non-raw and then raise
+        CodecError from inside the read. The guard now lives in
+        _make_assignment: the pull degrades to raw before the flow
+        starts, and the degrade is counted."""
+        from repro.transfer.simcluster import make_manifest
+
+        s = ReferenceServer()
+        self._open(s, "pub", "dc0")
+        self._publish(s, "pub", version=0)
+        self._open(s, "alias", "dc0")
+        # same shard count, same bytes, different unit boundaries
+        s.publish("m", "alias", 0, 0, make_manifest([2 << 20] * 2), op_id=0)
+        s.fail_replica("m", "pub")
+        self._open(s, "r", "dc1")
+        a = s.begin_replicate("m", "r", 0, 0, op_id=0)
+        assert a.source == "alias" and a.codec == "raw"
+        assert s.stats["codec_degrades"] >= 1
+
+    def test_failover_preserves_wan_delta(self):
+        """The delta negotiation settings and the prior-version bookkeeping
+        they key on must replay bit-identically across a controller crash
+        — including a live delta assignment."""
+        from repro.core.failover import recover, state_digest
+
+        log = OpLog()
+        s = ReferenceServer(wan_delta=False, log=log)
+        self._seed_correlated(s)
+        s.begin_update("m", "r", 0, "latest", op_id=2)
+        digest = state_digest(s)
+        s.crash()
+        recovered = recover(log)
+        assert recovered.config()["wan_delta"] is False
+        assert state_digest(recovered) == digest
+        # and the delta path itself survives replay: a wan_delta server
+        # that negotiated delta:int8 pre-crash re-derives it post-crash
+        log2 = OpLog()
+        s2 = ReferenceServer(log=log2)
+        self._seed_correlated(s2)
+        d = s2.begin_update("m", "r", 0, "latest", op_id=2)
+        assert d.assignment.codec == "delta:int8"
+        digest2 = state_digest(s2)
+        s2.crash()
+        rec2 = recover(log2)
+        assert rec2.config()["wan_delta"] is True
+        assert state_digest(rec2) == digest2
+
 
 def _threaded_tensors(seed=2.0):
     """Model-zoo-ish shard: a standalone f32 unit, a standalone bf16 unit
@@ -477,6 +762,16 @@ def _threaded_tensors(seed=2.0):
         "tiny0": (rng.randn(2048) * seed).astype(np.float32),
         "tiny1": (rng.randn(2048) * seed).astype(np.float32),
     }
+
+
+def _correlated_tensors(nrows=4096, changed_rows=1024, mutate=False):
+    """Two correlated weight versions (one RL step apart): v1 and a v2
+    that differs in exactly ``changed_rows`` of the ``nrows`` quant rows."""
+    rng = np.random.default_rng(21)
+    w = rng.standard_normal((nrows, 256)).astype(np.float32)
+    if mutate:
+        w[:changed_rows] = w[:changed_rows] * 1.001 + 0.01
+    return {"w": w}
 
 
 def _run_group(handles, fn):
@@ -693,6 +988,113 @@ class TestThreadedCrossDC:
         assert hub.transport.bytes_moved - before < 0.45 * total
         assert self._max_rel(r, _threaded_tensors(seed=5.0)) < 0.01
 
+    def _correlated_update(
+        self, *, wan_delta=True, scramble_dest=False, drop_source_base=False
+    ):
+        """publish v0 -> r replicates cross-DC -> publish a correlated v1
+        -> r updates. Returns (update-leg wire bytes, r's final tensor,
+        hub, server)."""
+        server = ReferenceServer(wan_delta=wan_delta)
+        hub = TensorHubClient(server)
+        pub = hub.open("m", "pub", 1, 0, datacenter="dc0")
+        pub.register(_correlated_tensors())
+        pub.publish(0)
+        r = hub.open("m", "r", 1, 0, datacenter="dc1")
+        r.register({"w": np.zeros((4096, 256), np.float32)})
+        r.replicate(0)
+        pub.unpublish()
+        if drop_source_base:
+            pub.store.drop_base()
+        pub.store.register(_correlated_tensors(mutate=True))
+        pub.publish(1)
+        if scramble_dest:
+            r.store.get("w")[:] = 0.0  # base evicted/diverged mid-plan
+        before = hub.transport.bytes_moved
+        assert r.update("latest")
+        wire = hub.transport.bytes_moved - before
+        return wire, r.store.get("w").copy(), hub, server
+
+    def test_delta_update_ships_fewer_wan_bytes(self):
+        wire_i8, out_i8, _, _ = self._correlated_update(wan_delta=False)
+        wire_d, out_d, hub, server = self._correlated_update()
+        assert server.stats["delta_assignments"] >= 1
+        assert hub.transport.delta_stale_fallbacks == 0
+        # 25% changed rows: ~4x fewer WAN bytes than plain int8
+        assert wire_d < 0.3 * wire_i8
+        want = _correlated_tensors(mutate=True)["w"]
+        assert float(np.max(np.abs(out_d - want))) / float(np.max(np.abs(want))) < 0.01
+        # unchanged rows arrive bit-identical to the plain-int8 outcome
+        assert np.array_equal(out_d[1024:], out_i8[1024:])
+
+    def test_delta_stale_base_falls_back_byte_identical(self):
+        """A destination whose held base was evicted mid-plan decodes the
+        frame's digest mismatch as StaleBaseError, transparently re-pulls
+        plain int8, and lands byte-identical to a non-delta update."""
+        wire_i8, out_i8, _, _ = self._correlated_update(wan_delta=False)
+        wire_s, out_s, hub, _ = self._correlated_update(scramble_dest=True)
+        assert hub.transport.delta_stale_fallbacks >= 1
+        assert np.array_equal(out_s, out_i8)
+        # both the refused delta frame and the int8 re-send crossed the wire
+        assert wire_s > wire_i8
+
+    def test_delta_source_without_base_sends_plain_int8(self):
+        """A source that dropped its base snapshot (steal/failover onto a
+        replica that can't serve residuals) emits plain int8 fallback
+        frames at encode time — no stale event, byte-identical result."""
+        wire_i8, out_i8, _, _ = self._correlated_update(wan_delta=False)
+        wire_f, out_f, hub, _ = self._correlated_update(drop_source_base=True)
+        assert hub.transport.delta_stale_fallbacks == 0
+        assert wire_f == wire_i8
+        assert np.array_equal(out_f, out_i8)
+
+    @pytest.mark.timeout(120)
+    def test_truncated_frame_heals_via_corrupt_quarantine(self):
+        """Regression: a CodecError raised during wire decode used to
+        crash the puller. A fault-injected truncated int8 frame must now
+        route through the healing path — corrupt evidence, quarantine,
+        alternate-source re-fetch — and finish with good bytes."""
+        from repro.core.client import RetryPolicy
+        from repro.transfer.faults import (
+            FaultPlan,
+            FaultSpec,
+            ThreadedFaultInjector,
+        )
+
+        server = ReferenceServer(quarantine_threshold=2, quarantine_probation=60.0)
+        inj = ThreadedFaultInjector(
+            FaultPlan(seed=11, faults=(FaultSpec("truncate", "pub", severity=1.0),))
+        )
+        clean = TensorHubClient(server)
+        hub = TensorHubClient(
+            server,
+            registry=clean.registry,
+            retry_policy=RetryPolicy(
+                fail_detect=0.3, retry_limit=5, retry_backoff=0.01,
+                hedge_threshold=8.0, hedge_min_samples=16,
+            ),
+            faults=inj,
+        )
+        rng = np.random.RandomState(30)
+        want = (rng.randn(1 << 18) * 3).astype(np.float32)
+        pub = clean.open("m", "pub", 1, 0, datacenter="dc0")
+        pub.register({"w": want.copy()})
+        pub.publish(0)
+        # healthy alternate source ("pub" sorts first, so the faulty
+        # replica is the deterministic initial pick)
+        spare = clean.open("m", "spare", 1, 0, datacenter="dc0")
+        spare.register({"w": np.zeros_like(want)})
+        spare.replicate("latest")
+        dest = hub.open("m", "dest", 1, 0, datacenter="dc1")
+        dest.register({"w": np.zeros_like(want)})
+        inj.arm()
+        dest.replicate("latest", timeout=60)
+        got = dest.store.get("w")
+        rel = float(np.max(np.abs(got - want))) / float(np.max(np.abs(want)))
+        assert rel < 0.01  # int8-decoded bytes from the healthy source
+        assert server.stats["corrupt_reports"] >= 1
+        assert server.stats["quarantines"] >= 1
+        assert server.stats["evictions"] == 0
+
 
 class TestSimCodec:
     """Fluid plane: wire bytes derive from the codec's per-manifest ratio."""
@@ -815,3 +1217,68 @@ class TestSimCodec:
         with pytest.raises(TensorHubError, match="raw-only"):
             # drive the generator; the guard fires before the first yield
             next(gen)
+
+    def _update_wan_bytes(self, **kw):
+        """Warm update flow: publish v0, replicate, retire, publish v1,
+        update — the correlated shape where delta is negotiated. Returns
+        the update leg's WAN bytes."""
+        from repro.transfer.simcluster import SimCluster
+
+        cl = SimCluster(**kw)
+        units = [4 << 20]
+        tr = cl.add_replica("m", "tr", 1, datacenter="dc0", unit_bytes=units)
+        ro = cl.add_replica("m", "ro", 1, datacenter="dc1", unit_bytes=units)
+        tr.open()
+        ro.open()
+        cl.run()
+        tr.publish(0)
+        cl.run()
+        ro.replicate("latest")
+        cl.run()
+        before = dict(cl.net.link_bytes)
+        tr.unpublish()
+        cl.run()
+        tr.publish(1)
+        cl.run()
+        ev = ro.update("latest")
+        cl.run()
+        assert ev.triggered and ev.error is None
+        wan = sum(
+            b - before.get(n, 0)
+            for n, b in cl.net.link_bytes.items()
+            if ":vpc_up" in n
+        )
+        return wan, cl
+
+    def test_delta_update_models_kept_fraction(self):
+        wan_i8, _ = self._update_wan_bytes(wan_codec="int8", wan_delta=False)
+        wan_d, cl = self._update_wan_bytes(
+            wan_codec="int8", wan_delta=True, delta_kept_frac=0.25
+        )
+        assert cl.server.stats["delta_assignments"] >= 1
+        # byte model follows the codec's own sizing exactly
+        expect = get_codec("delta:int8").wire_nbytes_at(4 << 20, "float32", 0.25)
+        assert math.isclose(wan_d, expect, rel_tol=1e-6)
+        assert wan_d < 0.3 * wan_i8
+
+    def test_threaded_and_sim_delta_parity(self):
+        """WAN bytes for the same correlated update (25% of rows changed,
+        one 4 MiB f32 unit) agree across the two data planes."""
+        wan_sim, _ = self._update_wan_bytes(
+            wan_codec="int8", wan_delta=True, delta_kept_frac=0.25
+        )
+        s = ReferenceServer(wan_codec="int8")
+        hub = TensorHubClient(s)
+        pub = hub.open("m", "pub", 1, 0, datacenter="dc0")
+        pub.register(_correlated_tensors())
+        pub.publish(0)
+        r = hub.open("m", "r", 1, 0, datacenter="dc1")
+        r.register({"w": np.zeros((4096, 256), np.float32)})
+        r.replicate(0)
+        pub.unpublish()
+        pub.store.register(_correlated_tensors(mutate=True))
+        pub.publish(1)
+        before = hub.transport.bytes_moved
+        assert r.update("latest")
+        wan_thr = hub.transport.bytes_moved - before
+        assert abs(wan_thr - wan_sim) / wan_sim < 0.02
