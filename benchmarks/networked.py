@@ -1,0 +1,267 @@
+"""Networked control-plane overhead — RPC cost and the 10% makespan gate.
+
+The tentpole moves the ``ReferenceServer`` behind a JSON-over-HTTP
+transport. This bench quantifies what that costs on localhost, three
+ways:
+
+* **rpc_latency**: per-op round-trip of representative read ops through
+  a real ``ControlServer`` socket vs the same call as a plain method
+  call. The difference is the whole wire stack: JSON codec + HTTP +
+  loopback TCP + dispatcher lock.
+* **pull_makespan**: identical publish -> N x replicate runs where the
+  *only* difference between arms is the control plane (the data plane is
+  the in-process ``LocalTransport`` in both — same registry shape, same
+  copies, same checksums). Gate: the networked arm's best-of-N makespan
+  stays within 10% of in-process; control chatter must not tax pulls.
+
+  Sizing note: units are 32 MB — the regime the paper's data plane
+  actually moves (2 MB tiny-bucket floor, up to 1 GB chunks). Micro
+  units (~4 MB) overstate the tax here for a reason that doesn't
+  survive a real deployment: this bench hosts the HTTP controller in
+  the *same* process as the puller, so the pure-Python HTTP work for
+  each unit's control calls steals 5 ms GIL slices from the copy loop
+  (~6 ms/unit flat). Separate processes — how the networked tier and
+  production both run — don't share a GIL.
+* **failover_recovery**: controller dies (HTTP stack torn down), a new
+  incarnation is rebuilt from the WAL file and serves on a fresh port —
+  wall time from kill to a digest-identical server answering pings.
+
+CLI: PYTHONPATH=src python benchmarks/networked.py [--quick] [--json out]
+(quick exits non-zero on MISMATCH; this is the CI networked-job gate).
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ReferenceServer, TensorHubClient
+from repro.core import failover
+from repro.core.oplog import OpLog
+from repro.net.client import RemoteClient
+from repro.net.httpd import ControlServer
+from repro.net.service import ReferenceService
+
+try:
+    from benchmarks import harness
+except ImportError:  # invoked directly: benchmarks/ itself is sys.path[0]
+    import harness
+
+RPC_OPS = ("latest", "num_shards", "availability", "metrics")
+MAKESPAN_GATE_PCT = 10.0
+
+
+def _weights(n_tensors: int, elems: int) -> Dict[str, np.ndarray]:
+    rng = np.random.RandomState(0)
+    return {
+        f"w{i}": rng.randn(elems).astype(np.float32) for i in range(n_tensors)
+    }
+
+
+def _seed_model(server_like) -> TensorHubClient:
+    """A hub with one published single-tensor model, for the RPC micro."""
+    hub = TensorHubClient(server_like)
+    pub = hub.open("m", "pub", 1, 0)
+    pub.register({"w0": np.zeros(8, dtype=np.float32)})
+    pub.publish(0)
+    return hub
+
+
+def _call_op(target, op: str):
+    if op == "latest":
+        return target.latest("m")
+    if op == "num_shards":
+        return target.num_shards("m")
+    if op == "availability":
+        return target.availability("m", 0)
+    if op == "metrics":
+        return target.metrics()
+    raise AssertionError(op)
+
+
+def _median_us(target, op: str, iters: int) -> float:
+    _call_op(target, op)  # warm (connection, codec, caches)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _call_op(target, op)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
+
+
+def _networked_stack(server: ReferenceServer):
+    """ControlServer on a real localhost socket + a connected client.
+    No ticker: the bench never ticks, so heartbeat expiry is inert."""
+    http = ControlServer(ReferenceService(server))
+    http.start()
+    return http, RemoteClient(http.address)
+
+
+def bench_rpc_latency(iters: int) -> List[Dict]:
+    direct = ReferenceServer()
+    _seed_model(direct)
+    net_server = ReferenceServer()
+    http, rc = _networked_stack(net_server)
+    try:
+        _seed_model(rc)
+        rows = []
+        for op in RPC_OPS:
+            inproc = _median_us(direct, op, iters)
+            networked = _median_us(rc, op, iters)
+            rows.append(
+                {
+                    "case": "rpc_latency",
+                    "op": op,
+                    "iters": iters,
+                    "inproc_us": round(inproc, 1),
+                    "networked_us": round(networked, 1),
+                    "overhead_us": round(networked - inproc, 1),
+                }
+            )
+        return rows
+    finally:
+        rc.close()
+        http.shutdown()
+
+
+def _publish_arm(server_like, w: Dict[str, np.ndarray]) -> TensorHubClient:
+    hub = TensorHubClient(server_like)
+    pub = hub.open("m", "pub", 1, 0)
+    pub.register(w)
+    pub.publish(0)
+    return hub
+
+
+def _timed_pull(hub: TensorHubClient, name: str, w) -> float:
+    """One fresh reader replica replicating the published version; the
+    reader is closed afterwards so iterations don't accumulate stores
+    (a quarter-GB of retained readers skews later timings)."""
+    rdr = hub.open("m", name, 1, 0)
+    rdr.register({k: np.zeros_like(v) for k, v in w.items()})
+    t0 = time.perf_counter()
+    rdr.replicate(0)
+    dt = time.perf_counter() - t0
+    rdr.close()
+    return dt
+
+
+def bench_pull_makespan(n_tensors: int, elems: int, iters: int) -> List[Dict]:
+    """Arms are *interleaved* (in-process pull, networked pull, repeat)
+    and scored best-of-N: back-to-back arms hand the second one a
+    polluted allocator and page cache, which reads as fake control-plane
+    overhead. Best-of because noise only ever inflates a run."""
+    w = _weights(n_tensors, elems)
+    hub_in = _publish_arm(ReferenceServer(), w)
+    net_server = ReferenceServer()
+    http, rc = _networked_stack(net_server)
+    try:
+        hub_net = _publish_arm(rc, w)
+        inproc_s = networked_s = float("inf")
+        for it in range(iters):
+            inproc_s = min(inproc_s, _timed_pull(hub_in, f"ri{it}", w))
+            networked_s = min(networked_s, _timed_pull(hub_net, f"rn{it}", w))
+    finally:
+        rc.close()
+        http.shutdown()
+    payload_mb = n_tensors * elems * 4 / 2**20
+    return [
+        {
+            "case": "pull_makespan",
+            "payload_mb": round(payload_mb, 1),
+            "units": n_tensors,
+            "iters": iters,
+            "inproc_ms": round(inproc_s * 1e3, 2),
+            "networked_ms": round(networked_s * 1e3, 2),
+            "overhead_pct": round(
+                (networked_s - inproc_s) / inproc_s * 100.0, 2
+            ),
+        }
+    ]
+
+
+def bench_failover_recovery() -> List[Dict]:
+    tmp = tempfile.mkdtemp(prefix="th-bench-net-")
+    wal = os.path.join(tmp, "controller.wal")
+    server = ReferenceServer(log=OpLog.open_path(wal))
+    http, rc = _networked_stack(server)
+    hub = _seed_model(rc)
+    sub = hub.open("m", "sub", 1, 0)
+    sub.register({"w0": np.zeros(8, dtype=np.float32)})
+    sub.replicate(0)
+    pre_kill_digest = failover.state_digest(server)
+    ops_in_wal = server.seq
+    rc.close()
+    http.shutdown()  # the controller process "dies"; the WAL file remains
+
+    t0 = time.perf_counter()
+    recovered = failover.recover_path(wal)
+    http2 = ControlServer(ReferenceService(recovered))
+    http2.start()
+    rc2 = RemoteClient(http2.address)
+    ping = rc2.ping()
+    recovery_s = time.perf_counter() - t0
+    digest_match = failover.state_digest(recovered) == pre_kill_digest
+    rc2.close()
+    http2.shutdown()
+    return [
+        {
+            "case": "failover_recovery",
+            "ops_in_wal": ops_in_wal,
+            "recovery_ms": round(recovery_s * 1e3, 2),
+            "digest_match": bool(digest_match and not ping["crashed"]),
+        }
+    ]
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rpc_iters = 50 if quick else 300
+    if quick:
+        n_tensors, elems, pull_iters = 4, 1 << 23, 3  # 128 MB, 4x32MB units
+    else:
+        n_tensors, elems, pull_iters = 8, 1 << 23, 4  # 256 MB, 8x32MB units
+    rows: List[Dict] = []
+    rows += bench_rpc_latency(rpc_iters)
+    rows += bench_pull_makespan(n_tensors, elems, pull_iters)
+    rows += bench_failover_recovery()
+    return rows
+
+
+def validate(rows: List[Dict]) -> List[str]:
+    checks = []
+    for r in rows:
+        if r["case"] == "rpc_latency":
+            # localhost HTTP round-trips are hundreds of us; anything in
+            # the tens of ms means a stuck socket or per-call reconnects
+            ok = r["networked_us"] < 50_000
+            checks.append(
+                f"rpc {r['op']}: {r['inproc_us']}us in-process vs "
+                f"{r['networked_us']}us networked "
+                f"(+{r['overhead_us']}us wire cost, sanity < 50ms) -> "
+                f"{'OK' if ok else 'MISMATCH'}"
+            )
+        elif r["case"] == "pull_makespan":
+            ok = r["overhead_pct"] <= MAKESPAN_GATE_PCT
+            checks.append(
+                f"pull makespan ({r['payload_mb']}MB, {r['units']} units): "
+                f"networked {r['networked_ms']}ms vs in-process "
+                f"{r['inproc_ms']}ms ({r['overhead_pct']:+.2f}%, required "
+                f"<= {MAKESPAN_GATE_PCT:.0f}%) -> "
+                f"{'OK' if ok else 'MISMATCH'}"
+            )
+        elif r["case"] == "failover_recovery":
+            ok = r["digest_match"]
+            checks.append(
+                f"failover recovery: {r['recovery_ms']}ms from kill to a "
+                f"serving controller rebuilt from {r['ops_in_wal']} WAL ops, "
+                f"digest-identical -> {'OK' if ok else 'MISMATCH'}"
+            )
+    return checks
+
+
+if __name__ == "__main__":
+    harness.bench_main("networked", run, validate)

@@ -286,6 +286,45 @@ class TensorHubClient:
             self._handles.append(handle)
         return handle
 
+    # -- background heartbeats --------------------------------------------------
+
+    def start_heartbeats(
+        self, interval: float, *, clock: Optional[Callable[[], float]] = None
+    ) -> None:
+        """Heartbeat every open handle on a daemon thread.
+
+        The in-process tests drive heartbeats explicitly with virtual
+        timestamps; a networked worker wants them ambient, on wall-clock
+        time (``time.time`` by default — shared across processes, so a
+        restarted controller's expiry ticks compare against the same
+        axis). An evicted handle's ``StaleHandleError`` is swallowed:
+        eviction is the *server's* verdict and the worker learns it
+        through its event poll, not by crashing the heartbeat loop."""
+        if getattr(self, "_hb_thread", None) is not None:
+            return
+        hb_clock = time.time if clock is None else clock
+        self._hb_stop = threading.Event()
+
+        def loop() -> None:
+            while not self._hb_stop.wait(interval):
+                for h in list(self._handles):
+                    try:
+                        h.heartbeat(hb_clock())
+                    except TensorHubError:
+                        continue
+
+        self._hb_thread = threading.Thread(
+            target=loop, name="tensorhub-heartbeats", daemon=True
+        )
+        self._hb_thread.start()
+
+    def stop_heartbeats(self) -> None:
+        if getattr(self, "_hb_thread", None) is None:
+            return
+        self._hb_stop.set()
+        self._hb_thread.join(timeout=2.0)
+        self._hb_thread = None
+
 
 class ShardHandle:
     """Handle for one shard of one replica (Table 2)."""

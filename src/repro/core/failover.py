@@ -177,6 +177,19 @@ def recover(
     return server
 
 
+def recover_path(
+    path: str, *, group_commit: int = 1, **config_overrides: Any
+) -> ReferenceServer:
+    """Recover a controller from its on-disk JSONL WAL and keep appending
+    to the same file — the restart path of the networked controller
+    (``repro.net.controller --recover``). The rebuilt server is
+    bit-identical to the crashed one's durable state; new mutations flush
+    to the same ``path`` with sequence numbers and blob keys continuing
+    past the parsed maximum."""
+    log = OpLog.open_path(path, group_commit=group_commit)
+    return recover(log, **config_overrides)
+
+
 def replay(
     records, *, config: Optional[Dict[str, Any]] = None
 ) -> ReferenceServer:
@@ -193,6 +206,7 @@ __all__ = [
     "apply_record",
     "encode_state",
     "recover",
+    "recover_path",
     "replay",
     "restore_state",
     "state_digest",

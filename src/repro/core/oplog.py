@@ -124,6 +124,12 @@ class OpLog:
         #: as a "blob" line and later records reference it by key — the
         #: log moves lightweight references, like the server itself
         self._blob_ids: Dict[int, int] = {}
+        #: blob-key base for the file sink. Seeded past the keys already
+        #: present when a log file is reopened (:meth:`open_path`) so a
+        #: restarted controller never reuses a live key — readers resolve
+        #: blob references in file order, but distinct keys keep the file
+        #: greppable and compaction-safe regardless of interleaving.
+        self._blob_base = 0
         if path is not None:
             self._fp = open(path, "a", encoding="utf-8")
         #: direct mode: memory sink with group_commit=1 — every append is
@@ -163,16 +169,24 @@ class OpLog:
         if cb is not None:
             cb(OpRecord(self._seq, op, args))
 
-    def _encode_into(self, records, blob_ids: Dict[int, int], lines: List[str]) -> None:
+    def _encode_into(
+        self,
+        records,
+        blob_ids: Dict[int, int],
+        lines: List[str],
+        *,
+        base: int = 0,
+    ) -> None:
         """Encode records as JSONL, interning each distinct manifest as a
-        one-time "blob" line that later records reference by key."""
+        one-time "blob" line that later records reference by key (allocated
+        from ``base + 1`` upward)."""
         for seq, op, args in records:
             enc = []
             for a in args:
                 if isinstance(a, ShardManifest):
                     key = blob_ids.get(id(a))
                     if key is None:
-                        key = len(blob_ids) + 1
+                        key = base + len(blob_ids) + 1
                         blob_ids[id(a)] = key
                         lines.append(
                             json.dumps(
@@ -192,7 +206,7 @@ class OpLog:
             return
         if self._fp is not None:
             lines: List[str] = []
-            self._encode_into(self._tail, self._blob_ids, lines)
+            self._encode_into(self._tail, self._blob_ids, lines, base=self._blob_base)
             self._fp.write("\n".join(lines) + "\n")
             self._fp.flush()
         self._committed.extend(self._tail)
@@ -220,6 +234,7 @@ class OpLog:
             self._fp.close()
             tmp_path = self.path + ".compact"
             self._blob_ids = {}  # fresh file: re-intern on demand
+            self._blob_base = 0
             lines: List[str] = []
             if self.config is not None:
                 lines.append(json.dumps({"kind": "config", "config": self.config}))
@@ -309,6 +324,7 @@ class OpLog:
                 log.snapshot = Snapshot(seq=obj["seq"], state=obj["state"])
             elif kind == "blob":
                 blobs[obj["key"]] = from_wire(obj["value"])
+                log._blob_base = max(log._blob_base, int(obj["key"]))
             elif kind == "op":
                 rec = (obj["seq"], obj["op"], tuple(arg(a) for a in obj["args"]))
                 log._committed.append(rec)
@@ -317,6 +333,32 @@ class OpLog:
                 raise TensorHubError(f"bad op-log line kind: {kind!r}")
         if log.snapshot is not None:
             log._seq = max(log._seq, log.snapshot.seq)
+        return log
+
+    @classmethod
+    def open_path(
+        cls, path: str, *, group_commit: int = 1
+    ) -> "OpLog":
+        """Reopen a file-backed log in place: parse the durable content
+        that a crash (or clean shutdown) left at ``path``, then continue
+        appending to the same file.
+
+        This is the networked controller's restart path —
+        ``repro.core.failover.recover_path`` feeds the parsed records to
+        replay and hands the still-attached log back to the rebuilt
+        server, so the WAL keeps growing where the dead process stopped.
+        Sequence numbers continue past the parsed maximum and blob keys
+        are allocated past any key already present in the file; replay
+        resolves blob references in file order either way."""
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                text = fh.read()
+        except FileNotFoundError:
+            text = ""
+        log = cls.from_jsonl(text, group_commit=group_commit)
+        log.path = path
+        log._fp = open(path, "a", encoding="utf-8")
+        log._direct = False  # records must reach the file sink via flush
         return log
 
 

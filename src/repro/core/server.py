@@ -40,9 +40,49 @@ from repro.core.errors import (
     VersionUnavailableError,
 )
 from repro.core.meta import Assignment, ShardManifest, SourceSlice, WorkerInfo
-from repro.core.oplog import OpLog
+from repro.core.oplog import OP_SCHEMAS, OpLog
 
 logger = logging.getLogger(__name__)
+
+# ---------------------------------------------------------------------------
+# The remotable control-plane surface
+# ---------------------------------------------------------------------------
+#
+# ``ReferenceServer`` is transport-agnostic: every public method is a plain
+# call that mutates atomically and returns immediately, so any transport —
+# the in-process client, or the networked ``repro.net`` service — is a thin
+# dispatcher over this table. Mutating ops carry their wire schema in
+# ``oplog.OP_SCHEMAS`` (the WAL payload IS the RPC payload); read-only ops
+# declare theirs here. Anything not in ``CONTROL_OPS`` is not remotable:
+# the networked service refuses it, so a forged frame can never reach
+# private state (``_record``, ``__class__``, ...).
+
+#: read-only ops: name -> positional argument names (keyword-only arguments
+#: ride the request's ``kw`` map and are listed after a ``*`` marker).
+READONLY_OPS: Dict[str, tuple] = {
+    "get_assignment": ("model", "replica"),
+    "assignment_epoch": ("model", "replica", "version"),
+    "redeem": ("model", "replica", "*", "op_id"),
+    "source_progress": ("model", "source_replica", "version"),
+    "shard_progress": ("model", "source_replica", "version", "shard_idx"),
+    "list_versions": ("model",),
+    "latest": ("model",),
+    "num_shards": ("model",),
+    "replica_version": ("model", "replica"),
+    "manifest": ("model", "version", "shard_idx", "*", "num_shards"),
+    "replica_manifest": ("model", "version", "replica", "shard_idx"),
+    "replica_datacenter": ("model", "replica"),
+    "availability": ("model", "version"),
+    "metrics": (),
+    "metrics_text": (),
+    "config": (),
+    # administrative: kill this controller (tests / chaos drills); not
+    # logged — a crash is precisely the thing the WAL does not record
+    "crash": (),
+}
+
+#: every server method a transport may dispatch to, mutating or not
+CONTROL_OPS: Set[str] = set(OP_SCHEMAS) | set(READONLY_OPS)
 
 # ---------------------------------------------------------------------------
 # Replica/version state

@@ -18,11 +18,13 @@ from repro.obs.export import (
     render_timeline,
     write_chrome_trace,
 )
+from repro.obs.rpc import RpcStats
 
 __all__ = [
     "DISABLED",
     "STALL_COMPONENTS",
     "Recorder",
+    "RpcStats",
     "chrome_trace_events",
     "render_timeline",
     "stall_breakdown",

@@ -361,6 +361,15 @@ class WorkerRegistry:
             raise TransportError(f"no live store for {replica}/shard{shard_idx}")
         return store
 
+    def lookup(self, replica: str, shard_idx: int) -> Optional[WorkerStore]:
+        """The registered store, live or failed, or ``None`` when this
+        process holds no entry at all. The networked transport uses the
+        distinction: a locally-registered-but-dead store must fail fast
+        (as :meth:`get` does), while an *absent* one means the source
+        lives in another process and the read goes over the wire."""
+        with self._lock:
+            return self._stores.get((replica, shard_idx))
+
     def fail_replica(self, replica: str) -> None:
         """Kill every shard of a replica (spot preemption in tests)."""
         with self._lock:

@@ -1,0 +1,283 @@
+"""Reusable subprocess harness for multi-process tests.
+
+Grown out of ``test_distributed_subprocess.py``'s inline ``run_py``:
+everything here exists so a test that spawns real processes fails with a
+*diagnosis* instead of a bare timeout — every helper enforces a hard
+deadline and dumps captured stdout/stderr tails into the assertion
+message when a child misbehaves.
+
+* :func:`run_py` — run a Python snippet to completion in a fresh
+  interpreter (the XLA-device tests and the networked equivalence
+  checks).
+* :class:`Proc` / :class:`ProcSet` — long-lived children (controller,
+  workers) with spawn/await-pattern/kill/stop lifecycle, per-process log
+  files (kept under ``$REPRO_PROC_LOG_DIR`` when set, else a tempdir),
+  and SIGKILL-everything cleanup so a failing test never leaks children.
+* :func:`free_port` — OS-assigned TCP port for subprocess servers.
+
+The deadline default comes from ``$REPRO_PROC_DEADLINE`` (seconds,
+default 420) so CI can tighten or relax every subprocess test in one
+place instead of editing scattered constants.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+from typing import Dict, List, Optional
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_DEADLINE = float(os.environ.get("REPRO_PROC_DEADLINE", "420"))
+
+_TAIL_BYTES = 3000
+
+
+def free_port() -> int:
+    """An OS-assigned free TCP port (racy by nature; fine for tests that
+    bind immediately, and subprocess servers prefer port 0 + an address
+    file anyway)."""
+    s = socket.socket()
+    try:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+    finally:
+        s.close()
+
+
+def _tail(text: Optional[str]) -> str:
+    if not text:
+        return "<empty>"
+    return text[-_TAIL_BYTES:]
+
+
+def build_env(
+    *, devices: Optional[int] = None, extra: Optional[Dict[str, str]] = None
+) -> Dict[str, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if devices is not None:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    if extra:
+        env.update(extra)
+    return env
+
+
+def run_py(
+    code: str,
+    *,
+    devices: Optional[int] = None,
+    deadline: Optional[float] = None,
+    extra_env: Optional[Dict[str, str]] = None,
+) -> str:
+    """Run a Python snippet in a fresh interpreter; returns its stdout.
+
+    A non-zero exit or a blown deadline raises AssertionError carrying
+    both output tails — the failure is diagnosable from the pytest
+    report alone, without hunting for child logs."""
+    deadline = DEFAULT_DEADLINE if deadline is None else deadline
+    argv = [sys.executable, "-c", textwrap.dedent(code)]
+    try:
+        res = subprocess.run(
+            argv,
+            capture_output=True,
+            text=True,
+            timeout=deadline,
+            env=build_env(devices=devices, extra=extra_env),
+        )
+    except subprocess.TimeoutExpired as e:
+        out = e.stdout.decode("utf-8", "replace") if isinstance(e.stdout, bytes) else e.stdout
+        err = e.stderr.decode("utf-8", "replace") if isinstance(e.stderr, bytes) else e.stderr
+        raise AssertionError(
+            f"subprocess exceeded the {deadline:.0f}s deadline\n"
+            f"--- stdout tail ---\n{_tail(out)}\n"
+            f"--- stderr tail ---\n{_tail(err)}"
+        ) from None
+    assert res.returncode == 0, (
+        f"subprocess exited {res.returncode}\n"
+        f"--- stdout tail ---\n{_tail(res.stdout)}\n"
+        f"--- stderr tail ---\n{_tail(res.stderr)}"
+    )
+    return res.stdout
+
+
+class Proc:
+    """One long-lived child process with captured logs.
+
+    Logs stream to files (not pipes), so a child blocked on a full pipe
+    buffer can never deadlock a test, and the files survive a SIGKILL
+    for post-mortem tails."""
+
+    def __init__(
+        self,
+        name: str,
+        argv: List[str],
+        *,
+        log_dir: str,
+        env: Optional[Dict[str, str]] = None,
+    ) -> None:
+        self.name = name
+        self.argv = argv
+        self.stdout_path = os.path.join(log_dir, f"{name}.out")
+        self.stderr_path = os.path.join(log_dir, f"{name}.err")
+        self._stdout_f = open(self.stdout_path, "wb")
+        self._stderr_f = open(self.stderr_path, "wb")
+        self.popen = subprocess.Popen(
+            argv,
+            stdout=self._stdout_f,
+            stderr=self._stderr_f,
+            env=env if env is not None else build_env(),
+        )
+
+    @property
+    def pid(self) -> int:
+        return self.popen.pid
+
+    def alive(self) -> bool:
+        return self.popen.poll() is None
+
+    def read_stdout(self) -> str:
+        with open(self.stdout_path, "r", encoding="utf-8", errors="replace") as fh:
+            return fh.read()
+
+    def read_stderr(self) -> str:
+        with open(self.stderr_path, "r", encoding="utf-8", errors="replace") as fh:
+            return fh.read()
+
+    def tails(self) -> str:
+        return (
+            f"[{self.name}] argv={self.argv} rc={self.popen.poll()}\n"
+            f"--- {self.name} stdout tail ---\n{_tail(self.read_stdout())}\n"
+            f"--- {self.name} stderr tail ---\n{_tail(self.read_stderr())}"
+        )
+
+    def await_pattern(
+        self, pattern: str, *, deadline: Optional[float] = None
+    ) -> "re.Match":
+        """Block until ``pattern`` (regex) appears on the child's stdout;
+        returns the match. Dies with full tails if the child exits or the
+        deadline passes first."""
+        deadline = DEFAULT_DEADLINE if deadline is None else deadline
+        end = time.monotonic() + deadline
+        rx = re.compile(pattern)
+        while True:
+            m = rx.search(self.read_stdout())
+            if m:
+                return m
+            if not self.alive():
+                raise AssertionError(
+                    f"{self.name} exited before printing {pattern!r}\n{self.tails()}"
+                )
+            if time.monotonic() >= end:
+                raise AssertionError(
+                    f"{self.name}: no {pattern!r} within {deadline:.0f}s\n{self.tails()}"
+                )
+            time.sleep(0.05)
+
+    def wait(self, *, deadline: Optional[float] = None) -> int:
+        deadline = DEFAULT_DEADLINE if deadline is None else deadline
+        try:
+            return self.popen.wait(timeout=deadline)
+        except subprocess.TimeoutExpired:
+            self.kill()
+            raise AssertionError(
+                f"{self.name} still running after {deadline:.0f}s\n{self.tails()}"
+            ) from None
+
+    def kill(self) -> None:
+        """SIGKILL — the crash the fault-tolerance tests are about."""
+        if self.alive():
+            try:
+                self.popen.send_signal(signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+        self.popen.wait()
+        self._close_files()
+
+    def stop(self, *, deadline: float = 10.0) -> int:
+        """SIGTERM and wait (graceful shutdown path)."""
+        if self.alive():
+            try:
+                self.popen.terminate()
+            except ProcessLookupError:
+                pass
+        try:
+            rc = self.popen.wait(timeout=deadline)
+        except subprocess.TimeoutExpired:
+            self.popen.kill()
+            rc = self.popen.wait()
+        self._close_files()
+        return rc
+
+    def _close_files(self) -> None:
+        for fh in (self._stdout_f, self._stderr_f):
+            try:
+                fh.close()
+            except Exception:
+                pass
+
+
+class ProcSet:
+    """Context manager owning a set of children; everything is SIGKILLed
+    on exit no matter how the test ends, and ``failure_report()`` bundles
+    every child's tails for the assertion message."""
+
+    def __init__(self, log_dir: Optional[str] = None) -> None:
+        self.log_dir = (
+            log_dir
+            or os.environ.get("REPRO_PROC_LOG_DIR")
+            or tempfile.mkdtemp(prefix="repro-procs-")
+        )
+        os.makedirs(self.log_dir, exist_ok=True)
+        self.procs: List[Proc] = []
+
+    def spawn(
+        self, name: str, argv: List[str], *, env: Optional[Dict[str, str]] = None
+    ) -> Proc:
+        p = Proc(name, argv, log_dir=self.log_dir, env=env)
+        self.procs.append(p)
+        return p
+
+    def spawn_py(
+        self,
+        name: str,
+        code: str,
+        *,
+        extra_env: Optional[Dict[str, str]] = None,
+        devices: Optional[int] = None,
+    ) -> Proc:
+        return self.spawn(
+            name,
+            [sys.executable, "-c", textwrap.dedent(code)],
+            env=build_env(devices=devices, extra=extra_env),
+        )
+
+    def spawn_module(
+        self,
+        name: str,
+        module: str,
+        *args: str,
+        extra_env: Optional[Dict[str, str]] = None,
+    ) -> Proc:
+        return self.spawn(
+            name,
+            [sys.executable, "-m", module, *args],
+            env=build_env(extra=extra_env),
+        )
+
+    def failure_report(self) -> str:
+        return "\n".join(p.tails() for p in self.procs)
+
+    def __enter__(self) -> "ProcSet":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        for p in self.procs:
+            p.kill()

@@ -6,29 +6,15 @@ same mechanism the dry-run uses, validated here at 8 devices where real
 numeric comparison is cheap.
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from procs import run_py as _run_py
 
 
 def run_py(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    res = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True,
-        text=True,
-        timeout=420,
-        env=env,
-    )
-    assert res.returncode == 0, f"stderr:\n{res.stderr[-3000:]}"
-    return res.stdout
+    # shared harness: deadline from $REPRO_PROC_DEADLINE (default 420s)
+    # with stdout/stderr tail dumps on both failure and timeout
+    return _run_py(code, devices=devices)
 
 
 @pytest.mark.timeout(500)

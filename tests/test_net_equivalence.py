@@ -1,0 +1,241 @@
+"""Transport equivalence sweep — tier-1, in-process, no sockets.
+
+The tentpole split promises that the networked service is the *same*
+control plane behind a different transport. This suite replays one
+recorded op trace (publish -> replicate -> update -> failures -> crash)
+through an in-process ``ReferenceServer`` and through a
+``ReferenceService`` taking every op as an encoded wire frame, asserting
+``state_digest`` equality at every single op boundary — any divergence
+the wire codec, dispatcher, or error path introduces fails on the exact
+op that caused it.
+
+Also pins the WAL-file restart path the networked controller uses:
+``OpLog.open_path`` / ``failover.recover_path`` rebuild a digest-
+identical server from the file a dead process left, and keep appending
+to it across multiple restarts.
+"""
+
+import pytest
+
+from repro.core import failover
+from repro.core.errors import ServerUnavailableError, TensorHubError
+from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.oplog import OpLog
+from repro.core.server import ReferenceServer
+from repro.net import protocol
+from repro.net.service import ReferenceService
+
+
+def manifest(n_units=2, unit_bytes=64):
+    tensors = tuple(
+        TensorMeta(f"t{i}", (unit_bytes,), "uint8", unit_bytes)
+        for i in range(n_units)
+    )
+    units = tuple(
+        TransferUnit(index=i, name=f"t{i}", nbytes=unit_bytes)
+        for i in range(n_units)
+    )
+    return ShardManifest(tensors=tensors, units=units, checksums=(0,) * n_units)
+
+
+def worker(replica, shard, dc="dc0"):
+    return WorkerInfo(f"{replica}/s{shard}", f"{dc}/{replica}", dc, False)
+
+
+def recorded_trace():
+    """One deterministic control-plane history touching every family of
+    mutation: opens, publishes, replication with progress, an update
+    round, heartbeats/ticks, gray-failure evidence, an eviction, an
+    unpublish — and a crash at the end. ``(op, args, kw)`` triples, the
+    exact shape the wire protocol moves."""
+    ops = []
+
+    def rec(op, *args, **kw):
+        ops.append((op, args, kw))
+
+    for shard in range(2):
+        rec("open", "m", "pub", 2, shard, worker=worker("pub", shard), retain="latest")
+        rec("register", "m", "pub", shard)
+    for shard in range(2):
+        rec("open", "m", "sub", 2, shard, worker=worker("sub", shard), retain=None)
+        rec("register", "m", "sub", shard)
+    for shard in range(2):
+        rec("publish", "m", "pub", shard, 0, manifest(), op_id=0)
+        rec("heartbeat", "m", "pub", shard, 1.0)
+    for shard in range(2):
+        rec("begin_replicate", "m", "sub", shard, "latest", op_id=1)
+    for shard in range(2):
+        for progress in (1, 2):
+            rec("update_progress", "m", "sub", shard, 0, progress)
+    for shard in range(2):
+        rec("complete_replicate", "m", "sub", shard, 0, op_id=2)
+        rec("heartbeat", "m", "sub", shard, 2.0)
+    rec("tick", 3.0)
+    # a second version: the update path
+    for shard in range(2):
+        rec("unpublish", "m", "pub", shard, op_id=3)
+    rec("finish_unpublish", "m", "pub")
+    for shard in range(2):
+        rec("publish", "m", "pub", shard, 1, manifest(n_units=3), op_id=4)
+    for shard in range(2):
+        rec("begin_update", "m", "sub", shard, "latest", op_id=5)
+    # duplicate redelivery mid-trace: must be state-neutral on both paths
+    rec("begin_update", "m", "sub", 0, "latest", op_id=5)
+    for shard in range(2):
+        rec("update_progress", "m", "sub", shard, 1, 3)
+        rec("complete_replicate", "m", "sub", shard, 1, op_id=6)
+    # gray-failure evidence and the probation machinery
+    rec("report_transfer_failure", "m", "sub", "pub", "transient", 4.0)
+    rec("report_transfer_failure", "m", "sub", "pub", "corrupt", 4.5)
+    rec("tick", 5.0)
+    rec("poll_events", "sub/s0")
+    # a stale heartbeat pattern followed by an expiry sweep: eviction
+    rec("heartbeat", "m", "pub", 0, 5.0)
+    rec("tick", 100.0)
+    rec("fail_replica", "m", "sub", "spot preemption")
+    rec("poll_events", "pub/s0")
+    # the crash: every op after this raises ServerUnavailableError
+    rec("crash")
+    rec("latest", "m")
+    rec("tick", 101.0)
+    return ops
+
+
+def wire_apply(svc, op, args, kw):
+    return protocol.decode_response(
+        svc.handle_frame(protocol.encode_request(op, args, kw))
+    )
+
+
+class TestTransportEquivalence:
+    def test_digest_equal_at_every_op_boundary(self):
+        direct = ReferenceServer(heartbeat_timeout=10.0)
+        svc = ReferenceService(ReferenceServer(heartbeat_timeout=10.0))
+        assert failover.state_digest(direct) == failover.state_digest(svc.server)
+        for i, (op, args, kw) in enumerate(recorded_trace()):
+            outcome_direct = outcome_wire = None
+            try:
+                r_direct = getattr(direct, op)(*args, **kw)
+            except TensorHubError as e:
+                outcome_direct = type(e).__name__
+                r_direct = None
+            try:
+                r_wire = wire_apply(svc, op, args, kw)
+            except TensorHubError as e:
+                outcome_wire = type(e).__name__
+                r_wire = None
+            assert outcome_direct == outcome_wire, (
+                f"op {i} ({op}): error divergence "
+                f"{outcome_direct!r} != {outcome_wire!r}"
+            )
+            assert r_direct == r_wire, (
+                f"op {i} ({op}): result divergence\n{r_direct!r}\n{r_wire!r}"
+            )
+            assert failover.state_digest(direct) == failover.state_digest(
+                svc.server
+            ), f"op {i} ({op}): state digest diverged"
+
+    def test_crash_marker_respected_on_both_paths(self):
+        direct = ReferenceServer()
+        svc = ReferenceService(ReferenceServer())
+        direct.crash()
+        svc.server.crash()
+        with pytest.raises(ServerUnavailableError):
+            direct.latest("m")
+        with pytest.raises(ServerUnavailableError):
+            wire_apply(svc, "latest", ("m",), {})
+        assert failover.state_digest(direct) == failover.state_digest(svc.server)
+
+
+class TestWalFileRestart:
+    def _run_trace_until_crash(self, server):
+        for op, args, kw in recorded_trace():
+            if op == "crash":
+                break
+            try:
+                getattr(server, op)(*args, **kw)
+            except TensorHubError:
+                pass
+
+    def test_recover_path_rebuilds_identical_server(self, tmp_path):
+        wal = str(tmp_path / "controller.wal")
+        live = ReferenceServer(
+            heartbeat_timeout=10.0, log=OpLog.open_path(wal)
+        )
+        self._run_trace_until_crash(live)
+        live.log.close()  # the process dies; the file is what remains
+
+        recovered = failover.recover_path(wal)
+        assert failover.state_digest(recovered) == failover.state_digest(live)
+        # the reopened log must keep appending where the file left off
+        assert recovered.log is not None and recovered.log.path == wal
+
+    def test_restart_twice_keeps_appending(self, tmp_path):
+        """Kill -> recover -> mutate -> kill -> recover again: the WAL
+        accumulates across incarnations and every recovery is digest-
+        faithful to the server that wrote the tail."""
+        wal = str(tmp_path / "controller.wal")
+        first = ReferenceServer(log=OpLog.open_path(wal))
+        first.open("m", "pub", 1, 0, worker=worker("pub", 0), retain=None)
+        first.register("m", "pub", 0)
+        first.publish("m", "pub", 0, 0, manifest(), op_id=0)
+        first.log.close()
+
+        second = failover.recover_path(wal)
+        second.heartbeat("m", "pub", 0, 1.0)
+        second.unpublish("m", "pub", 0, op_id=1)
+        second.finish_unpublish("m", "pub")
+        second.publish("m", "pub", 0, 1, manifest(n_units=3), op_id=2)
+        digest_second = failover.state_digest(second)
+        second.log.close()
+
+        third = failover.recover_path(wal)
+        assert failover.state_digest(third) == digest_second
+        assert third.latest("m") == 1
+
+    def test_compacted_wal_recovers_after_reopen(self, tmp_path):
+        """Snapshot compaction then a restart: open_path must read the
+        snapshot line plus the surviving suffix."""
+        wal = str(tmp_path / "controller.wal")
+        live = ReferenceServer(log=OpLog.open_path(wal))
+        live.open("m", "pub", 1, 0, worker=worker("pub", 0), retain=None)
+        live.register("m", "pub", 0)
+        live.publish("m", "pub", 0, 0, manifest(), op_id=0)
+        live.log.compact(failover.take_snapshot(live))
+        # post-snapshot tail the recovery has to replay on top
+        live.unpublish("m", "pub", 0, op_id=1)
+        live.finish_unpublish("m", "pub")
+        live.publish("m", "pub", 0, 1, manifest(), op_id=2)
+        live.log.close()
+
+        recovered = failover.recover_path(wal)
+        assert failover.state_digest(recovered) == failover.state_digest(live)
+        assert recovered.latest("m") == 1
+
+    def test_blob_keys_stay_distinct_across_reopens(self, tmp_path):
+        """A restarted controller's interned manifest blobs must not
+        collide with keys already in the file (references resolve in
+        file order, but distinct keys keep compaction sound)."""
+        wal = str(tmp_path / "controller.wal")
+        first = ReferenceServer(log=OpLog.open_path(wal))
+        first.open("m", "pub", 1, 0, worker=worker("pub", 0), retain=None)
+        first.register("m", "pub", 0)
+        first.publish("m", "pub", 0, 0, manifest(), op_id=0)
+        first.log.close()
+
+        second = failover.recover_path(wal)
+        second.unpublish("m", "pub", 0, op_id=1)
+        second.finish_unpublish("m", "pub")
+        second.publish("m", "pub", 0, 1, manifest(n_units=3), op_id=2)
+        second.log.close()
+
+        import json
+
+        keys = []
+        with open(wal, "r", encoding="utf-8") as fh:
+            for line in fh:
+                obj = json.loads(line)
+                if obj.get("kind") == "blob":
+                    keys.append(obj["key"])
+        assert len(keys) == len(set(keys)), f"blob key collision: {keys}"
+        assert len(keys) >= 2  # both incarnations interned a manifest

@@ -1,0 +1,266 @@
+"""Networked-tier integration tests: real processes, real sockets.
+
+Everything here spawns the controller (``python -m repro.net.controller``)
+and workers as genuine OS processes via ``tests/procs.py`` and talks to
+them over localhost HTTP — the multi-process deployment shape of the
+paper's production service, exercised end to end:
+
+* byte-identical delivery through the socketed data plane, compared
+  against the in-process path pulling the same weights;
+* heartbeat-expiry eviction of a SIGKILLed worker, with later readers
+  re-planned onto the surviving source;
+* SIGKILL of the controller mid-pull, restart from the WAL on a fresh
+  port, and the parked reader resuming to byte-identical completion.
+
+Excluded from tier-1 by the ``networked`` marker (see pyproject addopts);
+CI runs this tier in its own job with ``-m networked``.
+"""
+
+import hashlib
+import os
+import time
+
+import numpy as np
+import pytest
+
+from procs import ProcSet
+from repro.core.client import TensorHubClient
+from repro.core.server import ReferenceServer
+from repro.net.client import RemoteClient, read_address
+
+pytestmark = pytest.mark.networked
+
+#: one deterministic model shared by every process in these tests: any
+#: two digests over these tensors agree iff the delivered bytes do.
+#: TH_N / TH_DIM control the unit count — tensors under the 2 MiB tiny
+#: threshold compact into one bucket (one unit), tensors above it become
+#: one unit each (what the mid-pull kill test needs to stretch a pull)
+WEIGHTS_SRC = """
+import hashlib
+import os
+import numpy as np
+
+def weights():
+    n = int(os.environ.get("TH_N", "6"))
+    dim = int(os.environ.get("TH_DIM", "96"))
+    rng = np.random.default_rng(7)
+    return {f"w{i}": rng.standard_normal((dim, dim), dtype=np.float32)
+            for i in range(n)}
+
+def digest(store, names):
+    return hashlib.sha256(
+        b"".join(store.get(k).tobytes() for k in sorted(names))
+    ).hexdigest()
+"""
+
+
+def _weights(n=6, dim=96):
+    rng = np.random.default_rng(7)
+    return {
+        f"w{i}": rng.standard_normal((dim, dim), dtype=np.float32)
+        for i in range(n)
+    }
+
+
+def _expected_digest(n=6, dim=96):
+    w = _weights(n, dim)
+    return hashlib.sha256(b"".join(w[k].tobytes() for k in sorted(w))).hexdigest()
+
+
+def _inprocess_digest():
+    """The same replicate through the in-process path — the byte-identity
+    oracle the networked readers are compared against."""
+    hub = TensorHubClient(ReferenceServer())
+    pub = hub.open("m", "pub", 1, 0)
+    pub.register(_weights())
+    pub.publish(0)
+    sub = hub.open("m", "sub", 1, 0)
+    sub.register({k: np.zeros_like(v) for k, v in _weights().items()})
+    sub.replicate(0)
+    return hashlib.sha256(
+        b"".join(sub.store.get(k).tobytes() for k in sorted(_weights()))
+    ).hexdigest()
+
+
+def _controller_args(tmp, **kw):
+    addr_file = os.path.join(tmp, "controller.addr")
+    wal = os.path.join(tmp, "controller.wal")
+    args = ["--addr-file", addr_file, "--wal", wal]
+    for flag, val in kw.items():
+        args += [f"--{flag.replace('_', '-')}", str(val)]
+    return addr_file, wal, args
+
+
+PUBLISHER_SRC = WEIGHTS_SRC + """
+import os, time
+from repro.net.worker import NetWorker
+
+worker = NetWorker("pub-proc", addr_file=os.environ["TH_ADDR_FILE"])
+h = worker.open("m", "pub", 1, 0)
+w = weights()
+h.register(w)
+h.publish(0)
+print("PUBLISHED", digest(h.store, w), flush=True)
+time.sleep(float(os.environ.get("TH_LINGER", "120")))
+"""
+
+READER_SRC = WEIGHTS_SRC + """
+import os, time
+import numpy as np
+from repro.net.worker import NetWorker
+
+name = os.environ["TH_REPLICA"]
+worker = NetWorker(name + "-proc", addr_file=os.environ["TH_ADDR_FILE"],
+                   throttle_s=float(os.environ.get("TH_THROTTLE", "0")))
+h = worker.open("m", name, 1, 0)
+w = weights()
+h.register({k: np.zeros_like(v) for k, v in w.items()})
+print("PULL_START", flush=True)
+h.replicate(0)
+print("DONE", digest(h.store, w), flush=True)
+time.sleep(float(os.environ.get("TH_LINGER", "120")))
+"""
+
+
+@pytest.mark.timeout(300)
+def test_publish_multi_worker_pull_byte_identity(tmp_path):
+    """register -> publish -> two readers pull over real sockets; every
+    delivered copy is byte-identical to the in-process path's."""
+    expected = _expected_digest()
+    assert _inprocess_digest() == expected  # the oracle agrees with itself
+    with ProcSet() as procs:
+        addr_file, _, args = _controller_args(
+            str(tmp_path), heartbeat_timeout=30.0
+        )
+        controller = procs.spawn_module("controller", "repro.net.controller", *args)
+        controller.await_pattern(r"READY", deadline=60)
+
+        env = {"TH_ADDR_FILE": addr_file}
+        publisher = procs.spawn_py("publisher", PUBLISHER_SRC, extra_env=env)
+        m = publisher.await_pattern(r"PUBLISHED (\w+)", deadline=60)
+        assert m.group(1) == expected, publisher.tails()
+
+        readers = [
+            procs.spawn_py(
+                f"reader{i}", READER_SRC,
+                extra_env={**env, "TH_REPLICA": f"r{i}"},
+            )
+            for i in (1, 2)
+        ]
+        for r in readers:
+            m = r.await_pattern(r"DONE (\w+)", deadline=120)
+            assert m.group(1) == expected, (
+                f"networked pull diverged from the in-process bytes\n"
+                + procs.failure_report()
+            )
+
+        # the transfers really crossed the control plane's sockets
+        rc = RemoteClient(read_address(addr_file))
+        counters = rc.metrics()["counters"]
+        assert counters["publishes"] >= 1
+        assert counters["replications_completed"] >= 2
+        rc.close()
+
+
+@pytest.mark.timeout(300)
+def test_sigkilled_worker_is_heartbeat_evicted_and_readers_replan(tmp_path):
+    """SIGKILL the publisher: its heartbeats stop, the controller's expiry
+    ticker evicts it, and a later reader is planned onto the surviving
+    replica — completing with identical bytes."""
+    expected = _expected_digest()
+    with ProcSet() as procs:
+        addr_file, _, args = _controller_args(
+            str(tmp_path), heartbeat_timeout=1.5, tick_interval=0.25
+        )
+        controller = procs.spawn_module("controller", "repro.net.controller", *args)
+        controller.await_pattern(r"READY", deadline=60)
+        rc = RemoteClient(read_address(addr_file))
+
+        env = {"TH_ADDR_FILE": addr_file}
+        publisher = procs.spawn_py("publisher", PUBLISHER_SRC, extra_env=env)
+        publisher.await_pattern(r"PUBLISHED", deadline=60)
+
+        # first reader completes while the publisher is alive: version 0
+        # now has a surviving source besides the publisher
+        r1 = procs.spawn_py(
+            "reader1", READER_SRC, extra_env={**env, "TH_REPLICA": "r1"}
+        )
+        m = r1.await_pattern(r"DONE (\w+)", deadline=120)
+        assert m.group(1) == expected, procs.failure_report()
+
+        publisher.kill()  # SIGKILL: no unregister, no goodbye — only silence
+
+        deadline = time.monotonic() + 60
+        while rc.metrics()["counters"]["evictions"] < 1:
+            assert time.monotonic() < deadline, (
+                "no heartbeat-expiry eviction within 60s\n"
+                + procs.failure_report()
+            )
+            time.sleep(0.2)
+        assert "pub" not in rc.availability("m", 0), (
+            "evicted publisher still advertised as a source"
+        )
+
+        # a fresh reader must be planned onto r1 (the only live source)
+        r2 = procs.spawn_py(
+            "reader2", READER_SRC, extra_env={**env, "TH_REPLICA": "r2"}
+        )
+        m = r2.await_pattern(r"DONE (\w+)", deadline=120)
+        assert m.group(1) == expected, procs.failure_report()
+        assert "r1" in rc.availability("m", 0)
+        rc.close()
+
+
+@pytest.mark.timeout(300)
+def test_controller_sigkill_wal_restart_resumes_mid_pull(tmp_path):
+    """SIGKILL the controller while a throttled reader is mid-pull, then
+    restart it from the WAL on a fresh port: the parked reader fails over
+    through the address file and completes byte-identically."""
+    # 8 tensors x 2.25 MiB: each clears the 2 MiB tiny threshold, so the
+    # pull moves 8 separate units — with 50ms throttle per remote unit
+    # the transfer spans >=0.4s, a wide window for the kill to land in
+    expected = _expected_digest(n=8, dim=768)
+    with ProcSet() as procs:
+        addr_file, wal, args = _controller_args(
+            str(tmp_path), heartbeat_timeout=30.0
+        )
+        controller = procs.spawn_module("controller", "repro.net.controller", *args)
+        controller.await_pattern(r"READY", deadline=60)
+        first_addr = read_address(addr_file)
+
+        env = {"TH_ADDR_FILE": addr_file, "TH_N": "8", "TH_DIM": "768"}
+        publisher = procs.spawn_py("publisher", PUBLISHER_SRC, extra_env=env)
+        publisher.await_pattern(r"PUBLISHED", deadline=60)
+
+        reader = procs.spawn_py(
+            "reader", READER_SRC,
+            extra_env={**env, "TH_REPLICA": "r1", "TH_THROTTLE": "0.05"},
+        )
+        reader.await_pattern(r"PULL_START", deadline=60)
+        time.sleep(0.12)  # land the kill inside the throttled pull
+
+        assert "DONE" not in reader.read_stdout(), (
+            "pull finished before the kill could land mid-pull; raise "
+            "TH_THROTTLE or the unit count\n" + procs.failure_report()
+        )
+        controller.kill()  # SIGKILL: the WAL is all that survives
+
+        restarted = procs.spawn_module(
+            "controller2", "repro.net.controller", *args
+        )
+        restarted.await_pattern(r"READY", deadline=60)
+        second_addr = read_address(addr_file)
+        assert second_addr != first_addr, "fresh port expected after restart"
+
+        # the parked reader fails over via the address file and resumes
+        m = reader.await_pattern(r"DONE (\w+)", deadline=120)
+        assert m.group(1) == expected, (
+            "post-failover bytes diverged\n" + procs.failure_report()
+        )
+
+        # the restarted controller (recovered from the WAL) carried the
+        # replication to completion in its own books
+        rc = RemoteClient(second_addr)
+        assert rc.metrics()["counters"]["replications_completed"] >= 1
+        assert rc.ping()["crashed"] is False
+        rc.close()

@@ -1,0 +1,331 @@
+"""Wire-protocol property/fuzz tests — tier-1, in-process, no sockets.
+
+The :class:`~repro.net.service.ReferenceService` frame handler is total:
+whatever bytes arrive, the response is a well-formed frame — a result,
+or a typed error. These tests pin that contract from both ends:
+
+* every request/response payload round-trips the generic wire codec
+  (the op results a real session produces, compared field-for-field
+  against an identical in-process server);
+* truncated, garbage, wrong-version, and wrong-shape frames come back
+  as clean ``ProtocolError`` frames — no hang, no stack-trace
+  disconnect, no exception out of ``handle_frame``;
+* op-id redelivery through the full wire path returns the cached result
+  (the WAL's done-txn cache is the RPC idempotency layer) and divergent
+  reuse still raises ``ConsistencyError``;
+* typed errors cross the wire as themselves, including the
+  ``ServerUnavailableError`` that makes remote clients park.
+"""
+
+import json
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.errors import (
+    ConsistencyError,
+    ServerUnavailableError,
+    ShardLayoutError,
+    TensorHubError,
+    TransportError,
+)
+from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.server import CONTROL_OPS, ReferenceServer
+from repro.net import protocol
+from repro.net.protocol import ProtocolError
+from repro.net.service import ReferenceService
+
+
+def manifest(n_units=2, unit_bytes=100):
+    tensors = tuple(
+        TensorMeta(f"t{i}", (unit_bytes,), "uint8", unit_bytes)
+        for i in range(n_units)
+    )
+    units = tuple(
+        TransferUnit(index=i, name=f"t{i}", nbytes=unit_bytes)
+        for i in range(n_units)
+    )
+    return ShardManifest(tensors=tensors, units=units, checksums=(0,) * n_units)
+
+
+def worker(replica, shard, dc="dc0", spot=False):
+    return WorkerInfo(f"{replica}/s{shard}", f"{dc}/{replica}", dc, spot)
+
+
+def wire_call(svc, op, *args, **kw):
+    """One op through the complete wire path: encode -> frame handler ->
+    decode (raising the typed error an error frame carries)."""
+    return protocol.decode_response(
+        svc.handle_frame(protocol.encode_request(op, args, kw))
+    )
+
+
+def fresh_service():
+    return ReferenceService(ReferenceServer())
+
+
+def open_replica(call, name, shards=2, dc="dc0", retain=None):
+    for i in range(shards):
+        call("open", "m", name, shards, i,
+             worker=worker(name, i, dc), retain=retain)
+        call("register", "m", name, i)
+
+
+def session_trace(call):
+    """A realistic control-plane session (publish -> replicate -> update
+    -> progress -> events), returning every op result in order. Driving
+    it through two transports and comparing is the round-trip proof for
+    all the payload types a session produces."""
+    results = []
+    open_replica(call, "pub", retain="latest")
+    open_replica(call, "sub")
+    for i in range(2):
+        results.append(call("publish", "m", "pub", i, 0, manifest(), op_id=0))
+    for i in range(2):
+        results.append(call("begin_replicate", "m", "sub", i, "latest", op_id=1))
+    for i in range(2):
+        results.append(call("update_progress", "m", "sub", i, 0, 1))
+        results.append(call("shard_progress", "m", "pub", 0, i))
+    for i in range(2):
+        results.append(call("complete_replicate", "m", "sub", i, 0, op_id=2))
+    results.append(call("manifest", "m", 0, 0))
+    results.append(call("replica_manifest", "m", 0, "sub", 1))
+    results.append(call("get_assignment", "m", "sub"))
+    results.append(call("assignment_epoch", "m", "sub", 0))
+    results.append(call("source_progress", "m", "pub", 0))
+    results.append(call("list_versions", "m"))
+    results.append(call("latest", "m"))
+    results.append(call("availability", "m", 0))
+    results.append(call("replica_version", "m", "sub"))
+    results.append(call("replica_datacenter", "m", "sub"))
+    results.append(call("num_shards", "m"))
+    for i in range(2):
+        results.append(call("begin_update", "m", "sub", i, "latest", op_id=3))
+    results.append(call("poll_events", "pub/s0"))
+    results.append(call("config"))
+    return results
+
+
+class TestRoundTrip:
+    def test_session_payloads_survive_the_wire(self):
+        """Every result of a full session through the wire path equals
+        the in-process result — dataclasses, tuples, dicts, enums and
+        all. This is the schema round-trip test for the payloads that
+        actually cross the protocol."""
+        svc = fresh_service()
+        direct = ReferenceServer()
+        wired = session_trace(lambda op, *a, **k: wire_call(svc, op, *a, **k))
+        plain = session_trace(lambda op, *a, **k: getattr(direct, op)(*a, **k))
+        assert wired == plain
+
+    def test_metrics_and_exposition_cross_the_wire(self):
+        svc = fresh_service()
+        open_replica(lambda op, *a, **k: wire_call(svc, op, *a, **k), "pub")
+        m = wire_call(svc, "metrics")
+        assert m["state"]["models"] == 1.0
+        text = wire_call(svc, "metrics_text")
+        assert "tensorhub_publishes" in text
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sampled_from(sorted(CONTROL_OPS)))
+    def test_request_encoding_round_trips_op_names(self, op):
+        enc = protocol.encode_request(op, (1, "x"), {"k": (2, 3)})
+        got_op, args, kw = protocol.decode_request(enc)
+        assert (got_op, args, kw) == (op, [1, "x"], {"k": (2, 3)})
+
+    def test_manifest_round_trips_exactly(self):
+        m = manifest(n_units=3, unit_bytes=17)
+        enc = protocol.encode_request("publish", ("m", "pub", 0, 0, m), {})
+        _, args, _ = protocol.decode_request(enc)
+        assert args[4] == m and isinstance(args[4], ShardManifest)
+
+
+class TestMalformedFrames:
+    """handle_frame never raises, never hangs, never returns junk."""
+
+    def _assert_protocol_error(self, svc, data):
+        out = svc.handle_frame(data)
+        frame = json.loads(out.decode("utf-8"))
+        assert frame["ok"] is False, frame
+        assert frame["error"]["kind"] == "ProtocolError", frame
+        assert frame["v"] == protocol.PROTOCOL_VERSION
+        # and the client side re-raises it as the typed error
+        with pytest.raises(ProtocolError):
+            protocol.decode_response(out)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.binary(min_size=0, max_size=200))
+    def test_garbage_bytes(self, data):
+        svc = fresh_service()
+        out = svc.handle_frame(data)
+        frame = json.loads(out.decode("utf-8"))
+        assert frame["v"] == protocol.PROTOCOL_VERSION
+        assert frame["ok"] is False
+        # random bytes essentially never form a valid frame; whatever the
+        # failure mode, it must surface as a ProtocolError frame
+        assert frame["error"]["kind"] == "ProtocolError"
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=0, max_value=200))
+    def test_truncated_frames(self, cut):
+        svc = fresh_service()
+        whole = protocol.encode_request(
+            "publish", ("m", "pub", 0, 0, manifest()), {"op_id": 0}
+        )
+        cut = min(cut, len(whole) - 1)  # strictly truncated
+        self._assert_protocol_error(svc, whole[:cut])
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.sampled_from([0, 2, 7, -1, 999, None, "1"]))
+    def test_wrong_version_rejected(self, v):
+        svc = fresh_service()
+        data = json.dumps({"v": v, "op": "latest", "args": ["m"], "kw": {}}).encode()
+        self._assert_protocol_error(svc, data)
+
+    def test_unknown_fields_rejected(self):
+        svc = fresh_service()
+        data = json.dumps(
+            {"v": 1, "op": "latest", "args": ["m"], "kw": {}, "extra": 1}
+        ).encode()
+        self._assert_protocol_error(svc, data)
+
+    def test_wrong_shapes_rejected(self):
+        svc = fresh_service()
+        bad = [
+            json.dumps(["not", "a", "dict"]).encode(),
+            json.dumps({"v": 1, "op": "", "args": [], "kw": {}}).encode(),
+            json.dumps({"v": 1, "op": "latest", "args": "m", "kw": {}}).encode(),
+            json.dumps({"v": 1, "op": "latest", "args": [], "kw": []}).encode(),
+            json.dumps({"v": 1, "op": 7, "args": [], "kw": {}}).encode(),
+        ]
+        for data in bad:
+            self._assert_protocol_error(svc, data)
+
+    def test_undecodable_argument_payload_rejected(self):
+        svc = fresh_service()
+        data = json.dumps(
+            {"v": 1, "op": "latest",
+             "args": [{"__dc__": "NoSuchClass", "fields": {}}], "kw": {}}
+        ).encode()
+        self._assert_protocol_error(svc, data)
+
+    def test_non_whitelisted_ops_rejected(self):
+        svc = fresh_service()
+        for op in ("_record", "attach_log", "__init__", "nonexistent", "svc.nope"):
+            with pytest.raises(ProtocolError):
+                wire_call(svc, op)
+        # the rejection happened before any server dispatch
+        assert svc.server.seq == 0
+
+
+class TestIdempotentRedelivery:
+    def test_duplicate_op_id_returns_cached_result(self):
+        """The done-txn cache *is* the RPC retry story: a client that
+        lost the response re-sends and gets the identical result with no
+        double mutation."""
+        svc = fresh_service()
+        call = lambda op, *a, **k: wire_call(svc, op, *a, **k)  # noqa: E731
+        open_replica(call, "pub")
+        r1 = call("publish", "m", "pub", 0, 1, manifest(), op_id=0)
+        r2 = call("publish", "m", "pub", 0, 1, manifest(), op_id=0)
+        assert r1 == r2
+        assert wire_call(svc, "metrics")["counters"]["publishes"] == 1.0
+
+    def test_divergent_op_id_reuse_raises_consistency_error(self):
+        svc = fresh_service()
+        call = lambda op, *a, **k: wire_call(svc, op, *a, **k)  # noqa: E731
+        open_replica(call, "pub")
+        open_replica(call, "r")
+        call("publish", "m", "pub", 0, 1, manifest(), op_id=0)
+        call("publish", "m", "pub", 1, 1, manifest(), op_id=0)
+        call("begin_replicate", "m", "r", 0, "latest", op_id=5)
+        with pytest.raises(ConsistencyError):
+            call("begin_replicate", "m", "r", 1, 0, op_id=5)  # divergent args
+
+
+class TestTypedErrorTransport:
+    def test_domain_errors_reraise_as_themselves(self):
+        svc = fresh_service()
+        call = lambda op, *a, **k: wire_call(svc, op, *a, **k)  # noqa: E731
+        call("open", "m", "sub", 2, 0, worker=worker("sub", 0, "dc0"), retain=None)
+        with pytest.raises(ShardLayoutError):
+            # one replica spanning two datacenters is a layout violation
+            call("open", "m", "sub", 2, 1, worker=worker("sub", 1, "dc1"), retain=None)
+        with pytest.raises(ConsistencyError):
+            call("open", "m", "sub", 2, 0, worker=worker("sub", 0, "dc0"), retain=None)
+
+    def test_server_unavailable_crosses_the_wire(self):
+        """The error that makes remote clients park must arrive as
+        exactly ServerUnavailableError, not a generic failure."""
+        svc = fresh_service()
+        svc.server.crash()
+        with pytest.raises(ServerUnavailableError):
+            wire_call(svc, "latest", "m")
+        # crashed-but-responsive is visible without a typed error too
+        assert wire_call(svc, "svc.ping")["crashed"] is True
+
+    def test_transport_error_transient_flag_round_trips(self):
+        for transient in (True, False):
+            frame = json.loads(
+                protocol.encode_error(
+                    TransportError("boom", transient=transient)
+                ).decode()
+            )
+            with pytest.raises(TransportError) as exc_info:
+                protocol.raise_from_error(frame["error"])
+            assert exc_info.value.transient is transient
+
+    def test_unknown_error_kind_degrades_to_tensorhub_error(self):
+        with pytest.raises(TensorHubError) as exc_info:
+            protocol.raise_from_error({"kind": "FutureError", "message": "m1"})
+        assert "FutureError" in str(exc_info.value)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.binary(min_size=0, max_size=100))
+    def test_garbage_responses_raise_protocol_error(self, data):
+        with pytest.raises(ProtocolError):
+            protocol.decode_response(data)
+
+
+class TestServiceDirectory:
+    def test_announce_peer_retract(self):
+        svc = fresh_service()
+        wire_call(svc, "svc.announce", "w0", "pub", 0, "127.0.0.1:1234")
+        assert wire_call(svc, "svc.peer", "pub", 0) == "127.0.0.1:1234"
+        assert wire_call(svc, "svc.peers") == {("pub", 0): "127.0.0.1:1234"}
+        wire_call(svc, "svc.retract", "pub", 0)
+        assert wire_call(svc, "svc.peer", "pub", 0) is None
+
+    def test_directory_is_not_server_state(self):
+        """Peer addresses are transport facts: announcing must not move
+        the replayed-state digest (the equivalence sweep relies on it)."""
+        from repro.core.failover import state_digest
+
+        svc = fresh_service()
+        before = state_digest(svc.server)
+        wire_call(svc, "svc.announce", "w0", "pub", 0, "127.0.0.1:1")
+        assert state_digest(svc.server) == before
+
+    def test_rpc_stats_sections(self):
+        svc = fresh_service()
+        wire_call(svc, "latest", "m")
+        svc.handle_frame(b"garbage")
+        m = wire_call(svc, "svc.metrics")
+        assert m["rpc"]["latest"]["calls"] >= 1.0
+        assert m["rpc"]["malformed"]["errors"] >= 1.0
+        text = svc.metrics_text()
+        assert 'tensorhub_rpc_calls_total{op="latest"}' in text
+
+
+class TestRemoteClientSurface:
+    def test_every_control_op_is_proxied_not_shadowed(self):
+        """RemoteClient's own attributes must not silently eat remotable
+        ops. ``close`` is the one sanctioned overlap: it proxies the
+        server op when given arguments (a bare call closes the socket).
+        This caught a real bug — ``handle.close()`` over the wire hit
+        the connection teardown instead of the server's ``close`` op."""
+        from repro.core.server import CONTROL_OPS
+        from repro.net.client import RemoteClient
+
+        shadowed = set(dir(RemoteClient)) & CONTROL_OPS
+        assert shadowed <= {"close"}, f"ops shadowed by client attrs: {shadowed}"
