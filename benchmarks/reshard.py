@@ -16,14 +16,30 @@ full global state dict (all-gather) and slices its block locally. Each
 source shard's NIC then ships its bytes to every destination shard
 instead of exactly once, so the transfer serializes on source links as
 the destination count grows.
+
+Codec parity (``codec_parity``): the resharded interval path is now
+codec-capable — the same two scale events run raw vs int8 on both data
+planes. The threaded rows move REAL bytes (publish in dc0, reshard-pull
+in dc1, per-link-class wire counters); the sim rows use the fluid
+network's matching counters. The WAN byte-reduction ratio must agree
+between the planes (< 2%), a forced-raw reshard must stay bit-exact with
+the publisher, and the resharded int8 decode must be byte-identical to a
+same-layout int8 pull of the same weights (row-aligned shard splits
+share the quantization grid). ``fused_vs_staged`` times the fused
+dequant+repack against the decode-trim-stage-repack pipeline over one
+planned reshard and checks the fused path wins without exceeding the
+HBM roofline.
 """
 
 from __future__ import annotations
 
+import time
 from typing import Dict, List
 
+import numpy as np
+
 from repro.configs.paper_workloads import WORKLOADS
-from repro.transfer.hardware import CLUSTER
+from repro.transfer.hardware import CLUSTER, TPU
 from repro.transfer.simcluster import SimCluster
 
 W = WORKLOADS["36B"]  # canonical 4-shard trainer layout
@@ -88,7 +104,210 @@ def naive_gather(src_tp: int, dst_tp: int) -> Dict[str, object]:
     return {"mean_stall": stall, "max_stall": stall}
 
 
-def run() -> List[Dict]:
+def _bench_tensors(rows: int = 16384) -> Dict[str, np.ndarray]:
+    """Weights whose TP-{2,4,8} slices are whole multiples of the int8
+    codec's 256-element row, so a resharded int8 decode is comparable
+    bit-for-bit against a same-layout int8 pull."""
+    rng = np.random.RandomState(7)
+    return {
+        "w": (rng.randn(rows, 64) * 2).astype(np.float32),
+        "b": rng.randn(8192).astype(np.float32),
+    }
+
+
+def _threaded_reshard(
+    tensors: Dict[str, np.ndarray], src_tp: int, dst_tp: int, wan_codec: str
+):
+    """Publish ``src_tp`` shards in dc0, reshard-pull ``dst_tp`` shards
+    in dc1 on the threaded plane; returns (dest handles, WAN wire bytes,
+    WAN decoded bytes)."""
+    import threading
+
+    from repro.core import ReferenceServer, TensorHubClient
+    from repro.resharding import tp_shard
+
+    hub = TensorHubClient(ReferenceServer(wan_codec=wan_codec))
+
+    def group(name, tp, dc, zeros):
+        hs = [hub.open("m", name, tp, i, datacenter=dc) for i in range(tp)]
+        for h in hs:
+            local, lay = tp_shard(tensors, h.shard_idx, tp)
+            if zeros:
+                local = {k: np.zeros_like(v) for k, v in local.items()}
+            h.register(local, layout=lay)
+        return hs
+
+    def run_all(hs, fn):
+        ts = [threading.Thread(target=fn, args=(h,)) for h in hs]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+    run_all(group("pub", src_tp, "dc0", False), lambda h: h.publish(0))
+    subs = group("sub", dst_tp, "dc1", True)
+    run_all(subs, lambda h: h.replicate(0))
+    return (
+        subs,
+        int(hub.transport.wire_bytes.get("vpc_up", 0)),
+        int(hub.transport.decoded_bytes.get("vpc_up", 0)),
+    )
+
+
+def _sim_reshard(src_tp: int, dst_tp: int, wan_codec: str):
+    """Same scale event in the virtual-time simulator; returns (WAN wire
+    bytes, rollout stall decomposition)."""
+    cl = SimCluster(wan_codec=wan_codec)
+    units = _global_units()
+    tr = cl.add_replica("m", "tr0", src_tp, global_unit_bytes=units)
+    ro = cl.add_replica(
+        "m", "ro0", dst_tp, datacenter="dc1", global_unit_bytes=units
+    )
+    tr.open()
+    ro.open()
+    cl.run()
+    tr.publish(0)
+    cl.run()
+    ev = ro.replicate("latest")
+    cl.run()
+    assert ev.triggered and ev.error is None, ev.error
+    return cl.link_class_bytes().get("vpc_up", 0.0), cl.stall_decomposition(["ro0"])
+
+
+def codec_parity(src_tp: int, dst_tp: int, *, rows: int = 16384) -> Dict[str, object]:
+    """Raw-vs-int8 wire bytes for one cross-DC reshard, on both planes."""
+    from repro.resharding import tp_shard
+
+    tensors = _bench_tensors(rows)
+    total = sum(v.nbytes for v in tensors.values())
+    moved: Dict[str, int] = {}
+    raw_exact = int8_identical = False
+    for codec in ("raw", "int8"):
+        subs, wire, decoded = _threaded_reshard(tensors, src_tp, dst_tp, codec)
+        moved[codec] = wire
+        if codec == "raw":
+            raw_exact = wire == decoded == total and all(
+                np.array_equal(
+                    h.store.get(k).view(np.uint8), v.view(np.uint8)
+                )
+                for h in subs
+                for k, v in tp_shard(tensors, h.shard_idx, dst_tp)[0].items()
+            )
+        else:
+            # byte identity vs a same-layout int8 pull of the same weights
+            same, _, _ = _threaded_reshard(tensors, dst_tp, dst_tp, "int8")
+            int8_identical = all(
+                np.array_equal(
+                    a.store.get(k).view(np.uint8),
+                    b.store.get(k).view(np.uint8),
+                )
+                for a, b in zip(subs, same)
+                for k in tensors
+            )
+    sim_raw, _ = _sim_reshard(src_tp, dst_tp, "raw")
+    sim_int8, parts = _sim_reshard(src_tp, dst_tp, "int8")
+    th_red = moved["raw"] / moved["int8"]
+    sim_red = sim_raw / sim_int8
+    stall = sum(parts.values())
+    return {
+        "system": f"codec-parity {SCENARIO_NAME[(src_tp, dst_tp)]}",
+        "threaded_raw_mb": round(moved["raw"] / 1e6, 3),
+        "threaded_int8_mb": round(moved["int8"] / 1e6, 3),
+        "threaded_reduction_x": round(th_red, 3),
+        "sim_reduction_x": round(sim_red, 3),
+        "plane_ratio_gap_pct": round(abs(th_red - sim_red) / sim_red * 100, 3),
+        "raw_bit_exact": raw_exact,
+        "int8_matches_same_layout": int8_identical,
+        "sim_decode_stall_pct": round(
+            parts.get("decode", 0.0) / stall * 100 if stall else 0.0, 2
+        ),
+    }
+
+
+def fused_vs_staged(*, mb: int = 48) -> Dict[str, object]:
+    """Time fused dequant+repack against decode-trim-stage-repack over
+    one planned TP-4 -> TP-2 int8 reshard (host path, best of 3)."""
+    from repro.resharding import ReshardExecutor, layout_from_manifests, plan_shard
+    from repro.transfer.codec import get_codec
+    from repro.transfer.simcluster import make_layout_manifests
+
+    # element counts not divisible by 256: shard boundaries land mid-row,
+    # so plans carry real lead/tail widening like production layouts do
+    sizes = [
+        (mb * (1 << 20) * 2 // 3 // 4 + 129) * 4,
+        (mb * (1 << 20) // 3 // 4 + 37) * 4,
+    ]
+    src_tp, dst_tp = 4, 2
+    src = layout_from_manifests(
+        dict(enumerate(make_layout_manifests(sizes, src_tp, dtype="float32"))),
+        src_tp,
+    )
+    dst_manifests = make_layout_manifests(sizes, dst_tp, dtype="float32")
+    dst = layout_from_manifests(dict(enumerate(dst_manifests)), dst_tp)
+    c = get_codec("int8")
+    rng = np.random.RandomState(11)
+    work = []  # (executor, unit, placed, frames) per dest unit
+    out_bytes = wire_bytes = 0
+    for shard in range(dst_tp):
+        plan = plan_shard(
+            src, dst, shard,
+            num_dest_units=dst_manifests[shard].num_units, codec="int8",
+        )
+        ex = ReshardExecutor(plan, dst_manifests[shard])
+        for unit, placed in ex.unit_batches():
+            frames = []
+            for p in placed:
+                iv = p.interval
+                payload = (
+                    rng.randn(iv.read_nbytes // 4).astype(np.float32)
+                    .view(np.uint8).reshape(-1)
+                )
+                frames.append(c.encode(payload, "float32"))
+            work.append((ex, unit, placed, frames))
+            out_bytes += unit.nbytes
+            wire_bytes += sum(f.nbytes for f in frames)
+
+    def staged_pass():
+        for ex, unit, placed, frames in work:
+            staging = ex.make_staging(unit.index)
+            for p, wire in zip(placed, frames):
+                iv = p.interval
+                staging[p.staging_offset : p.staging_offset + iv.nbytes] = (
+                    c.decode(wire)[iv.lead : iv.lead + iv.nbytes]
+                )
+            ex.repack(unit.index, staging)
+
+    def fused_pass():
+        for ex, unit, placed, frames in work:
+            ex.fused_repack(unit.index, frames)
+
+    def best_of(fn, n=3):
+        times = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    staged_s = best_of(staged_pass)
+    fused_s = best_of(fused_pass)
+    # roofline floor: the decode must at least read the wire and write
+    # the repacked unit once through HBM
+    roofline_s = (wire_bytes + out_bytes) / TPU.hbm_bw
+    return {
+        "system": "fused-vs-staged dequant+repack (TP-4 -> TP-2, int8)",
+        "payload_mb": round(out_bytes / 1e6, 1),
+        "staged_gbps": round(out_bytes / staged_s / 1e9, 2),
+        "fused_gbps": round(out_bytes / fused_s / 1e9, 2),
+        "fused_speedup_x": round(staged_s / fused_s, 2),
+        "roofline_headroom_x": round(fused_s / roofline_s, 1),
+    }
+
+
+SCENARIO_NAME = {(s, d): n for n, s, d in SCENARIOS}
+
+
+def run(quick: bool = False) -> List[Dict]:
     rows = []
     for name, src_tp, dst_tp in SCENARIOS:
         th = tensorhub_reshard(src_tp, dst_tp)
@@ -103,6 +322,10 @@ def run() -> List[Dict]:
                 "src_load_gb": [round(b / 1e9, 1) for b in th["bytes_per_source_shard"]],
             }
         )
+    t_rows = 8192 if quick else 16384
+    for _, src_tp, dst_tp in SCENARIOS:
+        rows.append(codec_parity(src_tp, dst_tp, rows=t_rows))
+    rows.append(fused_vs_staged(mb=16 if quick else 48))
     return rows
 
 
@@ -135,25 +358,61 @@ def reshard_source_failure() -> Dict[str, object]:
 
 def validate(rows: List[Dict]) -> List[str]:
     checks = []
-    down = rows[0]  # TP-4 -> TP-2: each dest slice spans several src shards
+    scale = [r for r in rows if "src_load_gb" in r]
+    codec = [r for r in rows if "plane_ratio_gap_pct" in r]
+    fused = [r for r in rows if "fused_speedup_x" in r]
+    down = scale[0]  # TP-4 -> TP-2: each dest slice spans several src shards
     striped = all(n >= 2 for n in down["sources_per_dest_shard"])
     checks.append(
         f"{down['scenario']}: every dest shard stripes across >=2 source "
         f"shards {down['sources_per_dest_shard']} -> "
         f"{'OK' if striped else 'MISMATCH'}"
     )
-    for r in rows:
+    for r in scale:
         loads = r["src_load_gb"]
         balanced = max(loads) <= 1.5 * max(min(loads), 0.1)
         checks.append(
             f"{r['scenario']}: every source shard engaged, load balanced "
             f"{loads} GB -> {'OK' if balanced and min(loads) > 0 else 'MISMATCH'}"
         )
-    for r in rows:
+    for r in scale:
         checks.append(
             f"{r['scenario']} vs gather-then-slice: x{r['speedup']} "
             f"(naive {r['naive_max_s']}s vs striped {r['tensorhub_max_s']}s) "
             f"-> {'OK' if r['speedup'] >= 2.0 else 'MISMATCH'}"
+        )
+    for r in codec:
+        checks.append(
+            f"{r['system']}: raw reshard bit-exact with publisher -> "
+            f"{'OK' if r['raw_bit_exact'] else 'MISMATCH'}"
+        )
+        checks.append(
+            f"{r['system']}: int8 wire reduction x{r['threaded_reduction_x']} "
+            f"(threaded, real bytes) -> "
+            f"{'OK' if r['threaded_reduction_x'] >= 3.5 else 'MISMATCH'}"
+        )
+        checks.append(
+            f"{r['system']}: resharded int8 decode byte-identical to "
+            f"same-layout int8 pull -> "
+            f"{'OK' if r['int8_matches_same_layout'] else 'MISMATCH'}"
+        )
+        checks.append(
+            f"{r['system']}: sim-vs-threaded WAN byte-ratio gap "
+            f"{r['plane_ratio_gap_pct']}% (sim x{r['sim_reduction_x']}) -> "
+            f"{'OK' if r['plane_ratio_gap_pct'] < 2.0 else 'MISMATCH'}"
+        )
+        checks.append(
+            f"{r['system']}: decode {r['sim_decode_stall_pct']}% of rollout "
+            f"stall decomposition -> "
+            f"{'OK' if r['sim_decode_stall_pct'] < 5.0 else 'MISMATCH'}"
+        )
+    for r in fused:
+        ok = r["fused_speedup_x"] >= 1.0 and r["roofline_headroom_x"] >= 1.0
+        checks.append(
+            f"fused dequant+repack x{r['fused_speedup_x']} vs staged "
+            f"({r['fused_gbps']} vs {r['staged_gbps']} GB/s, "
+            f"{r['roofline_headroom_x']}x above the HBM roofline floor) -> "
+            f"{'OK' if ok else 'MISMATCH'}"
         )
     rec = reshard_source_failure()
     checks.append(
@@ -164,13 +423,7 @@ def validate(rows: List[Dict]) -> List[str]:
     return checks
 
 
-def main() -> None:
-    rows = run()
-    for r in rows:
-        print(r)
-    for c in validate(rows):
-        print("  " + c)
-
-
 if __name__ == "__main__":
-    main()
+    from benchmarks import harness
+
+    harness.bench_main("reshard", run, validate)

@@ -30,6 +30,7 @@ from benchmarks import (
     micro_failure,
     obs_overhead,
     perf_transfer,
+    reshard,
     roofline,
     standalone,
     swarm,
@@ -47,6 +48,7 @@ MODULES = [
     ("fig9_standalone", standalone),
     ("fig11_elastic", elastic),
     ("fig12_cross_dc", cross_dc),
+    ("reshard_codec", reshard),
     ("perf_transfer_iterations", perf_transfer),
     ("roofline_table", roofline),
 ]

@@ -32,6 +32,7 @@ from repro.core.errors import (
 from repro.core.meta import DEFAULT_CHUNK_BYTES, DEFAULT_WINDOW, WorkerInfo
 from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
 from repro.obs import telemetry as obs
+from repro.resharding import rowgrid
 from repro.transfer import checksum as checksum_lib
 from repro.transfer import codec as codec_lib
 from repro.transfer.engine import (
@@ -872,6 +873,7 @@ class ShardHandle:
         # advanced before every server progress report and lifted when the
         # pull completes (see WorkerStore.serving_prefix).
         dest_store.serving_prefix = 0
+        reshard_rejects: Dict[int, int] = {}  # persists across re-plans
         while True:
             # the server-side counter is authoritative (max-based): a span
             # that advanced it before the source died resumes from there,
@@ -906,7 +908,8 @@ class ShardHandle:
                 if reshard:
                     used_reshard = True
                     done = self._pull_resharded_span(
-                        assignment, dest_name, dest_store, done
+                        assignment, dest_name, dest_store, done,
+                        rejects=reshard_rejects,
                     )
                 else:
                     done = self._pull_units_span(
@@ -1209,9 +1212,12 @@ class ShardHandle:
                 per = -(-nbytes // n_parts)
                 if any_coded:
                     dtype = codec_lib.unit_wire_dtype(by_name, units[ui])
-                    align = max(c.row_bytes(dtype) for c in codecs)
-                    if align > 1:
-                        per = -(-per // align) * align
+                    per = rowgrid.chunk_align(
+                        per,
+                        rowgrid.row_granularity(
+                            [c.name for c in codecs], dtype
+                        ),
+                    )
                 off = 0
                 j = 0
                 while off < nbytes:
@@ -1714,25 +1720,29 @@ class ShardHandle:
         dest_name: str,
         dest_store: WorkerStore,
         done: int,
+        rejects: Optional[Dict[int, int]] = None,
     ) -> int:
-        """Cross-layout pull: plan striped interval reads against the
-        source layout, stage each destination unit, repack, publish unit
-        progress. Starts at destination unit ``done`` (resume).
+        """Cross-layout pull: plan row-grid-aligned interval reads
+        against the source layout, fetch them window-parallel, assemble
+        each destination unit, publish unit progress. Starts at
+        destination unit ``done`` (resume).
 
-        Interval reads are raw-only in this revision: intervals slice
-        tensors at arbitrary byte offsets that cannot sit on a
-        quantization row grid, so a non-raw negotiation is rejected
-        explicitly up front rather than allowed to corrupt bytes (the
-        server never emits one for a resharded plan; this guards forged
-        or stale assignments)."""
+        The negotiated wire codec flows through the plan:
+        ``reshard_wire_codec`` resolves the assignment's codec to one an
+        interval read can carry (delta falls back to its int8 base — no
+        held prior version exists at interval granularity), the planner
+        widens every read to that codec's quantization row grid, and a
+        lossy codec takes the fused path — intervals arrive as undecoded
+        wire frames (``decode=False``) and ``ReshardExecutor.
+        fused_repack`` dequantizes them straight into the unit payload,
+        overlapped against the next unit's in-flight reads. A raw
+        negotiation keeps the staged decode+repack path and stays
+        bit-exact with the pre-codec planner (zero widening).
+        """
         from repro.resharding import ReshardExecutor, layout_from_manifests, plan_shard
 
-        bad = codec_lib.slice_codecs(assignment) - {"raw"}
-        if bad:
-            raise TensorHubError(
-                f"resharded pull of {dest_name}: assignment negotiated "
-                f"non-raw codec(s) {sorted(bad)}; interval reads are raw-only"
-            )
+        codec = codec_lib.reshard_wire_codec(assignment.codec)
+        fused = codec != "raw"
         version = assignment.version
         # our own layout family: checksums are disabled because they would
         # be computed over the *pre-pull* buffer contents; same-layout
@@ -1757,6 +1767,7 @@ class ShardHandle:
             dst_layout,
             self.shard_idx,
             num_dest_units=local_manifest.num_units,
+            codec=codec,
         )
         executor = ReshardExecutor(
             plan, local_manifest, use_kernel=self.device_repack
@@ -1765,36 +1776,125 @@ class ShardHandle:
         rec = self.client.recorder
         track = self.worker.worker_id
         lc = _link_class(source, assignment.transport)
-        for unit, placed in executor.unit_batches(start_unit=done):
-            staging = executor.make_staging(unit.index)
-            for p in placed:
-                iv = p.interval
-                self._await_source_progress(
-                    source, version, iv.source_shard, iv.source_unit
+        policy = self.client.retry_policy
+        if rejects is None:
+            rejects = {}
+        count_lock = threading.Lock()
+
+        def fetch_one(p):
+            iv = p.interval
+            self._await_source_progress(
+                source, version, iv.source_shard, iv.source_unit
+            )
+            src_unit = src_manifests[iv.source_shard].units[iv.source_unit]
+            t0 = rec.clock() if rec.enabled else 0.0
+            try:
+                payload = self._retry_transient(
+                    lambda: self.client.transport.read_unit_range(
+                        source, iv.source_shard, src_unit, iv.read_offset,
+                        iv.read_nbytes, codec=codec, link_class=lc,
+                        decode=not fused,
+                    ),
+                    source,
+                    unit=iv.tensor,
                 )
-                t0 = rec.clock() if rec.enabled else 0.0
-                try:
-                    payload = self._retry_transient(
-                        lambda iv=iv: self.client.transport.read_interval(
-                            source, iv.source_shard, iv.tensor, iv.src_offset,
-                            iv.nbytes, link_class=lc,
-                        ),
-                        source,
-                        unit=iv.tensor,
-                    )
-                except TransportError as e:
-                    raise _SourceLost(
-                        source,
-                        evidence="transient"
-                        if getattr(e, "transient", False)
-                        else "fatal",
-                    )
-                finally:
-                    if rec.enabled:
-                        rec.counter_add(obs.CTR_WIRE, rec.clock() - t0)
-                staging[p.staging_offset : p.staging_offset + iv.nbytes] = payload
+            finally:
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_WIRE, rec.clock() - t0)
+            with count_lock:
                 self.intervals_pulled += 1
-            dest_store.write_unit(unit, executor.repack(unit.index, staging))
+            return payload
+
+        def start_fetch(placed):
+            """Kick off window-parallel interval reads for one
+            destination unit; returns a ``join()`` that blocks and
+            yields payloads in plan order (or re-raises the first
+            worker failure)."""
+            results: List[Optional[np.ndarray]] = [None] * len(placed)
+            errors: List[BaseException] = []
+            cursor = [0]
+
+            def work():
+                while True:
+                    with count_lock:
+                        if errors or cursor[0] >= len(placed):
+                            return
+                        i = cursor[0]
+                        cursor[0] += 1
+                    try:
+                        results[i] = fetch_one(placed[i])
+                    except BaseException as e:  # carried to join()
+                        with count_lock:
+                            errors.append(e)
+                        return
+
+            n = max(1, min(self.window, len(placed)))
+            threads = [
+                threading.Thread(
+                    target=work, daemon=True,
+                    name=f"{track}-reshard-fetch-{k}",
+                )
+                for k in range(n)
+            ]
+            for t in threads:
+                t.start()
+
+            def join():
+                for t in threads:
+                    t.join()
+                if errors:
+                    raise errors[0]
+                return results
+
+            return join
+
+        batches = list(executor.unit_batches(start_unit=done))
+        join = None
+        for j, (unit, placed) in enumerate(batches):
+            if join is None:
+                join = start_fetch(placed)
+            try:
+                payloads = join()
+            except TransportError as e:
+                raise _SourceLost(
+                    source,
+                    evidence="transient"
+                    if getattr(e, "transient", False)
+                    else "fatal",
+                )
+            except (ChecksumError, codec_lib.CodecError):
+                # corrupt interval from this source: same healing as the
+                # unit pipe — report the evidence, bounded per dest unit
+                rejects[unit.index] = rejects.get(unit.index, 0) + 1
+                if rejects[unit.index] > policy.retry_limit:
+                    raise
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_CORRUPT_REJECTS, 1)
+                    rec.event(
+                        "corrupt_reject", track=track, source=source,
+                        unit=unit.name,
+                    )
+                raise _SourceLost(source, evidence="corrupt")
+            join = None
+            if j + 1 < len(batches):
+                # overlap: the next unit's reads fly while this unit
+                # decodes + repacks (the windowed-flow analogue for the
+                # interval plane)
+                join = start_fetch(batches[j + 1][1])
+            t0 = rec.clock() if rec.enabled else 0.0
+            if fused:
+                payload = executor.fused_repack(unit.index, payloads)
+            else:
+                staging = executor.make_staging(unit.index)
+                for p, pay in zip(placed, payloads):
+                    iv = p.interval
+                    staging[
+                        p.staging_offset : p.staging_offset + iv.nbytes
+                    ] = pay[iv.lead : iv.lead + iv.nbytes]
+                payload = executor.repack(unit.index, staging)
+            if rec.enabled:
+                rec.counter_add(obs.CTR_DECODE, rec.clock() - t0)
+            dest_store.write_unit(unit, payload)
             done += 1
             dest_store.serving_prefix = done  # before the server learns
             with self._cv:

@@ -393,9 +393,10 @@ class ReferenceServer:
             "quarantines": 0,
             "probation_lifts": 0,
             # delta negotiation: logged assignments that carried at least
-            # one delta slice / degraded a would-be-codec slice to raw at
-            # plan time (aliased source layout — the resharded interval
-            # path is raw-only)
+            # one delta slice / degraded a would-be-lossy cross-layout
+            # slice to raw at plan time because the source payload is
+            # wholly non-quantizable (quantizing would frame everything
+            # passthrough for zero wire gain)
             "delta_assignments": 0,
             "codec_degrades": 0,
         }
@@ -1617,6 +1618,24 @@ class ReferenceServer:
     def _cross_dc(self, st: ModelState, src: ReplicaVersionState, dest: ReplicaInfo) -> bool:
         return st.replicas[src.replica].datacenter != dest.datacenter
 
+    def _source_payload_quantizable(
+        self, st: ModelState, version: int, source_name: str, source_shards: int
+    ) -> bool:
+        """Whether negotiating a lossy reshard codec against this source
+        can shrink any bytes: at least one transfer unit of its manifest
+        carries a quantizable dtype. Falls back from the per-replica
+        manifest to the shard-family manifest; an unseen manifest is
+        treated as quantizable (optimistic — the worst case is
+        passthrough framing, never corruption)."""
+        from repro.transfer.codec import manifest_quantizable
+
+        m = st.replica_manifests.get(version, {}).get((source_name, 0))
+        if m is None:
+            m = st.manifests.get(version, {}).get((source_shards, 0))
+        if m is None:
+            return True
+        return manifest_quantizable(m)
+
     def _make_assignment(
         self,
         st: ModelState,
@@ -1637,23 +1656,41 @@ class ReferenceServer:
         tally = {"degrade": False, "delta": False}
 
         def codec_for(is_cross: bool, source_shards: int, source_name: str) -> str:
+            from repro.transfer.codec import get_codec, reshard_wire_codec
+
             # per-link negotiation: WAN-crossing slices carry the WAN
-            # codec; intra-DC stays raw. Mismatched shard counts run the
-            # resharded interval-read path, which is raw-only in this
-            # revision — negotiating anything else would corrupt bytes,
-            # so the planes also reject non-raw resharded assignments.
-            if not is_cross or source_shards != dest.num_shards:
+            # codec; intra-DC stays raw.
+            if not is_cross:
                 return "raw"
-            # aliased layout: same shard count but a different unit
-            # slicing also runs the resharded interval-read path —
-            # degrade to raw at PLAN time, not mid-flight (the guard in
-            # the transports would otherwise raise a CodecError after
-            # the flow had already started)
-            sm = st.replica_manifests.get(version, {}).get((source_name, 0))
-            fam = st.manifests.get(version, {}).get((dest.num_shards, 0))
-            if sm is not None and fam is not None and not sm.same_layout(fam):
-                tally["degrade"] = True
-                return "raw"
+            resharded = source_shards != dest.num_shards
+            aliased = False
+            if not resharded:
+                # aliased layout: same shard count but a different unit
+                # slicing also runs the resharded interval-read path
+                sm = st.replica_manifests.get(version, {}).get((source_name, 0))
+                fam = st.manifests.get(version, {}).get((dest.num_shards, 0))
+                aliased = (
+                    sm is not None and fam is not None and not sm.same_layout(fam)
+                )
+            if resharded or aliased:
+                # cross-layout pulls run the row-grid interval-read path:
+                # the WAN codec rides the widened unit-range reads, with
+                # delta collapsed to its base codec (residuals need the
+                # destination's held bytes in the destination's layout,
+                # which a cross-layout source does not have)
+                codec = reshard_wire_codec(self._wan_codec)
+                if not get_codec(codec).lossless and not (
+                    self._source_payload_quantizable(
+                        st, version, source_name, source_shards
+                    )
+                ):
+                    # genuinely unalignable plan: every unit of the source
+                    # payload would frame as passthrough (no quantizable
+                    # dtype anywhere) — degrade to raw at PLAN time and
+                    # tick the counter, not mid-flight
+                    tally["degrade"] = True
+                    return "raw"
+                return codec
             codec = self._wan_codec
             # delta negotiation: both endpoints retired the same prior
             # version, so the source can ship int8 residuals against the

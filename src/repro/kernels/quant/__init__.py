@@ -1,4 +1,13 @@
+from repro.kernels.quant.fused import fused_repack, fused_repack_np
 from repro.kernels.quant.ops import compressed_bytes, dequantize, quantize
 from repro.kernels.quant.ref import dequantize_ref, quantize_ref
 
-__all__ = ["compressed_bytes", "dequantize", "quantize", "dequantize_ref", "quantize_ref"]
+__all__ = [
+    "compressed_bytes",
+    "dequantize",
+    "quantize",
+    "dequantize_ref",
+    "quantize_ref",
+    "fused_repack",
+    "fused_repack_np",
+]

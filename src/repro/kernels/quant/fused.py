@@ -1,0 +1,242 @@
+"""Fused dequant + gather: int8 wire frames -> repacked unit payload.
+
+The staged reshard decode path materializes every interval twice: decode
+the int8 frame into a staging buffer, then repack (gather) staging bytes
+into the destination unit's layout. This module fuses the two — a single
+Pallas kernel reads the concatenated quantized values and per-row scales
+of *all* frames of one destination unit and writes dequantized elements
+directly at their repacked positions:
+
+    out[i] = (q[qidx[i]] * scales[sidx[i]]).astype(out_dtype)
+
+``qidx``/``sidx`` are precomputed int32 element maps (host-built from
+the plan's placements, like ``repack.build_gather_map`` but in element
+space); row-grid ``lead``/``tail`` widening is simply never mapped, so
+the trimmed bytes are dropped for free instead of decoded-then-discarded.
+
+The kernel path requires every quantized frame of the unit to share one
+TPU-friendly element dtype (f32/bf16/f16) and element-aligned
+placements; anything else — mixed dtypes, f64, passthrough-only units —
+takes :func:`fused_repack_np`, the NumPy fusion of the same two passes
+(decode rows straight into the output span, no staging buffer). Both
+paths are bit-identical to staged decode-then-repack: the dequant math
+is exactly ``Int8Codec.decode``'s (f32 multiply, round-to-nearest-even
+downcast), and parity is pinned by tests in interpreter mode.
+
+Frames arrive parsed (:func:`repro.transfer.codec.parse_int8_frame`), so
+header/scale/shape validation happened exactly once, at the transport
+boundary.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.meta import dtype_from_str
+
+#: dtypes the device kernel handles (min-tile-friendly; f64 stays on host)
+_KERNEL_DTYPES = ("float32", "bfloat16", "float16")
+
+#: placement of one parsed frame in the destination unit payload:
+#: (frame, lead, nbytes, unit_offset) — write frame bytes
+#: [lead, lead + nbytes) at out[unit_offset : unit_offset + nbytes]
+Placement = Tuple[object, int, int, int]
+
+
+def _dequant_span(frame, lead: int, nbytes: int) -> np.ndarray:
+    """Dequantize exactly the rows of ``frame`` that cover byte span
+    [lead, lead + nbytes) and return those bytes — the NumPy half of the
+    fusion (no whole-frame staging decode)."""
+    npdtype = dtype_from_str(frame.dtype)
+    isz = npdtype.itemsize
+    rb = frame.row_len * isz
+    r0 = lead // rb
+    r1 = -(-(lead + nbytes) // rb)
+    n = frame.nbytes // isz  # true element count of the frame
+    e0 = r0 * frame.row_len
+    e1 = min(r1 * frame.row_len, n)
+    cnt = e1 - e0
+    if cnt == (r1 - r0) * frame.row_len:
+        qv = frame.q[e0:e1]  # full rows: no ragged-tail pad needed
+    else:
+        qv = np.zeros((r1 - r0) * frame.row_len, np.int8)
+        qv[:cnt] = frame.q[e0:e1]
+    x = qv.reshape(r1 - r0, frame.row_len).astype(np.float32)
+    x *= frame.scales[r0:r1, None]  # in-place: same f32 multiply, one pass
+    x = x.reshape(-1)[:cnt]
+    if npdtype != np.float32:
+        x = x.astype(npdtype)
+    dec = np.ascontiguousarray(x).view(np.uint8)
+    off = lead - r0 * rb
+    return dec[off : off + nbytes]
+
+
+def fused_repack_np(
+    placements: Sequence[Placement], out_nbytes: int
+) -> np.ndarray:
+    """NumPy fused reference: each frame's covered rows dequantize
+    straight into their repacked output span — one pass, no staging
+    buffer, no decode-then-discard of the row-grid widening."""
+    out = np.zeros(out_nbytes, dtype=np.uint8)
+    for frame, lead, nbytes, uo in placements:
+        if nbytes <= 0:
+            continue
+        if frame.is_passthrough:
+            out[uo : uo + nbytes] = frame.passthrough[lead : lead + nbytes]
+        else:
+            out[uo : uo + nbytes] = _dequant_span(frame, lead, nbytes)
+    return out
+
+
+def kernel_dtype(placements: Sequence[Placement], out_nbytes: int) -> Optional[str]:
+    """The single element dtype the device kernel would run at, or
+    ``None`` when this unit must take the NumPy path (mixed/unsupported
+    dtypes, element-misaligned placements, nothing quantized)."""
+    dtype: Optional[str] = None
+    for frame, lead, nbytes, uo in placements:
+        if frame.is_passthrough:
+            continue
+        if frame.dtype not in _KERNEL_DTYPES:
+            return None
+        if dtype is None:
+            dtype = frame.dtype
+        elif frame.dtype != dtype:
+            return None
+        isz = dtype_from_str(dtype).itemsize
+        if lead % isz or nbytes % isz or uo % isz:
+            return None
+    if dtype is not None and out_nbytes % dtype_from_str(dtype).itemsize:
+        return None
+    return dtype
+
+
+def build_elem_maps(
+    placements: Sequence[Placement], out_nbytes: int, dtype: str
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side map building for the device kernel: concatenate every
+    quantized frame's values/scales and map each output *element* to its
+    (q, scale) position. Returns ``(qcat, scat, qidx, sidx)``; uncovered
+    elements (gaps, passthrough spans overlaid later) point at the
+    appended sentinel pair (q=0, scale=1.0) and decode to 0.0."""
+    isz = dtype_from_str(dtype).itemsize
+    n_elems = out_nbytes // isz
+    q_parts: List[np.ndarray] = []
+    s_parts: List[np.ndarray] = []
+    qidx = np.empty(n_elems, np.int32)
+    sidx = np.empty(n_elems, np.int32)
+    covered = np.zeros(n_elems, bool)
+    qoff = soff = 0
+    for frame, lead, nbytes, uo in placements:
+        if frame.is_passthrough or nbytes <= 0:
+            continue
+        oe0 = uo // isz
+        cnt = nbytes // isz
+        fe0 = lead // isz
+        span = fe0 + np.arange(cnt, dtype=np.int32)
+        qidx[oe0 : oe0 + cnt] = qoff + span
+        sidx[oe0 : oe0 + cnt] = soff + span // frame.row_len
+        covered[oe0 : oe0 + cnt] = True
+        q_parts.append(frame.q)
+        s_parts.append(frame.scales)
+        qoff += frame.q.size
+        soff += frame.scales.size
+    q_parts.append(np.zeros(1, np.int8))  # the sentinel pair
+    s_parts.append(np.ones(1, np.float32))
+    qidx[~covered] = qoff
+    sidx[~covered] = soff
+    return np.concatenate(q_parts), np.concatenate(s_parts), qidx, sidx
+
+
+def _pad_to(arr: np.ndarray, multiple: int) -> np.ndarray:
+    pad = (-arr.shape[0]) % multiple
+    if pad:
+        arr = np.concatenate([arr, np.zeros(pad, arr.dtype)])
+    return arr
+
+
+def dequant_gather(
+    q, scales, qidx, sidx, out_dtype, *, interpret: bool = False
+):
+    """The fused Pallas kernel: ``out[i] = (q[qidx[i]] * scales[sidx[i]])
+    .astype(out_dtype)`` with q/scales fully in VMEM (one destination
+    unit's frames, bounded like the repack staging buffer) and output
+    element blocks streamed, mirroring ``repack.gather_bytes``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.repack.kernel import _LANES, BLOCK_ROWS
+
+    def _kernel(qidx_ref, sidx_ref, q_ref, s_ref, out_ref):
+        qf = q_ref[...].reshape(-1)
+        sf = s_ref[...].reshape(-1)
+        vals = jnp.take(qf, qidx_ref[...], axis=0).astype(jnp.float32)
+        scale = jnp.take(sf, sidx_ref[...], axis=0)
+        out_ref[...] = (vals * scale).astype(out_ref.dtype)
+
+    n = qidx.shape[0]
+    block = BLOCK_ROWS * _LANES
+    pad = (-n) % block
+    qidx = jnp.asarray(qidx)
+    sidx = jnp.asarray(sidx)
+    if pad:
+        qidx = jnp.pad(qidx, (0, pad))  # index 0 is always valid
+        sidx = jnp.pad(sidx, (0, pad))
+    rows = qidx.shape[0] // _LANES
+    # int8 min tile is (32, 128), f32 (8, 128): pad the flat VMEM arrays
+    q2 = jnp.asarray(_pad_to(np.asarray(q), 32 * _LANES)).reshape(-1, _LANES)
+    s2 = jnp.asarray(_pad_to(np.asarray(scales), 8 * _LANES)).reshape(-1, _LANES)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((q2.shape[0], _LANES), lambda i: (0, 0)),
+            pl.BlockSpec((s2.shape[0], _LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), dtype_from_str(out_dtype)),
+        interpret=interpret,
+    )(
+        qidx.reshape(rows, _LANES),
+        sidx.reshape(rows, _LANES),
+        q2,
+        s2,
+    )
+    return out.reshape(-1)[:n]
+
+
+def fused_repack(
+    placements: Sequence[Placement],
+    out_nbytes: int,
+    *,
+    interpret: bool = False,
+) -> np.ndarray:
+    """Device fused repack of one destination unit; falls back to
+    :func:`fused_repack_np` when the unit's frames aren't kernel-shaped
+    (mixed dtypes, f64, misalignment, passthrough-only)."""
+    dtype = kernel_dtype(placements, out_nbytes)
+    if dtype is None:
+        return fused_repack_np(placements, out_nbytes)
+    qcat, scat, qidx, sidx = build_elem_maps(placements, out_nbytes, dtype)
+    dec = dequant_gather(qcat, scat, qidx, sidx, dtype, interpret=interpret)
+    # copy: device arrays view as read-only, and passthrough overlays write
+    out = np.asarray(dec).copy().view(np.uint8).reshape(-1)
+    # passthrough frames (non-finite payloads, odd tails) overlay their
+    # exact bytes after the kernel — byte-granular, like the NumPy path
+    for frame, lead, nbytes, uo in placements:
+        if frame.is_passthrough and nbytes > 0:
+            out[uo : uo + nbytes] = frame.passthrough[lead : lead + nbytes]
+    return out
+
+
+__all__ = [
+    "build_elem_maps",
+    "dequant_gather",
+    "fused_repack",
+    "fused_repack_np",
+    "kernel_dtype",
+]

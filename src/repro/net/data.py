@@ -2,22 +2,27 @@
 
 ``WorkerDataServer`` exposes one worker's registered stores over HTTP —
 the reproduction's stand-in for the paper's one-sided RDMA reads. A
-request names what to read (whole unit, aligned chunk, or striped
-interval) plus the negotiated codec; the response body is the **wire
-frame** (codec-encoded at the source, exactly the bytes the NIC would
-carry) and the ``X-TH-Checksum`` header carries the source's read-time
-checksum over the *decoded* payload — the same end-to-end transit
-contract as :class:`~repro.transfer.engine.LocalTransport`, with the
-verification halves now genuinely on opposite ends of a socket.
+request names what to read (whole unit, or a row-grid-aligned chunk —
+resharded interval reads arrive as widened unit chunks since the
+row-grid planner) plus the negotiated codec; the response body is the
+**wire frame** (codec-encoded at the source, exactly the bytes the NIC
+would carry) and the ``X-TH-Checksum`` header carries the source's
+read-time checksum over the *decoded* payload (over the wire frame
+itself for ``raw_wire`` requests, where the caller decodes) — the same
+end-to-end transit contract as
+:class:`~repro.transfer.engine.LocalTransport`, with the verification
+halves now genuinely on opposite ends of a socket.
 
 ``RemoteTransport`` extends ``LocalTransport``: a source that is
 registered in this process is read through the inherited in-memory path,
 anything else resolves to a peer address (via the controller's announce
-directory) and is pulled over HTTP. Delta frames keep their fallback
-semantics — the *destination* decodes against its own held base, and a
-stale base triggers one re-request with ``no_base`` set, mirroring the
-in-process transparent re-ship (both frames are accounted as wire
-bytes).
+directory) and is pulled over HTTP/1.1 keep-alive connections pooled per
+``(host, port)`` — a windowed pull re-uses a handful of warm sockets
+instead of paying connect + slow-start per read. Delta frames keep their
+fallback semantics — the *destination* decodes against its own held
+base, and a stale base triggers one re-request with ``no_base`` set,
+mirroring the in-process transparent re-ship (both frames are accounted
+as wire bytes).
 """
 
 from __future__ import annotations
@@ -40,6 +45,7 @@ from repro.core.errors import (
 from repro.core.meta import TransferUnit, from_wire, to_wire
 from repro.net import protocol
 from repro.net.httpd import split_address
+from repro.obs import telemetry as obs
 from repro.transfer import checksum as checksum_lib
 from repro.transfer import codec as codec_lib
 from repro.transfer.engine import LocalTransport, WorkerRegistry, WorkerStore
@@ -62,9 +68,10 @@ def _serve_read(registry: WorkerRegistry, req: Dict[str, Any]) -> tuple:
     """Execute one read request against the local registry.
 
     Returns ``(wire_bytes, checksum)`` where the checksum is folded over
-    the decoded payload (0 when verification is off — the disabled
-    sentinel the checksum module reserves). Raises typed errors; the
-    handler encodes them for the wire."""
+    the decoded payload — or over the wire frame itself for ``raw_wire``
+    requests, which the caller decodes (0 when verification is off — the
+    disabled sentinel the checksum module reserves). Raises typed errors;
+    the handler encodes them for the wire."""
     if req.get("v") != DATA_PROTOCOL_VERSION:
         raise protocol.ProtocolError(
             f"unsupported data protocol version {req.get('v')!r}"
@@ -75,15 +82,6 @@ def _serve_read(registry: WorkerRegistry, req: Dict[str, Any]) -> tuple:
     codec = req.get("codec", "raw")
     verify = bool(req.get("verify", True))
     src = registry.get(replica, shard_idx)
-
-    if kind == "interval":
-        if codec != "raw":
-            raise codec_lib.CodecError(
-                f"resharded interval reads are raw-only; refusing negotiated "
-                f"codec {codec!r} for {req.get('tensor')}"
-            )
-        view = src.read_range(req["tensor"], int(req["offset"]), int(req["nbytes"]))
-        return view.tobytes(), (checksum_lib.checksum(view) if verify else 0)
 
     unit: TransferUnit = from_wire(req["unit"])
     full = src.read_unit(unit)
@@ -114,6 +112,17 @@ def _serve_read(registry: WorkerRegistry, req: Dict[str, Any]) -> tuple:
                 f"to the {codec} codec's {rb}B row granularity — the "
                 "reassembled unit would diverge from an unchunked transfer"
             )
+    if req.get("raw_wire", False):
+        # the caller decodes (fused dequant+gather at the destination):
+        # ship the frame and checksum the frame itself
+        if getattr(cdc, "needs_base", False):
+            raise codec_lib.CodecError(
+                f"wire-frame reads cannot carry the base-referencing codec "
+                f"{codec!r} (no destination base at frame granularity) — "
+                "resolve the reshard codec first"
+            )
+        wire = cdc.encode(view, dtype)
+        return wire.tobytes(), (checksum_lib.checksum(wire) if verify else 0)
     if getattr(cdc, "needs_base", False) and not req.get("no_base", False):
         base_full = src.base_unit(unit)
         base = (
@@ -237,6 +246,7 @@ class RemoteTransport(LocalTransport):
         *,
         timeout: float = 30.0,
         throttle_s: float = 0.0,
+        pool_size: int = 4,
         **kw: Any,
     ) -> None:
         super().__init__(registry, **kw)
@@ -246,15 +256,61 @@ class RemoteTransport(LocalTransport):
         #: can land a controller SIGKILL mid-pull deterministically
         self.throttle_s = throttle_s
         self.remote_pulls = 0
+        #: idle keep-alive connections retained per (host, port)
+        self.pool_size = pool_size
+        self._pool: Dict[tuple, list] = {}
+        self._pool_lock = threading.Lock()
+        self.conn_opens = 0
+        self.conn_reuses = 0
 
     # -- plumbing --------------------------------------------------------------
 
     def _is_local(self, replica: str, shard_idx: int) -> bool:
         return self.registry.lookup(replica, shard_idx) is not None
 
+    def _open_conn(self, host: str, port: int) -> http.client.HTTPConnection:
+        conn = http.client.HTTPConnection(host, port, timeout=self.timeout)
+        conn.connect()
+        conn.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        with self._acct_lock:
+            self.conn_opens += 1
+        return conn
+
+    def _checkout(self, host: str, port: int) -> tuple:
+        """A connection to the peer: pooled keep-alive if one is idle
+        (returns ``(conn, True)``), else a fresh connect."""
+        with self._pool_lock:
+            idle = self._pool.get((host, port))
+            if idle:
+                return idle.pop(), True
+        return self._open_conn(host, port), False
+
+    def _checkin(self, host: str, port: int, conn: http.client.HTTPConnection) -> None:
+        with self._pool_lock:
+            idle = self._pool.setdefault((host, port), [])
+            if len(idle) < self.pool_size:
+                idle.append(conn)
+                return
+        conn.close()
+
+    def close_pool(self) -> None:
+        """Drop every idle pooled connection (tests; graceful teardown)."""
+        with self._pool_lock:
+            pools, self._pool = list(self._pool.values()), {}
+        for idle in pools:
+            for conn in idle:
+                conn.close()
+
     def _fetch(self, replica: str, shard_idx: int, req: Dict[str, Any]) -> tuple:
         """POST one read request to the peer serving ``replica/shard``;
-        returns ``(payload_bytes, source_checksum)``."""
+        returns ``(payload_bytes, source_checksum)``.
+
+        Connections are pooled per (host, port): HTTP/1.1 keep-alive lets
+        a windowed pull re-use a handful of warm sockets instead of
+        paying connect + slow-start per read. A pooled socket may have
+        gone stale (peer restarted, idle timeout); a send/recv failure on
+        a *re-used* connection retries once on a fresh connect before
+        surfacing a transient fault."""
         addr = self.resolve(replica, shard_idx)
         if addr is None:
             raise TransportError(
@@ -266,16 +322,44 @@ class RemoteTransport(LocalTransport):
             {"v": DATA_PROTOCOL_VERSION, "replica": replica,
              "shard_idx": shard_idx, "verify": self.verify_checksums, **req}
         ).encode("utf-8")
-        conn = http.client.HTTPConnection(host, port, timeout=self.timeout)
-        try:
-            conn.connect()
-            conn.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            conn.request(
-                "POST", "/data", body=body,
-                headers={"Content-Type": "application/json"},
-            )
-            resp = conn.getresponse()
-            payload = resp.read()
+        for attempt in (0, 1):
+            try:
+                if attempt == 0:
+                    conn, reused = self._checkout(host, port)
+                else:
+                    conn, reused = self._open_conn(host, port), False
+            except (ConnectionError, socket.timeout, http.client.HTTPException, OSError) as e:
+                raise TransportError(
+                    f"data pull from {replica}/shard{shard_idx} ({addr}) "
+                    f"failed: {e}",
+                    transient=True,
+                ) from None
+            try:
+                conn.request(
+                    "POST", "/data", body=body,
+                    headers={"Content-Type": "application/json"},
+                )
+                resp = conn.getresponse()
+                payload = resp.read()
+            except (ConnectionError, socket.timeout, http.client.HTTPException, OSError) as e:
+                conn.close()
+                if reused:
+                    continue  # stale keep-alive socket: one fresh retry
+                raise TransportError(
+                    f"data pull from {replica}/shard{shard_idx} ({addr}) "
+                    f"failed: {e}",
+                    transient=True,
+                ) from None
+            if reused:
+                with self._acct_lock:
+                    self.conn_reuses += 1
+                rec = self.recorder
+                if rec.enabled:
+                    rec.counter_add(obs.CTR_CONN_REUSE, 1)
+            if resp.will_close:
+                conn.close()
+            else:
+                self._checkin(host, port, conn)
             if resp.status != 200:
                 try:
                     err = json.loads(payload.decode("utf-8"))
@@ -284,13 +368,7 @@ class RemoteTransport(LocalTransport):
                 protocol.raise_from_error(err)
             csum = int(resp.getheader("X-TH-Checksum", "0"))
             return payload, csum
-        except (ConnectionError, socket.timeout, http.client.HTTPException, OSError) as e:
-            raise TransportError(
-                f"data pull from {replica}/shard{shard_idx} ({addr}) failed: {e}",
-                transient=True,
-            ) from None
-        finally:
-            conn.close()
+        raise AssertionError("unreachable")  # pragma: no cover
 
     @staticmethod
     def _verify(payload: np.ndarray, expected: int, what: str) -> None:
@@ -373,11 +451,12 @@ class RemoteTransport(LocalTransport):
         codec: str = "raw",
         link_class: str = "rdma",
         dest_base: Optional[np.ndarray] = None,
+        decode: bool = True,
     ) -> np.ndarray:
         if self._is_local(src_replica, shard_idx):
             return super().read_unit_range(
                 src_replica, shard_idx, unit, offset, nbytes,
-                codec, link_class, dest_base,
+                codec, link_class, dest_base, decode,
             )
         self._fault_read(src_replica, shard_idx)
         if self.throttle_s:
@@ -386,6 +465,25 @@ class RemoteTransport(LocalTransport):
             "kind": "chunk", "unit": to_wire(unit), "codec": codec,
             "offset": int(offset), "nbytes": int(nbytes),
         }
+        if not decode and codec != "raw":
+            if getattr(codec_lib.get_codec(codec), "needs_base", False):
+                raise codec_lib.CodecError(
+                    f"wire-frame reads cannot carry the base-referencing "
+                    f"codec {codec!r} (no destination base at frame "
+                    "granularity) — resolve the reshard codec first"
+                )
+            body, src_csum = self._fetch(
+                src_replica, shard_idx, {**req, "raw_wire": True}
+            )
+            payload = np.frombuffer(body, dtype=np.uint8).copy()
+            if self.verify_checksums:
+                self._verify(
+                    payload, src_csum,
+                    f"chunk {unit.name}[{offset}:{offset + nbytes}] "
+                    f"({codec} wire) from {src_replica}/shard{shard_idx}",
+                )
+            self._account(link_class, payload.nbytes, nbytes)
+            return payload
         body, src_csum = self._fetch(src_replica, shard_idx, req)
         if codec == "raw":
             payload = np.frombuffer(body, dtype=np.uint8).copy()
@@ -422,42 +520,6 @@ class RemoteTransport(LocalTransport):
             )
         self._account(link_class, wire_nbytes, nbytes)
         return payload
-
-    def read_interval(
-        self,
-        src_replica: str,
-        src_shard: int,
-        tensor: str,
-        offset: int,
-        nbytes: int,
-        codec: str = "raw",
-        link_class: str = "rdma",
-    ) -> np.ndarray:
-        if self._is_local(src_replica, src_shard):
-            return super().read_interval(
-                src_replica, src_shard, tensor, offset, nbytes, codec, link_class
-            )
-        if codec != "raw":
-            raise codec_lib.CodecError(
-                f"resharded interval reads are raw-only; refusing negotiated "
-                f"codec {codec!r} for {tensor}[{offset}:{offset + nbytes}]"
-            )
-        self._fault_read(src_replica, src_shard)
-        req = {
-            "kind": "interval", "tensor": tensor, "codec": "raw",
-            "offset": int(offset), "nbytes": int(nbytes),
-        }
-        body, src_csum = self._fetch(src_replica, src_shard, req)
-        payload = np.frombuffer(body, dtype=np.uint8).copy()
-        if self.verify_checksums:
-            self._verify(
-                payload, src_csum,
-                f"interval {tensor}[{offset}:{offset + nbytes}] from "
-                f"{src_replica}/shard{src_shard}",
-            )
-        self._account(link_class, nbytes, nbytes)
-        return payload
-
 
 __all__ = [
     "DATA_PROTOCOL_VERSION",

@@ -51,6 +51,11 @@ CTR_DEADLINE_REPORTS = "heal/deadline_reports"
 # base codec (event count; pairs with a "delta_stale_fallback" event).
 CTR_DELTA_STALE = "heal/delta_stale_fallbacks"
 
+# Networked data plane: reads served over a re-used keep-alive
+# connection from the per-peer pool (event count; the complement of
+# fresh TCP connects, which pay handshake + slow-start).
+CTR_CONN_REUSE = "net/conn_reuses"
+
 
 class _NullSpan:
     """Shared no-op span; returned by a disabled recorder."""

@@ -129,6 +129,51 @@ class ReshardExecutor:
             )
         return repack_np(staging, instrs, unit.nbytes)
 
+    def fused_repack(
+        self, dest_unit: int, frames: List[np.ndarray]
+    ) -> np.ndarray:
+        """Assemble the destination unit's payload straight from int8
+        *wire frames* — one frame per placed interval, in plan order —
+        via the fused dequant+gather path (``kernels/quant/fused``): no
+        staging-buffer decode, and the row-grid ``lead``/``tail``
+        widening is dropped instead of decoded-then-discarded.
+
+        ``use_kernel`` dispatches exactly like :meth:`repack`: the Pallas
+        kernel on device (or interpreter), the NumPy fusion otherwise.
+        Both are bit-identical to decode-then-:meth:`repack`.
+        """
+        from repro.kernels.quant import fused as fused_lib
+        from repro.transfer.codec import parse_int8_frame
+
+        unit = self.manifest.units[dest_unit]
+        placed = self._units[dest_unit]
+        if len(frames) != len(placed):
+            raise TensorHubError(
+                f"dest unit {dest_unit}: {len(frames)} wire frames for "
+                f"{len(placed)} placed intervals"
+            )
+        placements = []
+        for p, wire in zip(placed, frames):
+            iv = p.interval
+            frame = parse_int8_frame(wire)
+            if frame.nbytes != iv.read_nbytes:
+                raise TensorHubError(
+                    f"dest unit {dest_unit}: frame decodes {frame.nbytes}B "
+                    f"but interval {iv.tensor}[{iv.src_offset}:"
+                    f"{iv.src_stop}] read {iv.read_nbytes}B"
+                )
+            placements.append((frame, iv.lead, iv.nbytes, p.unit_offset))
+        if self.use_kernel:
+            import jax
+
+            interpret = self.interpret
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            return fused_lib.fused_repack(
+                placements, unit.nbytes, interpret=interpret
+            )
+        return fused_lib.fused_repack_np(placements, unit.nbytes)
+
 
 def repack_np(
     staging: np.ndarray, instructions: List[Tuple[int, int, int]], out_nbytes: int

@@ -33,6 +33,14 @@ class ShardSlice:
     shape: Tuple[int, ...]
     #: index of the TransferUnit carrying this tensor in the shard manifest
     unit: int
+    #: byte offset of this tensor's payload inside the carrying unit
+    #: (0 for a plain unit; the member offset for a compacted bucket)
+    unit_offset: int = 0
+    #: total payload bytes of the carrying unit (0 when unknown)
+    unit_nbytes: int = 0
+    #: element dtype of the carrying unit's payload as seen by wire
+    #: codecs (``None`` for mixed-dtype buckets — codecs pass through)
+    unit_dtype: Optional[str] = None
 
     @property
     def stop(self) -> Tuple[int, ...]:
@@ -80,10 +88,22 @@ class ReplicaLayout:
         return [t.name for t in self.tensors]
 
 
-def _unit_index(manifest: ShardManifest, tensor: str) -> int:
+def _unit_placement(
+    manifest: ShardManifest, tensor: str
+) -> Tuple[int, int, int]:
+    """Where a tensor's bytes live in the shard's unit schema:
+    ``(unit_index, byte_offset_in_unit, unit_nbytes)``."""
     for u in manifest.units:
-        if u.name == tensor or tensor in u.members:
-            return u.index
+        if u.name == tensor:
+            return u.index, 0, u.nbytes
+        if tensor in u.members:
+            for name, off, _nb in u.layout:
+                if name == tensor:
+                    return u.index, off, u.nbytes
+            raise ShardLayoutError(
+                f"tensor {tensor!r}: compacted bucket {u.name!r} has no "
+                "layout entry for it (cannot place unit-space reads)"
+            )
     raise ShardLayoutError(f"tensor {tensor!r} not carried by any transfer unit")
 
 
@@ -96,6 +116,8 @@ def layout_from_manifests(
     shard passes just that one); ``num_shards`` defaults to the number of
     manifests provided.
     """
+    from repro.transfer.codec import unit_wire_dtype
+
     if not manifests:
         raise ShardLayoutError("no manifests to build a layout from")
     n = len(manifests) if num_shards is None else num_shards
@@ -103,6 +125,10 @@ def layout_from_manifests(
     meta_by_name: Dict[str, TensorMeta] = {}
     order: List[str] = []
     for shard, manifest in sorted(manifests.items()):
+        tensor_map = {t.name: t for t in manifest.tensors}
+        unit_dtypes = {
+            u.index: unit_wire_dtype(tensor_map, u) for u in manifest.units
+        }
         for meta in manifest.tensors:
             gshape = meta.global_shape or meta.shape
             prev = meta_by_name.get(meta.name)
@@ -117,13 +143,17 @@ def layout_from_manifests(
                         f"shape/dtype ({prev_g}/{prev.dtype} vs "
                         f"{gshape}/{meta.dtype})"
                     )
+            unit, unit_off, unit_nbytes = _unit_placement(manifest, meta.name)
             by_name[meta.name] = by_name.get(meta.name, [])
             by_name[meta.name].append(
                 ShardSlice(
                     shard=shard,
                     start=meta.start,
                     shape=meta.shape,
-                    unit=_unit_index(manifest, meta.name),
+                    unit=unit,
+                    unit_offset=unit_off,
+                    unit_nbytes=unit_nbytes,
+                    unit_dtype=unit_dtypes[unit],
                 )
             )
     tensors = tuple(

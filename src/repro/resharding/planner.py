@@ -36,6 +36,7 @@ import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.errors import ShardLayoutError
+from repro.resharding import rowgrid
 from repro.resharding.layout import ReplicaLayout, ShardSlice, TensorLayout
 
 #: segments covered by >1 source shard are split into stripes of at least
@@ -46,7 +47,17 @@ STRIPE_MIN_BYTES = 1 << 20
 @dataclasses.dataclass(frozen=True)
 class ReadInterval:
     """One striped read: a byte range of a source shard's local tensor
-    buffer landing at a byte range of the destination's local buffer."""
+    buffer landing at a byte range of the destination's local buffer.
+
+    Reads execute in *unit space*: ``src_unit_offset`` places the range
+    inside the source TransferUnit's payload (tensor offset plus the
+    member offset for compacted buckets), and ``lead``/``tail`` widen it
+    to the quantization row grid of the plan's codec so the source can
+    encode the range (``raw`` plans have zero widening). The transport
+    reads ``[read_offset, read_offset + read_nbytes)`` of the unit; the
+    destination trims ``lead``/``tail`` from the decoded bytes — or the
+    fused dequant+gather kernel simply never gathers them.
+    """
 
     tensor: str
     source_shard: int
@@ -55,6 +66,14 @@ class ReadInterval:
     nbytes: int
     source_unit: int  # TransferUnit index carrying the bytes at the source
     dest_unit: int  # TransferUnit index the bytes land in at the dest
+    #: byte offset of this range inside the source unit's payload
+    #: (-1: unknown — legacy plans; treat as ``src_offset``)
+    src_unit_offset: int = -1
+    #: total payload bytes of the source unit (0 when unknown)
+    src_unit_nbytes: int = 0
+    #: row-grid widening in bytes before/after the range (0 for raw)
+    lead: int = 0
+    tail: int = 0
 
     @property
     def src_stop(self) -> int:
@@ -63,6 +82,17 @@ class ReadInterval:
     @property
     def dst_stop(self) -> int:
         return self.dst_offset + self.nbytes
+
+    @property
+    def read_offset(self) -> int:
+        """Unit-payload byte offset the transport actually reads from."""
+        base = self.src_unit_offset if self.src_unit_offset >= 0 else self.src_offset
+        return base - self.lead
+
+    @property
+    def read_nbytes(self) -> int:
+        """Bytes the transport actually reads (row-grid widened)."""
+        return self.lead + self.nbytes + self.tail
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,21 +211,28 @@ def _plan_tensor(
     load: Dict[int, int],
     *,
     stripe_min: int,
+    codec: str = "raw",
 ) -> List[ReadInterval]:
     """Assign every byte of the destination slice to a source shard."""
+    from repro.transfer.codec import get_codec
+
     local_bytes = tensor.itemsize
     for d in dest_slice.shape or (1,):
         local_bytes *= d
     if local_bytes == 0:
         return []
-    # (dst_off, src_off, nbytes) runs per candidate source shard
+    # (dst_off, src_off, nbytes) runs per candidate source shard, plus
+    # each candidate's unit placement and row-grid granularity
     runs: Dict[int, List[Tuple[int, int, int]]] = {}
-    unit_of: Dict[int, int] = {}
+    place: Dict[int, ShardSlice] = {}
+    rb_of: Dict[int, int] = {}
+    wire = get_codec(codec)
     for src_slice in tensor.slices:
         r = _intersection_runs(dest_slice, src_slice, tensor.itemsize)
         if r:
             runs[src_slice.shard] = r
-            unit_of[src_slice.shard] = src_slice.unit
+            place[src_slice.shard] = src_slice
+            rb_of[src_slice.shard] = wire.row_bytes(src_slice.unit_dtype)
     # sweep over the dest slice's local byte space
     cuts = {0, local_bytes}
     for rs in runs.values():
@@ -206,6 +243,11 @@ def _plan_tensor(
     intervals: List[ReadInterval] = []
 
     def emit(shard: int, dst_a: int, dst_b: int, src_off: int) -> None:
+        p = place[shard]
+        unit_off = p.unit_offset + src_off
+        lead, tail = rowgrid.snap(
+            unit_off, dst_b - dst_a, rb_of[shard], p.unit_nbytes
+        )
         intervals.append(
             ReadInterval(
                 tensor=tensor.name,
@@ -213,8 +255,12 @@ def _plan_tensor(
                 src_offset=src_off,
                 dst_offset=dst_a,
                 nbytes=dst_b - dst_a,
-                source_unit=unit_of[shard],
+                source_unit=p.unit,
                 dest_unit=dest_slice.unit,
+                src_unit_offset=unit_off,
+                src_unit_nbytes=p.unit_nbytes,
+                lead=lead,
+                tail=tail,
             )
         )
         load[shard] = load.get(shard, 0) + (dst_b - dst_a)
@@ -239,16 +285,23 @@ def _plan_tensor(
             )
             emit(shard, a, b, src_off)
             continue
-        # replicated / overlapping region: stripe across the candidates
+        # replicated / overlapping region: stripe across the candidates.
+        # Stripe size is rounded up to the coarsest candidate row grid so
+        # interior boundaries stay row-aligned (zero widening) whenever
+        # the region itself starts on a row boundary.
         n_stripes = min(len(cands), max(2, (b - a) // stripe_min))
-        per = (b - a) // n_stripes
+        per = rowgrid.chunk_align(
+            (b - a) // n_stripes, max(rb_of[s] for s, _ in cands)
+        )
         pos = a
         order = sorted(cands, key=lambda c: (load.get(c[0], 0), c[0]))
-        for k in range(n_stripes):
-            stop = b if k == n_stripes - 1 else pos + per
+        k = 0
+        while pos < b:
+            stop = b if k >= n_stripes - 1 else min(pos + per, b)
             shard, src_base = order[k % len(order)]
             emit(shard, pos, stop, src_base + (pos - a))
             pos = stop
+            k += 1
     return intervals
 
 
@@ -259,8 +312,15 @@ def plan_shard(
     *,
     stripe_min: int = STRIPE_MIN_BYTES,
     num_dest_units: Optional[int] = None,
+    codec: str = "raw",
 ) -> ShardPlan:
-    """Plan all interval reads for one destination shard."""
+    """Plan all interval reads for one destination shard.
+
+    ``codec`` is the negotiated wire codec the reads will carry: interval
+    boundaries are snapped to its quantization row grid (``lead``/``tail``
+    widening) so every read is encodable at the source. ``raw`` plans
+    have zero widening and are bit-identical to pre-codec plans.
+    """
     _check_convertible(source, dest)
     load: Dict[int, int] = {}
     intervals: List[ReadInterval] = []
@@ -273,7 +333,9 @@ def plan_shard(
         src_tensor = source.tensor(tensor.name)
         assert src_tensor is not None  # _check_convertible guarantees it
         intervals.extend(
-            _plan_tensor(src_tensor, d_slice, load, stripe_min=stripe_min)
+            _plan_tensor(
+                src_tensor, d_slice, load, stripe_min=stripe_min, codec=codec
+            )
         )
     intervals.sort(key=lambda iv: (iv.dest_unit, iv.tensor, iv.dst_offset))
     plan = ShardPlan(
@@ -291,6 +353,7 @@ def plan_reshard(
     dest: ReplicaLayout,
     *,
     stripe_min: int = STRIPE_MIN_BYTES,
+    codec: str = "raw",
 ) -> ReshardPlan:
     """Plan every destination shard's reads from the source layout."""
     shards = sorted({s.shard for t in dest.tensors for s in t.slices})
@@ -298,7 +361,8 @@ def plan_reshard(
         source=source,
         dest=dest,
         shards=tuple(
-            plan_shard(source, dest, d, stripe_min=stripe_min) for d in shards
+            plan_shard(source, dest, d, stripe_min=stripe_min, codec=codec)
+            for d in shards
         ),
     )
 
@@ -332,10 +396,20 @@ def validate_shard_plan(
     plan: ShardPlan, dest: ReplicaLayout, dest_shard: int
 ) -> None:
     """Exact-tiling invariant: the plan's destination byte ranges tile
-    every destination tensor with no gaps and no overlaps."""
+    every destination tensor with no gaps and no overlaps, and every
+    row-grid-widened read stays inside its source unit's payload."""
     by_tensor: Dict[str, List[ReadInterval]] = {}
     for iv in plan.intervals:
         by_tensor.setdefault(iv.tensor, []).append(iv)
+        if iv.read_offset < 0 or (
+            0 < iv.src_unit_nbytes < iv.read_offset + iv.read_nbytes
+        ):
+            raise ShardLayoutError(
+                f"plan invalid: widened read [{iv.read_offset}, "
+                f"{iv.read_offset + iv.read_nbytes}) of tensor "
+                f"{iv.tensor!r} escapes source unit {iv.source_unit} "
+                f"({iv.src_unit_nbytes}B) on source shard {iv.source_shard}"
+            )
     for tensor in dest.tensors:
         d_slice = tensor.slice_for(dest_shard)
         if d_slice is None:

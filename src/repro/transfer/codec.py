@@ -22,7 +22,7 @@ End-to-end checksums are verified over the **decoded** bytes:
 * lossy codecs (``int8``) — the publish-time checksum cannot match the
   de-quantized bytes, so the source checksums ``decode(encode(payload))``
   at read time and the destination re-verifies its decoded copy — the
-  same transit protection contract as ``LocalTransport.read_interval``.
+  same transit protection contract as ``LocalTransport.read_unit_range``.
   Additionally the wire header carries dtype / row length / payload size
   and the decoder validates all of them plus scale finiteness (the
   wire-level scale/shape integrity check), so a torn or misframed wire
@@ -41,6 +41,7 @@ misaligned non-raw range reads.
 
 from __future__ import annotations
 
+import dataclasses
 import struct
 from typing import Dict, Iterable, Mapping, Optional, Tuple
 
@@ -81,6 +82,37 @@ _FLAG_PASSTHROUGH = 1
 _D_HDR = struct.Struct("<IBBBBIQQ")
 _D_MAGIC = 0x38445754  # "TWD8"
 _D_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Frame:
+    """A validated view of one int8 wire frame (header already checked).
+
+    ``parse_int8_frame`` produces these so consumers that want the frame's
+    *components* — the fused dequant+gather path reads ``q``/``scales``
+    directly into the kernel instead of materialising a decoded staging
+    buffer — share the exact header/shape/scale validation of
+    :meth:`Int8Codec.decode`.
+    """
+
+    #: element dtype name of the decoded payload; ``None`` for passthrough
+    dtype: Optional[str]
+    #: decoded payload size in bytes
+    nbytes: int
+    #: quantization row length in elements (meaningless for passthrough)
+    row_len: int
+    #: raw payload bytes for a passthrough frame, else ``None``
+    passthrough: Optional[np.ndarray]
+    #: int8 quantized values, flat, true length (no row padding); ``None``
+    #: for passthrough
+    q: Optional[np.ndarray]
+    #: f32 per-row scales, one per (possibly partial) row; ``None`` for
+    #: passthrough
+    scales: Optional[np.ndarray]
+
+    @property
+    def is_passthrough(self) -> bool:
+        return self.passthrough is not None
 
 
 class CodecError(TensorHubError):
@@ -246,46 +278,18 @@ class Int8Codec(WireCodec):
         )
 
     def decode(self, wire: np.ndarray) -> np.ndarray:
-        buf = np.ascontiguousarray(wire).view(np.uint8).reshape(-1)
-        if buf.nbytes < _HDR.size:
-            raise CodecError(f"int8 wire: short buffer ({buf.nbytes}B < header)")
-        magic, version, flags, dcode, _, row_len, orig_nbytes = _HDR.unpack(
-            buf[: _HDR.size].tobytes()
-        )
-        if magic != _MAGIC or version != _VERSION:
-            raise CodecError(
-                f"int8 wire: bad framing (magic {magic:#x}, version {version})"
-            )
-        body = buf[_HDR.size :]
-        if flags & _FLAG_PASSTHROUGH:
-            if body.nbytes != orig_nbytes:
-                raise CodecError(
-                    f"int8 wire: passthrough length {body.nbytes}B != "
-                    f"declared {orig_nbytes}B"
-                )
-            return body
-        dtype = _DTYPE_FROM_CODE.get(dcode)
-        if dtype is None:
-            raise CodecError(f"int8 wire: unknown dtype code {dcode}")
-        npdtype = dtype_from_str(dtype)
-        if row_len <= 0 or orig_nbytes % npdtype.itemsize:
-            raise CodecError(
-                f"int8 wire: inconsistent shape (row_len {row_len}, "
-                f"{orig_nbytes}B of {dtype})"
-            )
-        n = orig_nbytes // npdtype.itemsize
-        rows = -(-n // row_len)
-        if body.nbytes != 4 * rows + n:
-            raise CodecError(
-                f"int8 wire: {body.nbytes}B body != {4 * rows}B scales + "
-                f"{n}B q for {n} x {dtype}"
-            )
-        scales = body[: 4 * rows].view(np.float32)
-        if not np.all(np.isfinite(scales)) or np.any(scales <= 0):
-            raise CodecError("int8 wire: non-finite or non-positive scales")
-        q = np.zeros(rows * row_len, np.int8)
-        q[:n] = body[4 * rows :].view(np.int8)
-        x = (q.reshape(rows, row_len).astype(np.float32) * scales[:, None]).reshape(-1)
+        frame = parse_int8_frame(wire)
+        if frame.is_passthrough:
+            return frame.passthrough
+        npdtype = dtype_from_str(frame.dtype)
+        n = frame.nbytes // npdtype.itemsize
+        rows = frame.scales.size
+        q = np.zeros(rows * frame.row_len, np.int8)
+        q[:n] = frame.q
+        x = (
+            q.reshape(rows, frame.row_len).astype(np.float32)
+            * frame.scales[:, None]
+        ).reshape(-1)
         return np.ascontiguousarray(x[:n].astype(npdtype)).view(np.uint8).reshape(-1)
 
     def wire_nbytes(self, nbytes: int, dtype: Optional[str]) -> int:
@@ -611,6 +615,104 @@ for _c in (RawCodec(), Int8Codec()):
 # ---------------------------------------------------------------------------
 # shared helpers for the data planes
 # ---------------------------------------------------------------------------
+
+
+def parse_int8_frame(wire: np.ndarray) -> Int8Frame:
+    """Validate an int8 wire frame and return its components without
+    dequantizing. :meth:`Int8Codec.decode` is ``parse + dequant``; the
+    fused dequant+gather path parses frames and feeds ``q``/``scales``
+    straight into the kernel."""
+    buf = np.ascontiguousarray(wire).view(np.uint8).reshape(-1)
+    if buf.nbytes < _HDR.size:
+        raise CodecError(f"int8 wire: short buffer ({buf.nbytes}B < header)")
+    magic, version, flags, dcode, _, row_len, orig_nbytes = _HDR.unpack(
+        buf[: _HDR.size].tobytes()
+    )
+    if magic != _MAGIC or version != _VERSION:
+        raise CodecError(
+            f"int8 wire: bad framing (magic {magic:#x}, version {version})"
+        )
+    body = buf[_HDR.size :]
+    if flags & _FLAG_PASSTHROUGH:
+        if body.nbytes != orig_nbytes:
+            raise CodecError(
+                f"int8 wire: passthrough length {body.nbytes}B != "
+                f"declared {orig_nbytes}B"
+            )
+        return Int8Frame(
+            dtype=None,
+            nbytes=orig_nbytes,
+            row_len=row_len,
+            passthrough=body,
+            q=None,
+            scales=None,
+        )
+    dtype = _DTYPE_FROM_CODE.get(dcode)
+    if dtype is None:
+        raise CodecError(f"int8 wire: unknown dtype code {dcode}")
+    npdtype = dtype_from_str(dtype)
+    if row_len <= 0 or orig_nbytes % npdtype.itemsize:
+        raise CodecError(
+            f"int8 wire: inconsistent shape (row_len {row_len}, "
+            f"{orig_nbytes}B of {dtype})"
+        )
+    n = orig_nbytes // npdtype.itemsize
+    rows = -(-n // row_len)
+    if body.nbytes != 4 * rows + n:
+        raise CodecError(
+            f"int8 wire: {body.nbytes}B body != {4 * rows}B scales + "
+            f"{n}B q for {n} x {dtype}"
+        )
+    scales = body[: 4 * rows].view(np.float32)
+    if not np.all(np.isfinite(scales)) or np.any(scales <= 0):
+        raise CodecError("int8 wire: non-finite or non-positive scales")
+    return Int8Frame(
+        dtype=dtype,
+        nbytes=orig_nbytes,
+        row_len=row_len,
+        passthrough=None,
+        q=body[4 * rows :].view(np.int8),
+        scales=scales,
+    )
+
+
+def reshard_wire_codec(name: str) -> str:
+    """THE cross-layout codec policy point: the wire codec a resharded
+    (or aliased-layout) cross-DC slice carries, given the link class's
+    negotiated codec ``name``.
+
+    ``delta:<base>`` collapses to its base codec — residuals are encoded
+    against the destination's held bytes *in the destination's layout*,
+    which a cross-layout source does not hold, so there is no valid base
+    for a reshard interval. Everything else (``raw``, ``int8``,
+    ``fixed:*`` for fluid modeling) passes through unchanged: row-grid
+    planned intervals carry it end to end.
+
+    Every reshard path — server negotiation, both data planes, and the
+    networked transport — derives its codec through this function; the
+    five scattered raw-only guards this replaces are gone.
+    """
+    if name.startswith("delta:"):
+        return name[len("delta:") :]
+    return name
+
+
+def quantizable(dtype: Optional[str]) -> bool:
+    """True when the int8 codec actually quantizes this element dtype
+    (anything else rides as a tagged passthrough, same bytes + header)."""
+    return dtype in _QUANTIZABLE
+
+
+def manifest_quantizable(manifest) -> bool:
+    """True when at least one transfer unit of the shard manifest carries
+    a quantizable payload — i.e. negotiating a lossy codec for this source
+    can actually shrink wire bytes. A manifest of opaque/integer payloads
+    would frame every unit as passthrough for zero gain; the server
+    degrades such plans to ``raw`` (and ticks ``codec_degrades``)."""
+    tensors = {t.name: t for t in manifest.tensors}
+    return any(
+        quantizable(unit_wire_dtype(tensors, u)) for u in manifest.units
+    )
 
 
 def unit_wire_dtype(

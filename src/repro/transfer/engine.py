@@ -470,7 +470,7 @@ class LocalTransport:
         bytes — the source checksums ``decode(encode(payload))`` at read
         time (a lossy codec's output cannot match the publish-time sum)
         and the reader re-verifies after the wire copy, the same transit
-        contract as :meth:`read_interval`. ``bytes_moved`` counts wire
+        contract as :meth:`read_unit_range`. ``bytes_moved`` counts wire
         bytes, i.e. what the NIC actually carried."""
         src = self.registry.get(src_replica, shard_idx)
         self._fault_read(src_replica, shard_idx)
@@ -580,14 +580,25 @@ class LocalTransport:
         codec: str = "raw",
         link_class: str = "rdma",
         dest_base: Optional[np.ndarray] = None,
+        decode: bool = True,
     ) -> np.ndarray:
-        """Pull one byte sub-range of a transfer unit (sub-unit chunking).
+        """Pull one byte sub-range of a transfer unit (sub-unit chunking,
+        and — since the row-grid reshard planner — every resharded
+        interval read, which arrives here as a widened unit range).
 
-        Like :meth:`read_interval` there is no manifest checksum at chunk
-        granularity: the source checksums the range at read time and the
-        reader re-verifies after the wire copy; for a raw codec the caller
-        additionally verifies the *assembled* unit against the manifest
-        checksum, so end-to-end protection is preserved under chunking.
+        There is no manifest checksum at chunk granularity: the source
+        checksums the range at read time and the reader re-verifies after
+        the wire copy; for a raw codec the caller additionally verifies
+        the *assembled* unit against the manifest checksum, so end-to-end
+        protection is preserved under chunking.
+
+        ``decode=False`` returns the *wire frame* instead of decoded
+        payload bytes (non-raw, non-delta codecs only): the transit
+        checksum then runs over the wire bytes and the caller decodes —
+        the fused dequant+gather kernel parses frames and writes repacked
+        rows directly, skipping the staging decode entirely. Byte
+        accounting is identical to the decoding path (wire bytes on the
+        wire, ``nbytes`` of payload represented).
 
         Non-raw codecs encode the chunk independently; the range is in
         *decoded* (payload) space and ``offset`` must sit on a codec row
@@ -650,6 +661,39 @@ class LocalTransport:
                 f"to the {codec} codec's {rb}B row granularity — the "
                 "reassembled unit would diverge from an unchunked transfer"
             )
+        if not decode:
+            if getattr(cdc, "needs_base", False):
+                raise codec_lib.CodecError(
+                    f"wire-frame reads cannot carry the base-referencing "
+                    f"codec {codec!r} (no destination base at frame "
+                    "granularity) — resolve the reshard codec first"
+                )
+            t0 = rec.clock() if rec.enabled else 0.0
+            wire = self._fault_truncate(src_replica, cdc.encode(view, dtype))
+            if rec.enabled:
+                rec.counter_add(obs.CTR_DECODE, rec.clock() - t0)
+            t0 = rec.clock() if rec.enabled else 0.0
+            expected = (
+                checksum_lib.checksum(wire) if self.verify_checksums else 0
+            )
+            t_verify = (rec.clock() - t0) if rec.enabled else 0.0
+            payload = wire.copy()  # the wire copy, decoded by the caller
+            self._fault_flip(src_replica, payload, self.verify_checksums)
+            if self.verify_checksums:
+                t0 = rec.clock() if rec.enabled else 0.0
+                got = checksum_lib.checksum(payload)
+                if rec.enabled:
+                    rec.counter_add(
+                        obs.CTR_VERIFY, t_verify + (rec.clock() - t0)
+                    )
+                if got != expected:
+                    raise ChecksumError(
+                        f"chunk {unit.name}[{offset}:{offset + nbytes}] "
+                        f"({codec} wire) from {src_replica}/shard{shard_idx}: "
+                        f"wire checksum {got:#x} != expected {expected:#x}"
+                    )
+            self._account(link_class, payload.nbytes, nbytes)
+            return payload
         t0 = rec.clock() if rec.enabled else 0.0
         if getattr(cdc, "needs_base", False):
             base_full = src.base_unit(unit)
@@ -699,52 +743,3 @@ class LocalTransport:
         self._account(link_class, wire_nbytes, nbytes)
         return payload
 
-    def read_interval(
-        self,
-        src_replica: str,
-        src_shard: int,
-        tensor: str,
-        offset: int,
-        nbytes: int,
-        codec: str = "raw",
-        link_class: str = "rdma",
-    ) -> np.ndarray:
-        """Pull one striped byte range of a reshard plan.
-
-        Unlike :meth:`pull_unit` there is no precomputed manifest checksum
-        at interval granularity; the source checksums the range at read
-        time and the reader re-verifies after the wire copy — the same
-        end-to-end transit protection, scoped to the interval (4.6).
-
-        Interval reads are raw-only in this revision: intervals slice
-        tensors at arbitrary byte offsets, which cannot be aligned to a
-        quantization row grid, so a non-raw negotiation is rejected
-        explicitly rather than allowed to corrupt bytes.
-        """
-        if codec != "raw":
-            raise codec_lib.CodecError(
-                f"resharded interval reads are raw-only; refusing negotiated "
-                f"codec {codec!r} for {tensor}[{offset}:{offset + nbytes}]"
-            )
-        src = self.registry.get(src_replica, src_shard)
-        self._fault_read(src_replica, src_shard)
-        view = src.read_range(tensor, offset, nbytes)
-        rec = self.recorder
-        t0 = rec.clock() if rec.enabled else 0.0
-        expected = checksum_lib.checksum(view) if self.verify_checksums else 0
-        t_verify = (rec.clock() - t0) if rec.enabled else 0.0
-        payload = view.copy()  # the wire copy
-        self._fault_flip(src_replica, payload, self.verify_checksums)
-        if self.verify_checksums:
-            t0 = rec.clock() if rec.enabled else 0.0
-            got = checksum_lib.checksum(payload)
-            if rec.enabled:
-                rec.counter_add(obs.CTR_VERIFY, t_verify + (rec.clock() - t0))
-            if got != expected:
-                raise ChecksumError(
-                    f"interval {tensor}[{offset}:{offset + nbytes}] from "
-                    f"{src_replica}/shard{src_shard}: checksum {got:#x} != "
-                    f"expected {expected:#x}"
-                )
-        self._account(link_class, nbytes, nbytes)
-        return payload

@@ -23,7 +23,13 @@ from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
 from repro.core import failover as failover_lib
 from repro.core.errors import StaleHandleError, TensorHubError
-from repro.core.meta import ShardManifest, TensorMeta, TransferUnit, WorkerInfo
+from repro.core.meta import (
+    ShardManifest,
+    TensorMeta,
+    TransferUnit,
+    WorkerInfo,
+    dtype_from_str,
+)
 from repro.core.oplog import OpLog
 from repro.core.server import Assignment, ReferenceServer, SourceSlice, offload_name
 from repro.obs import telemetry as obs
@@ -35,7 +41,7 @@ from repro.transfer.faults import (
     RetryPolicy,
     SimFaultInjector,
 )
-from repro.transfer.hardware import CLUSTER, ClusterHW
+from repro.transfer.hardware import CLUSTER, TPU, ClusterHW
 from repro.transfer.simnet import FlowKilled, Link, SimEnv, SimEvent, SimNetwork
 
 
@@ -92,48 +98,78 @@ class _SimSlots:
             self.free += 1
 
 
-def make_manifest(unit_bytes: Sequence[int]) -> ShardManifest:
-    """Size-only manifest (the simulator moves no real bytes)."""
-    tensors = tuple(
-        TensorMeta(name=f"t{i}", shape=(n,), dtype="uint8", nbytes=int(n))
-        for i, n in enumerate(unit_bytes)
-    )
+def _sim_dtype(nbytes: int, dtype: str) -> Tuple[str, int]:
+    """``(dtype, itemsize)`` for one size-only sim tensor: the requested
+    element dtype when the byte count holds whole elements, else a uint8
+    fallback (so odd sizes stay representable)."""
+    if dtype != "uint8":
+        isz = int(dtype_from_str(dtype).itemsize)
+        if nbytes % isz == 0:
+            return dtype, isz
+    return "uint8", 1
+
+
+def make_manifest(
+    unit_bytes: Sequence[int], dtype: str = "uint8"
+) -> ShardManifest:
+    """Size-only manifest (the simulator moves no real bytes).
+
+    ``dtype`` is the declared element type: the sim cluster passes its
+    ``codec_dtype`` so server-side codec negotiation sees the same
+    quantizable payload the fluid byte accounting assumes (a size-only
+    uint8 stand-in would read as unquantizable and degrade to raw)."""
+    tensors = []
+    for i, n in enumerate(unit_bytes):
+        n = int(n)
+        dt, isz = _sim_dtype(n, dtype)
+        tensors.append(
+            TensorMeta(name=f"t{i}", shape=(n // isz,), dtype=dt, nbytes=n)
+        )
     units = tuple(
         TransferUnit(index=i, name=f"t{i}", nbytes=int(n))
         for i, n in enumerate(unit_bytes)
     )
-    return ShardManifest(tensors=tensors, units=units, checksums=(0,) * len(units))
+    return ShardManifest(
+        tensors=tuple(tensors), units=units, checksums=(0,) * len(units)
+    )
 
 
 def make_layout_manifests(
-    global_unit_bytes: Sequence[int], num_shards: int
+    global_unit_bytes: Sequence[int], num_shards: int, dtype: str = "uint8"
 ) -> List[ShardManifest]:
     """Per-shard manifests with layout descriptors: each global transfer
-    unit is a 1-D byte tensor sliced contiguously across ``num_shards``
+    unit is a 1-D tensor sliced contiguously across ``num_shards``
     (the remainder rides on the last shard). Replicas built from the same
     ``global_unit_bytes`` with *different* shard counts are convertible —
-    the resharding planner stripes reads across their shards."""
+    the resharding planner stripes reads across their shards.
+
+    With a non-uint8 ``dtype`` the slicing happens in element space
+    (shard boundaries stay element-aligned) so negotiation and the
+    row-grid planner see a quantizable payload; a global size that does
+    not hold whole elements falls back to uint8 for that tensor."""
     out: List[ShardManifest] = []
     for shard in range(num_shards):
         tensors: List[TensorMeta] = []
         units: List[TransferUnit] = []
         for k, g in enumerate(global_unit_bytes):
             g = int(g)
-            per = g // num_shards
+            dt, isz = _sim_dtype(g, dtype)
+            ge = g // isz
+            per = ge // num_shards
             start = shard * per
-            stop = g if shard == num_shards - 1 else start + per
+            stop = ge if shard == num_shards - 1 else start + per
             n = stop - start
             tensors.append(
                 TensorMeta(
                     name=f"t{k}",
                     shape=(n,),
-                    dtype="uint8",
-                    nbytes=n,
-                    global_shape=(g,),
+                    dtype=dt,
+                    nbytes=n * isz,
+                    global_shape=(ge,),
                     offset=(start,),
                 )
             )
-            units.append(TransferUnit(index=k, name=f"t{k}", nbytes=n))
+            units.append(TransferUnit(index=k, name=f"t{k}", nbytes=n * isz))
         out.append(
             ShardManifest(
                 tensors=tuple(tensors),
@@ -177,13 +213,17 @@ class SimWorker:
             self.total_stall += now - self._stall_since
             self._stall_since = None
 
-    def stall_attribute(self, total: float, ctrl: float, wire: float) -> None:
+    def stall_attribute(
+        self, total: float, ctrl: float, wire: float, decode: float = 0.0
+    ) -> None:
         """Fold one stalled window's decomposition into ``stall_parts``."""
         parts = self.stall_parts
         parts["control"] = parts.get("control", 0.0) + ctrl
         parts["wire"] = parts.get("wire", 0.0) + wire
+        if decode:
+            parts["decode"] = parts.get("decode", 0.0) + decode
         parts["plan_wait"] = (
-            parts.get("plan_wait", 0.0) + max(0.0, total - ctrl - wire)
+            parts.get("plan_wait", 0.0) + max(0.0, total - ctrl - wire - decode)
         )
 
 
@@ -577,6 +617,9 @@ class SimShard:
         self._wire_active = 0
         self._wire_since = 0.0
         self._wire_spent = 0.0
+        #: exposed fused-decode time (the backlog tail not hidden under
+        #: in-flight interval flows; see _g_pull_resharded)
+        self._decode_spent = 0.0
 
     # plumbing ------------------------------------------------------------------
 
@@ -617,15 +660,21 @@ class SimShard:
             return self._wire_spent + (self.env.now - self._wire_since)
         return self._wire_spent
 
-    def _stall_mark(self) -> Tuple[float, float, float]:
-        return (self.env.now, self._ctrl_spent, self._wire_snapshot())
+    def _stall_mark(self) -> Tuple[float, float, float, float]:
+        return (
+            self.env.now,
+            self._ctrl_spent,
+            self._wire_snapshot(),
+            self._decode_spent,
+        )
 
-    def _stall_account(self, mark: Tuple[float, float, float]) -> None:
-        t0, c0, w0 = mark
+    def _stall_account(self, mark: Tuple[float, float, float, float]) -> None:
+        t0, c0, w0, d0 = mark
         self.worker.stall_attribute(
             self.env.now - t0,
             self._ctrl_spent - c0,
             self._wire_snapshot() - w0,
+            self._decode_spent - d0,
         )
 
     # Table-2 ops (generators) -----------------------------------------------------
@@ -1472,17 +1521,17 @@ class SimShard:
         so bandwidth aggregates across all source shards exactly as the
         byte accounting says it should.
 
-        Interval reads are raw-only (byte offsets cannot sit on a
-        quantization row grid): a non-raw negotiation is rejected
-        explicitly, mirroring the threaded plane."""
+        The negotiated wire codec rides the plan exactly as in the
+        threaded plane: ``reshard_wire_codec`` collapses delta to its
+        base, the planner widens reads to the codec's row grid
+        (``iv.read_nbytes`` is what flows), and a lossy codec models the
+        fused client-side decode as a backlog drained at roughly a third
+        of HBM bandwidth — hidden under the next unit's flows, with only
+        the tail exposed (ledgered as ``decode`` stall)."""
         from repro.resharding import layout_from_manifests, plan_shard
 
-        bad = codec_lib.slice_codecs(assignment) - {"raw"}
-        if bad:
-            raise TensorHubError(
-                f"resharded pull of {dest}: assignment negotiated non-raw "
-                f"codec(s) {sorted(bad)}; interval reads are raw-only"
-            )
+        codec = codec_lib.reshard_wire_codec(assignment.codec)
+        fused = codec != "raw"
         env = self.env
         version = assignment.version
         src_n = assignment.source_shards
@@ -1510,11 +1559,15 @@ class SimShard:
             dst_layout,
             self.idx,
             num_dest_units=local_manifest.num_units,
+            codec=codec,
         )
         by_unit = plan.intervals_by_unit()
         transport = assignment.transport
         done = self.server.shard_progress(self.rep.model, dest, version, self.idx)
+        decode_bw = TPU.hbm_bw / 3.0  # fused dequant+gather drain rate
+        backlog = 0.0  # decode seconds not yet hidden under flows
         for unit in local_manifest.units[done:]:
+            t_unit = env.now
             for iv in by_unit.get(unit.index, []):
                 yield from self._g_await_source_unit(
                     source, version, iv.source_shard, iv.source_unit
@@ -1522,17 +1575,29 @@ class SimShard:
                 try:
                     yield from self._g_timed_flow(
                         self._flow_for_bytes(
-                            source, iv.source_shard, iv.nbytes, transport, dest
+                            source, iv.source_shard, iv.read_nbytes, transport,
+                            dest, codec=codec,
                         ),
-                        "interval_flow", source, iv.nbytes, "raw", transport,
+                        "interval_flow", source, iv.read_nbytes, codec,
+                        transport,
                     )
                 except FlowKilled:
                     if self.dead:
                         raise PreemptedError(self.worker.worker_id)
                     raise _SimSourceLost(source)
+            if fused:
+                # one-unit lookahead: the previous unit's decode drained
+                # while this unit's intervals were in flight
+                backlog = max(0.0, backlog - (env.now - t_unit))
+                backlog += unit.nbytes / decode_bw
             done += 1
             self.server.update_progress(self.rep.model, dest, self.idx, version, done)
             env.key_notify(("progress", dest, self.idx))
+        if backlog > 0.0:
+            # the last unit's decode has no flows left to hide under
+            t0 = env.now
+            yield env.timeout(backlog)
+            self._decode_spent += env.now - t0
 
     def _g_reroute(
         self, dest: str, dead_source: str, evidence: str = "fatal"
@@ -1592,10 +1657,17 @@ class SimReplica:
         self.offload_seeding = offload_seeding
         self.unit_bytes = unit_bytes
         self.global_unit_bytes = global_unit_bytes
+        # manifests declare the cluster's codec dtype so the server's
+        # codec negotiation sees the quantizable payload the fluid byte
+        # accounting already assumes
         if global_unit_bytes is not None:
-            self.manifests = make_layout_manifests(global_unit_bytes, num_shards)
+            self.manifests = make_layout_manifests(
+                global_unit_bytes, num_shards, dtype=cluster.codec_dtype
+            )
         else:
-            self.manifests = [make_manifest(unit_bytes)] * num_shards
+            self.manifests = [
+                make_manifest(unit_bytes, dtype=cluster.codec_dtype)
+            ] * num_shards
         self.manifest = self.manifests[0]
         self.shard_bytes = self.manifests[0].total_bytes
         self.shards: List[SimShard] = []

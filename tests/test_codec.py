@@ -512,10 +512,29 @@ class TestTransportCodec:
             off += step
         assert np.array_equal(out, whole)
 
-    def test_read_interval_rejects_non_raw(self):
+    def test_wire_frame_read_matches_encode(self):
+        """decode=False returns the undecoded wire frame — exactly what
+        the codec would emit for that range (the fused reshard path
+        parses it client-side)."""
         tp, src, dst, x = self._pair()
+        unit = src.units[0]
+        c = get_codec("int8")
+        wire = tp.read_unit_range(
+            "src", 0, unit, 0, unit.nbytes, codec="int8", decode=False
+        )
+        assert np.array_equal(wire, c.encode(src.read_unit(unit), "float32"))
+        assert tp.bytes_moved == wire.nbytes
+
+    def test_wire_frame_read_rejects_base_referencing_codec(self):
+        """A delta frame is undecodable without the destination's held
+        base — wire-mode reads must refuse it up front."""
+        tp, src, dst, x = self._pair()
+        unit = src.units[0]
         with pytest.raises(CodecError):
-            tp.read_interval("src", 0, "t", 0, 64, codec="int8")
+            tp.read_unit_range(
+                "src", 0, unit, 0, unit.nbytes, codec="delta:int8",
+                decode=False,
+            )
 
     def test_compact_bucket_mixed_dtypes_passthrough(self):
         reg = WorkerRegistry()
@@ -592,13 +611,14 @@ class TestNegotiation:
         assert a.transport == "rdma" and a.codec == "raw"
         assert all(sl.codec == "raw" for sl in a.slices(4))
 
-    def test_resharded_cross_dc_negotiates_raw(self):
-        """Mismatched shard counts run the interval-read path, which is
-        raw-only — the server must not negotiate a lossy codec for it."""
+    def test_resharded_unquantizable_payload_degrades_to_raw(self):
+        """Resharded pulls are codec-capable, but a lossy codec needs a
+        quantizable payload: uint8 source manifests force the negotiation
+        down to raw (and count the degrade)."""
         from repro.transfer.simcluster import make_layout_manifests
 
         s = ReferenceServer()
-        manifests = make_layout_manifests([1 << 20] * 4, 2)
+        manifests = make_layout_manifests([1 << 20] * 4, 2, dtype="uint8")
         for i in range(2):
             s.open(
                 "m", "pub", 2, i, worker=WorkerInfo(f"pub/s{i}", "dc0/pub", "dc0")
@@ -610,6 +630,7 @@ class TestNegotiation:
         assert a.resharded and a.transport == "tcp"
         assert a.codec == "raw"
         assert all(sl.codec == "raw" for sl in a.sources)
+        assert s.stats["codec_degrades"] >= 1
 
     def test_reroute_preserves_wan_codec(self):
         s = ReferenceServer()
@@ -700,12 +721,12 @@ class TestNegotiation:
         d = s.begin_update("m", "r", 0, "latest", op_id=2)
         assert d.updated and d.assignment.codec == "fixed:0.5"
 
-    def test_aliased_layout_degrades_to_raw_at_plan_time(self):
-        """Regression: a same-shard-count source slicing its units along
-        different boundaries used to be negotiated non-raw and then raise
-        CodecError from inside the read. The guard now lives in
-        _make_assignment: the pull degrades to raw before the flow
-        starts, and the degrade is counted."""
+    def test_aliased_unquantizable_payload_degrades_to_raw(self):
+        """An aliased layout (same shard count, different unit
+        boundaries) runs the interval-read path, which is codec-capable —
+        but this source publishes uint8 units, so the lossy codec can't
+        align to a quantization row grid and the pull degrades to raw at
+        plan time, counting the degrade."""
         from repro.transfer.simcluster import make_manifest
 
         s = ReferenceServer()
@@ -1141,12 +1162,10 @@ class TestSimCodec:
             rdma = sum(b_ for n, b_ in cl.net.link_bytes.items() if ":up" in n)
             assert math.isclose(rdma, 4e9, rel_tol=1e-6)
 
-    def test_cross_dc_reshard_runs_raw(self):
-        """A cross-DC reader with a different shard count reshards; the
-        negotiated codec must be raw and the pull must complete."""
+    def _reshard_wan_bytes(self, **kw):
         from repro.transfer.simcluster import SimCluster
 
-        cl = SimCluster()
+        cl = SimCluster(**kw)
         g = [int(1e9)] * 4
         tr = cl.add_replica("m", "tr", 2, datacenter="dc0", global_unit_bytes=g)
         ro = cl.add_replica("m", "ro", 4, datacenter="dc1", global_unit_bytes=g)
@@ -1158,8 +1177,20 @@ class TestSimCodec:
         ev = ro.replicate("latest")
         cl.run()
         assert ev.triggered and ev.error is None
-        wan = sum(b for n, b in cl.net.link_bytes.items() if ":vpc_up" in n)
-        assert math.isclose(wan, 4e9, rel_tol=1e-6)  # raw interval bytes
+        return sum(b for n, b in cl.net.link_bytes.items() if ":vpc_up" in n)
+
+    def test_cross_dc_reshard_forced_raw_bit_exact(self):
+        """wan_codec="raw": resharded interval flows move exactly the
+        payload bytes (zero row-grid widening on a raw plan)."""
+        wan = self._reshard_wan_bytes(wan_codec="raw")
+        assert math.isclose(wan, 4e9, rel_tol=1e-6)
+
+    def test_cross_dc_reshard_negotiates_int8(self):
+        """The default WAN codec now rides the resharded interval path:
+        wire bytes shrink by the codec's ratio (>= 3.5x vs forced raw)."""
+        raw = self._reshard_wan_bytes(wan_codec="raw")
+        coded = self._reshard_wan_bytes()
+        assert raw / coded >= 3.5
 
     def test_legacy_tcp_compression_scales_resharded_flows(self):
         """Regression: the deprecated scalar scaled EVERY WAN TCP flow —
@@ -1186,37 +1217,16 @@ class TestSimCodec:
         wan = sum(b for n, b in cl.net.link_bytes.items() if ":vpc_up" in n)
         assert math.isclose(wan, 4e9 * 0.5, rel_tol=1e-6)
 
-    def test_forged_non_raw_reshard_rejected(self):
-        """The sim data plane refuses a non-raw codec on a resharded
-        assignment instead of mis-accounting bytes."""
-        import dataclasses
+    def test_delta_reshard_resolves_to_base(self):
+        """A resharded assignment carrying a delta codec collapses to the
+        delta's base on the interval path (no held prior version exists
+        at interval granularity): one policy point, both data planes."""
+        from repro.transfer.codec import reshard_wire_codec
 
-        from repro.core.meta import Assignment
-        from repro.transfer.simcluster import SimCluster
-
-        cl = SimCluster()
-        g = [int(1e9)] * 2
-        tr = cl.add_replica("m", "tr", 2, datacenter="dc0", global_unit_bytes=g)
-        ro = cl.add_replica("m", "ro", 4, datacenter="dc1", global_unit_bytes=g)
-        tr.open()
-        ro.open()
-        cl.run()
-        tr.publish(0)
-        cl.run()
-        forged = Assignment(
-            version=0,
-            source="tr",
-            source_kind="gpu",
-            transport="tcp",
-            source_shards=2,
-            dest_shards=4,
-            codec="int8",
-        )
-        shard = ro.shards[0]
-        gen = shard._g_pull_resharded(forged, "ro")
-        with pytest.raises(TensorHubError, match="raw-only"):
-            # drive the generator; the guard fires before the first yield
-            next(gen)
+        assert reshard_wire_codec("delta:int8") == "int8"
+        assert reshard_wire_codec("delta:raw") == "raw"
+        assert reshard_wire_codec("int8") == "int8"
+        assert reshard_wire_codec("raw") == "raw"
 
     def _update_wan_bytes(self, **kw):
         """Warm update flow: publish v0, replicate, retire, publish v1,

@@ -201,13 +201,13 @@ class TestEndToEndReshard:
         run_group(pubs, lambda h: h.publish(0))
 
         pulled = []
-        orig = hub.transport.read_interval
+        orig = hub.transport.read_unit_range
 
         def spy(src_replica, src_shard, *a, **kw):
             pulled.append(src_shard)
             return orig(src_replica, src_shard, *a, **kw)
 
-        hub.transport.read_interval = spy
+        hub.transport.read_unit_range = spy
         subs = open_tp_group(hub, "sub", dst_tp, glob, zeros=True)
         got = []
         run_group(subs, lambda h: got.append(h.replicate("latest")))
